@@ -1,0 +1,51 @@
+"""Shared benchmark harness: timing, CSV emission, dataset cache."""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import retrieval
+from repro.data.synth import make_image_like, make_text_like
+
+
+def timeit(fn, *args, n_warmup: int = 1, n_iter: int = 3) -> float:
+    """Median wall time in microseconds (after jit warmup)."""
+    for _ in range(n_warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(n_iter):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+@functools.lru_cache(maxsize=None)
+def text_corpus(n_docs=512, n_classes=8, vocab=2048, m=64, doc_len=80,
+                hmax=64, seed=11):
+    c, labels = make_text_like(n_docs=n_docs, n_classes=n_classes,
+                               vocab=vocab, m=m, doc_len=doc_len, hmax=hmax,
+                               seed=seed)
+    return c, np.asarray(labels)
+
+
+@functools.lru_cache(maxsize=None)
+def image_corpus(n_images=192, n_classes=6, side=12, background=False,
+                 seed=5):
+    c, labels = make_image_like(n_images=n_images, n_classes=n_classes,
+                                side=side, include_background=background,
+                                seed=seed)
+    return c, np.asarray(labels)
+
+
+def precision_all(corpus, labels, method: str, top_l: int, **kw) -> float:
+    S = retrieval.all_pairs_scores(corpus, method=method, **kw)
+    return retrieval.precision_at_l(S, jnp.asarray(labels), top_l)

@@ -1,0 +1,69 @@
+"""Paper Fig. 8(a): runtime vs nearest-neighbor accuracy per method, on the
+20News-like sparse text corpus.
+
+Emits one CSV row per method: name, us_per_query, derived (precision@1/4/16
+plus the speedup over the WMD reference). Expected qualitative reproduction:
+ACT-k ~= WMD accuracy at orders-of-magnitude lower cost; RWMD fastest but
+least accurate of the relaxations; BoW/WCD cheap and weaker for larger l.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, precision_all, text_corpus, timeit
+from repro.core import lc, retrieval
+from repro.core.wmd import wmd_search
+
+
+def run(n_wmd_queries: int = 12) -> None:
+    corpus, labels = text_corpus()
+    lj = jnp.asarray(labels)
+    q_ids, q_w = corpus.ids[0], corpus.w[0]
+
+    methods = [
+        ("bow", dict(method="bow")),
+        ("wcd", dict(method="wcd")),
+        ("rwmd", dict(method="act", iters=0)),
+        ("omr", dict(method="omr")),
+        ("act-1", dict(method="act", iters=1)),
+        ("act-3", dict(method="act", iters=3)),
+        ("act-7", dict(method="act", iters=7)),
+    ]
+    # per-query scoring time
+    per_q = {}
+    for name, kw in methods:
+        if kw["method"] == "act":
+            fn = lambda i=kw["iters"]: lc.lc_act_scores(corpus, q_ids, q_w,
+                                                        iters=i)
+        elif kw["method"] == "omr":
+            fn = lambda: lc.lc_omr_scores(corpus, q_ids, q_w)
+        else:
+            fn = lambda m=kw["method"]: retrieval.METHODS[m](corpus, q_ids, q_w)
+        per_q[name] = timeit(fn)
+
+    # WMD (exact EMD + RWMD pruning) reference on a query subset
+    t0 = time.perf_counter()
+    hits = {1: [], 4: [], 16: []}
+    for qi in range(n_wmd_queries):
+        for top_l in hits:
+            _, idx = wmd_search(corpus, qi, top_l)
+            hits[top_l].append(np.mean(labels[idx] == labels[qi]))
+    wmd_us = (time.perf_counter() - t0) * 1e6 / (n_wmd_queries * 3)
+    wmd_prec = {k: float(np.mean(v)) for k, v in hits.items()}
+    emit("fig8.wmd", wmd_us,
+         "prec@1=%.3f prec@4=%.3f prec@16=%.3f speedup=1x"
+         % (wmd_prec[1], wmd_prec[4], wmd_prec[16]))
+
+    for name, kw in methods:
+        precs = {L: precision_all(corpus, labels, top_l=L, **kw)
+                 for L in (1, 4, 16)}
+        emit(f"fig8.{name}", per_q[name],
+             "prec@1=%.3f prec@4=%.3f prec@16=%.3f speedup=%.0fx"
+             % (precs[1], precs[4], precs[16], wmd_us / per_q[name]))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Kernel-level microbenchmarks: Pallas (interpret on CPU) vs pure-jnp
+reference, plus the HBM-traffic model that motivates the fusion
+(DESIGN.md section 2: one pass over X instead of k)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.kernels import ops, ref
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    v, h, m, k = 2048, 256, 64, 8
+    coords = jnp.asarray(rng.normal(size=(v, m)), jnp.float32)
+    qc = jnp.asarray(rng.normal(size=(h, m)), jnp.float32)
+    qmask = jnp.ones((h,), jnp.float32)
+    t_ref = timeit(lambda: ref.dist_topk_ref(coords, qc, qmask, k))
+    emit("kernels.dist_topk_ref_jnp", t_ref,
+         f"v={v} h={h} m={m} k={k} materializes D: {v*h*4/1e6:.1f}MB")
+    emit("kernels.dist_topk_out_bytes", float(v * k * 8),
+         f"fused output {v*k*8/1e6:.2f}MB = {h/(2*k):.0f}x smaller than D")
+
+    n, hmax, it = 4096, 128, 7
+    x = jnp.asarray(rng.uniform(size=(n, hmax)), jnp.float32)
+    zg = jnp.asarray(np.sort(rng.uniform(size=(n, hmax, it + 1)), -1),
+                     jnp.float32)
+    wg = jnp.asarray(rng.uniform(size=(n, hmax, it)), jnp.float32)
+    t2 = timeit(lambda: ref.act_phase2_ref(x, zg, wg))
+    emit("kernels.act_phase2_ref_jnp", t2,
+         f"n={n} hmax={hmax} iters={it}")
+    paper_traffic = it * (2 * x.nbytes + zg.nbytes // (it + 1) + wg.nbytes // it)
+    fused_traffic = x.nbytes + zg.nbytes + wg.nbytes
+    emit("kernels.act_phase2_traffic_model", float(fused_traffic),
+         f"paper k-pass bytes={paper_traffic} fused bytes={fused_traffic} "
+         f"cut={paper_traffic/fused_traffic:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

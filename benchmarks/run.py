@@ -1,0 +1,50 @@
+"""Benchmark driver — one module per paper table/figure.
+
+  fig8_tradeoff      Fig. 8(a)  runtime vs accuracy, text (incl. WMD ref)
+  sinkhorn_compare   Fig. 8(b)  ACT vs Sinkhorn, images
+  table5_mnist       Table 5    sparse image precision@top-l
+  table6_dense       Table 6    dense histograms (RWMD collapse)
+  table3_complexity  Tables 2/3 empirical linear-scaling check
+  kernels_bench      DESIGN 2   kernel traffic/fusion model
+
+Each prints ``name,us_per_call,derived`` CSV rows.
+Run: PYTHONPATH=src python -m benchmarks.run [--only fig8]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark module names")
+    args = ap.parse_args()
+
+    from benchmarks import (fig8_tradeoff, kernels_bench, sinkhorn_compare,
+                            table3_complexity, table5_mnist, table6_dense)
+    mods = [table6_dense, table5_mnist, fig8_tradeoff, sinkhorn_compare,
+            table3_complexity, kernels_bench]
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in mods:
+        name = mod.__name__.split(".")[-1]
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            mod.run()
+            print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# {name} FAILED", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Paper Tables 2/3: empirical complexity scaling of LC-ACT.
+
+The claim: time is LINEAR in each of n (database size), h (histogram
+size), k (iterations) and v (vocabulary), i.e. O(vhm + nhk). We time
+lc_act_scores while doubling one parameter at a time and report the
+scaling exponent log2(t(2x)/t(x)) — should be ~<=1 (sublinear exponents
+appear when the doubled term is not dominant)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import lc
+from repro.data.synth import make_text_like
+
+
+def _time_for(n_docs=256, vocab=1024, m=32, hmax=32, iters=3, seed=0):
+    c, _ = make_text_like(n_docs=n_docs, vocab=vocab, m=m,
+                          doc_len=2 * hmax, hmax=hmax, seed=seed)
+    return timeit(lambda: lc.lc_act_scores(c, c.ids[0], c.w[0], iters=iters))
+
+
+def run() -> None:
+    base = dict(n_docs=256, vocab=1024, m=32, hmax=32, iters=3)
+    t0 = _time_for(**base)
+    emit("table3.base", t0, f"params={base}")
+    for key, hi in [("n_docs", 512), ("vocab", 2048), ("hmax", 64),
+                    ("iters", 6)]:
+        kw = dict(base)
+        kw[key] = hi
+        t1 = _time_for(**kw)
+        exponent = np.log2(max(t1, 1e-9) / max(t0, 1e-9))
+        emit(f"table3.double_{key}", t1,
+             f"scaling_exponent={exponent:.2f} (linear==1.0, quadratic==2.0)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Paper Table 5: precision@top-l on sparse image histograms (no
+background): BoW vs RWMD vs ACT-1/3/7. Expected: all high; ACT >= BoW for
+larger l; ACT-k improves monotonically with k."""
+from __future__ import annotations
+
+from benchmarks.common import emit, image_corpus, precision_all, timeit
+from repro.core import lc
+
+
+def run() -> None:
+    corpus, labels = image_corpus(background=False)
+    t = timeit(lambda: lc.lc_act_scores(corpus, corpus.ids[0], corpus.w[0],
+                                        iters=1))
+    for name, kw in [("bow", dict(method="bow")),
+                     ("rwmd", dict(method="act", iters=0)),
+                     ("act-1", dict(method="act", iters=1)),
+                     ("act-3", dict(method="act", iters=3)),
+                     ("act-7", dict(method="act", iters=7))]:
+        precs = {L: precision_all(corpus, labels, top_l=L, **kw)
+                 for L in (1, 16, 64)}
+        emit(f"table5.{name}", t,
+             "prec@1=%.4f prec@16=%.4f prec@64=%.4f"
+             % (precs[1], precs[16], precs[64]))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Paper Table 6: dense histograms (background included) break RWMD
+(precision ~ chance) while OMR/ACT stay near the sparse-case accuracy —
+the paper's central robustness claim."""
+from __future__ import annotations
+
+from benchmarks.common import emit, image_corpus, precision_all, timeit
+from repro.core import lc
+
+
+def run() -> None:
+    corpus, labels = image_corpus(background=True)
+    n_classes = int(labels.max()) + 1
+    t = timeit(lambda: lc.lc_omr_scores(corpus, corpus.ids[0], corpus.w[0]))
+    rows = [("bow", dict(method="bow")),
+            ("rwmd", dict(method="act", iters=0)),
+            ("omr", dict(method="omr")),
+            ("act-7", dict(method="act", iters=7)),
+            ("act-15", dict(method="act", iters=15))]
+    for name, kw in rows:
+        precs = {L: precision_all(corpus, labels, top_l=L, **kw)
+                 for L in (1, 16, 64)}
+        emit(f"table6.{name}", t,
+             "prec@1=%.4f prec@16=%.4f prec@64=%.4f chance=%.3f"
+             % (precs[1], precs[16], precs[64], 1.0 / n_classes))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,70 @@
+"""Serving driver: batched prefill + autoregressive decode with a KV cache.
+
+Prefills a batch of prompts through the reduced model, then greedily
+decodes continuations token by token — the serve-side path the
+prefill_32k / decode_32k dry-run cells lower at production scale.
+
+Run: PYTHONPATH=src python examples/serve_decode.py [--arch gemma3-27b]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import smoke_config
+from repro.data.tokens import DataConfig, global_batch
+from repro.models import model as M
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-27b")
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    dc = DataConfig(vocab=cfg.vocab, seq_len=args.prompt_len,
+                    global_batch=args.batch, seed=7)
+    prompts = jnp.asarray(global_batch(dc, 0)["tokens"])
+    print(f"{cfg.name} (reduced): prefill {prompts.shape} then decode "
+          f"{args.gen_len} tokens")
+
+    total = args.prompt_len + args.gen_len
+    decode = jax.jit(lambda p, b, c: M.decode_step(p, b, c, cfg))
+
+    t0 = time.perf_counter()
+    cache = M.init_decode_cache(cfg, args.batch, total, dtype=jnp.float32)
+    # prefill via the decode path token-by-token for cache layout parity
+    # with M.prefill (which returns a compact cache); timing reported for
+    # the decode loop only.
+    for t in range(args.prompt_len):
+        logits, cache = decode(params, {"tokens": prompts[:, t:t + 1],
+                                        "cache_index": jnp.int32(t)}, cache)
+    t_prefill = time.perf_counter() - t0
+
+    out = []
+    tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+    t0 = time.perf_counter()
+    for t in range(args.prompt_len, total):
+        out.append(tok)
+        logits, cache = decode(params, {"tokens": tok,
+                                        "cache_index": jnp.int32(t)}, cache)
+        tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+
+    gen = jnp.concatenate(out, axis=1)
+    print(f"prefill(sequential) {t_prefill:.2f}s; decode "
+          f"{args.gen_len} x {args.batch} tokens in {dt:.2f}s "
+          f"({1e3 * dt / args.gen_len:.1f} ms/token/batch)")
+    print("continuations:", gen[:, :8].tolist())
+    assert bool(jnp.isfinite(logits).all())
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

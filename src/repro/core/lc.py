@@ -1,0 +1,212 @@
+"""Linear-complexity batch engines: LC-RWMD, LC-OMR, LC-ACT (Section 5).
+
+One query histogram is scored against ``n`` database histograms that share a
+vocabulary ``V`` of ``v`` coordinates in R^m. Per-query work against the
+vocabulary is done ONCE (Phase 1), then reused across all database rows
+(Phases 2/3):
+
+  Phase 1:  D = dist(V, Qcoords)            (v, h)   -- one MXU matmul
+            Z, S = row-top-k smallest of D  (v, k)
+            W[i, l] = q_w[S[i, l]]          (v, k)   -- capacities
+  Phase 2:  k-1 rounds of Y = min(X, w_l); X -= Y; t += Y . z_l
+  Phase 3:  t += X . z_k                    (dump remainder)
+
+TPU adaptation (DESIGN.md section 2): the database is stored in a padded
+dense-bucket layout (ids, weights) instead of CSR, and Phase 2 gathers the
+per-entry (cost, capacity) ladders Zg/Wg once and then runs a fused
+element-wise pour — the v x h distance matrix of Phase 1 and the n x v
+dense X of the paper never hit HBM at production sizes (see
+``kernels/dist_topk`` and ``kernels/act_phase2`` for the fused versions;
+this module is the readable pjit-able reference engine that the kernels are
+validated against).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.geometry import pairwise_dist
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Corpus:
+    """Padded dense-bucket histogram database over a shared vocabulary.
+
+    ids: (n, hmax) int32 vocabulary indices; padding slots carry weight 0.
+    w:   (n, hmax) float32 L1-normalized weights (padding = 0).
+    coords: (v, m) float32 vocabulary embedding vectors.
+    """
+    ids: Array
+    w: Array
+    coords: Array
+
+    @property
+    def n(self) -> int:
+        return self.ids.shape[0]
+
+    @property
+    def hmax(self) -> int:
+        return self.ids.shape[1]
+
+    @property
+    def v(self) -> int:
+        return self.coords.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.coords.shape[1]
+
+
+#: Finite sentinel for padding query slots. Large enough never to be chosen
+#: over a real bin, finite so 0-mass remainders cost 0.0 (inf would NaN).
+PAD_DIST = 1e30
+
+
+def smallest_k(D: Array, k: int):
+    """Row-wise k smallest (values, indices), ascending, via k rounds of
+    masked min-extraction — identical selection to ``lax.top_k`` (lowest
+    index wins ties) but built from min/where/iota only, so XLA's SPMD
+    partitioner shards it on batch dims. The TopK custom-call does NOT
+    partition and forces a full all-gather of D (EXPERIMENTS.md section
+    Perf, emd-20news iteration 2). k is small (<= 16) per the paper.
+    """
+    h = D.shape[-1]
+    col = jax.lax.broadcasted_iota(jnp.int32, D.shape, D.ndim - 1)
+    work = D
+    zs, ss = [], []
+    for _ in range(k):
+        mv = jnp.min(work, axis=-1, keepdims=True)
+        cand = jnp.where(work == mv, col, jnp.int32(2**31 - 1))
+        mi = jnp.min(cand, axis=-1, keepdims=True)
+        work = jnp.where(col == mi, jnp.asarray(PAD_DIST, D.dtype), work)
+        zs.append(mv)
+        ss.append(mi)
+    del h
+    return (jnp.concatenate(zs, axis=-1),
+            jnp.concatenate(ss, axis=-1).astype(jnp.int32))
+
+
+def phase1(coords: Array, q_ids: Array, q_w: Array, k: int):
+    """Phase 1: fused distance + row-top-k against the query.
+
+    Padding query slots (weight 0) are pushed to PAD_DIST so they are never
+    selected as a nearest destination. Returns Z (v, k) ascending distances,
+    W (v, k) matching query capacities.
+    """
+    qc = coords[q_ids]                                   # (h, m)
+    D = pairwise_dist(coords, qc)                        # (v, h)
+    D = jnp.where(q_w[None, :] > 0.0, D, PAD_DIST)
+    Z, S = smallest_k(D, k)                              # (v, k)
+    W = q_w[S]
+    return Z, W
+
+
+def pour(x: Array, Zg: Array, Wg: Array, iters: int) -> Array:
+    """Phases 2+3 as a single fused pour over padded entries.
+
+    x:  (..., hmax) residual database weights.
+    Zg: (..., hmax, iters+1) ascending per-entry transport costs.
+    Wg: (..., hmax, iters)   per-entry capacities (query weights).
+    Returns (...,) transport-cost lower bounds.
+
+    The per-entry greedy pour is the same exclusive-prefix-sum trick as
+    ``relaxations._greedy_pour_rows`` — mathematically identical to the
+    paper's k-1 sequential min/subtract rounds, but reads x once.
+    """
+    if iters == 0:
+        return jnp.sum(x * Zg[..., 0], axis=-1)
+    prefix = jnp.cumsum(Wg, axis=-1) - Wg                # exclusive prefix
+    r = jnp.clip(x[..., None] - prefix, 0.0, Wg)         # (..., hmax, iters)
+    poured = jnp.sum(r * Zg[..., :iters], axis=(-1, -2))
+    remainder = jnp.maximum(x - jnp.sum(r, axis=-1), 0.0)
+    return poured + jnp.sum(remainder * Zg[..., iters], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "use_kernels"))
+def lc_act_scores(corpus: Corpus, q_ids: Array, q_w: Array, iters: int = 1,
+                  *, use_kernels: bool = False) -> Array:
+    """LC-ACT: lower bounds on EMD(x_u, q) — cost of moving each database
+    histogram INTO the query — for all n database rows. O(vhm + nhk)."""
+    k = iters + 1
+    if use_kernels:
+        from repro.kernels import ops as kops
+        Z, S = kops.dist_topk(corpus.coords, corpus.coords[q_ids], k,
+                              qmask=(q_w > 0.0))
+        W = q_w[S]
+    else:
+        Z, W = phase1(corpus.coords, q_ids, q_w, k)
+    Zg = Z[corpus.ids]                                   # (n, hmax, k)
+    if iters == 0:
+        return jnp.sum(corpus.w * Zg[..., 0], axis=-1)
+    Wg = W[corpus.ids][..., :iters]                      # (n, hmax, iters)
+    if use_kernels:
+        from repro.kernels import ops as kops
+        return kops.act_phase2(corpus.w, Zg, Wg)
+    return pour(corpus.w, Zg, Wg, iters)
+
+
+@jax.jit
+def lc_rwmd_scores(corpus: Corpus, q_ids: Array, q_w: Array) -> Array:
+    """LC-RWMD direction db -> query (== LC-ACT with zero Phase-2 rounds)."""
+    return lc_act_scores(corpus, q_ids, q_w, iters=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def lc_rwmd_scores_rev(corpus: Corpus, q_ids: Array, q_w: Array,
+                       block: int = 256) -> Array:
+    """LC-RWMD direction query -> db: each query bin ships to the nearest
+    coordinate PRESENT in each database histogram.
+
+    This is the 2017 paper's masked (min,+) sparse-dense product, expressed
+    on the padded layout: for db row u and query bin j,
+        c[u, j] = min over valid slots s of D[ids[u, s], j].
+    Work is O(n * hmax * h) element-wise minima — the quadratic-in-h term
+    LC-RWMD tolerates because it is pure VPU streaming (no matmul, no sort).
+    Processed in row blocks to bound memory.
+    """
+    qc = corpus.coords[q_ids]                            # (h, m)
+    D = pairwise_dist(corpus.coords, qc)                 # (v, h)
+    valid = corpus.w > 0.0                               # (n, hmax)
+    big = jnp.asarray(jnp.inf, D.dtype)
+
+    def one_block(ids_blk, valid_blk):
+        Dg = D[ids_blk]                                  # (b, hmax, h)
+        Dg = jnp.where(valid_blk[..., None], Dg, big)
+        cmin = jnp.min(Dg, axis=1)                       # (b, h)
+        return cmin @ q_w                                # (b,)
+
+    n = corpus.n
+    pad = (-n) % block
+    ids_p = jnp.pad(corpus.ids, ((0, pad), (0, 0)))
+    valid_p = jnp.pad(valid, ((0, pad), (0, 0)), constant_values=True)
+    out = jax.lax.map(
+        lambda args: one_block(*args),
+        (ids_p.reshape(-1, block, corpus.hmax), valid_p.reshape(-1, block, corpus.hmax)),
+    )
+    return out.reshape(-1)[:n]
+
+
+@jax.jit
+def lc_omr_scores(corpus: Corpus, q_ids: Array, q_w: Array) -> Array:
+    """LC-OMR: Algorithm 1 batched over the corpus (top-2 per vocab row)."""
+    Z, W = phase1(corpus.coords, q_ids, q_w, 2)
+    Z0g = Z[corpus.ids][..., 0]
+    Z1g = Z[corpus.ids][..., 1]
+    W0g = W[corpus.ids][..., 0]
+    x = corpus.w
+    overlap = Z0g == 0.0
+    rest = x - jnp.minimum(x, W0g)
+    per_entry = jnp.where(overlap, rest * Z1g, x * Z0g)
+    return jnp.sum(per_entry, axis=-1)
+
+
+def symmetric_scores(asym: Array) -> Array:
+    """Corpus-vs-corpus symmetrization: asym[a, b] = cost(move b into a);
+    the paper's symmetric measure is max(asym, asym.T)."""
+    return jnp.maximum(asym, asym.T)

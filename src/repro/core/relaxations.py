@@ -1,0 +1,126 @@
+"""The paper's relaxation measures, per histogram pair (Section 4).
+
+All four measures relax the EMD LP in increasing tightness
+(Theorem 2):    RWMD <= OMR <= ACT-k <= ICT <= EMD.
+
+Directional convention: ``*_dir(p, q, C)`` is the cost of moving ``p`` INTO
+``q`` (out-flow constraints kept; in-flow constraints removed or relaxed to
+the per-edge capacity F_ij <= q_j). The symmetric measure is the max of the
+two directions, exactly as in Section 2.1 / Section 6 of the paper.
+
+Everything here is pure jnp and vectorized: the greedy pour of Algorithms
+2/3 is a prefix-sum over the cost-sorted destination axis, not a Python
+loop, so these functions jit/vmap and serve as readable oracles for the
+linear-complexity engines in ``core/lc.py`` and the Pallas kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+__all__ = [
+    "rwmd_dir", "omr_dir", "ict_dir", "act_dir",
+    "rwmd", "omr", "ict", "act",
+]
+
+
+def rwmd_dir(p: Array, q: Array, C: Array) -> Array:
+    """Relaxed WMD, direction p -> q: every source bin ships all its mass to
+    its single nearest destination (in-flow constraints dropped entirely)."""
+    del q  # the relaxation ignores destination weights
+    return jnp.sum(p * jnp.min(C, axis=1))
+
+
+def omr_dir(p: Array, q: Array, C: Array) -> Array:
+    """Overlapping Mass Reduction (Algorithm 1), direction p -> q.
+
+    If the nearest destination overlaps (cost 0), a transfer of
+    min(p_i, q_j) rides for free and the remainder pays the 2nd-nearest
+    cost; otherwise everything pays the nearest cost.
+    """
+    neg_top2, idx2 = jax.lax.top_k(-C, 2)                 # (hp, 2)
+    c1, c2 = -neg_top2[:, 0], -neg_top2[:, 1]
+    q1 = q[idx2[:, 0]]
+    overlap = c1 == 0.0
+    moved_free = jnp.minimum(p, q1)
+    rest = p - moved_free
+    per_row = jnp.where(overlap, rest * c2, p * c1)
+    return jnp.sum(per_row)
+
+
+def _greedy_pour_rows(p: Array, cap_sorted: Array, cost_sorted: Array) -> Array:
+    """Vectorized greedy pour (the while-loop of Algorithms 2/3).
+
+    For each row i, pour ``p[i]`` into destinations l = 0,1,... with
+    capacities ``cap_sorted[i, l]`` at unit costs ``cost_sorted[i, l]``.
+    Transfer into slot l is  r_l = clip(p_i - prefix_cap_<l, 0, cap_l).
+    Returns (per-row poured cost, per-row remaining mass).
+    """
+    prefix = jnp.cumsum(cap_sorted, axis=1) - cap_sorted  # exclusive prefix
+    r = jnp.clip(p[:, None] - prefix, 0.0, cap_sorted)
+    poured = jnp.sum(r * cost_sorted, axis=1)
+    remainder = jnp.maximum(p - jnp.sum(r, axis=1), 0.0)
+    return poured, remainder
+
+
+def ict_dir(p: Array, q: Array, C: Array) -> Array:
+    """Iterative Constrained Transfers (Algorithm 2), direction p -> q.
+
+    Optimal for the relaxation {(1),(2),(4)}: per-edge capacity q_j, full
+    sort of each cost row, greedy pour until each source bin is empty.
+    """
+    order = jnp.argsort(C, axis=1)                        # (hp, hq)
+    cost_sorted = jnp.take_along_axis(C, order, axis=1)
+    cap_sorted = q[order]
+    poured, remainder = _greedy_pour_rows(p, cap_sorted, cost_sorted)
+    # Histograms are L1-normalized so sum(q) >= p_i and remainder == 0;
+    # keep the term for un-normalized defensive use (costs the max cost).
+    return jnp.sum(poured) + jnp.sum(remainder * cost_sorted[:, -1])
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def act_dir(p: Array, q: Array, C: Array, iters: int = 1) -> Array:
+    """Approximate ICT (Algorithm 3), direction p -> q.
+
+    ``iters`` = number of Phase-2 iterations in the paper's naming
+    (ACT-1 == iters=1). Performs ``iters`` capacity-constrained transfers to
+    the nearest destinations, then dumps any remainder at the
+    (iters+1)-th nearest cost. iters=0 degenerates to RWMD.
+    """
+    iters = min(iters, C.shape[1] - 1)        # k > h_q degenerates to ICT
+    k = iters + 1
+    neg_topk, idx = jax.lax.top_k(-C, k)                  # ascending costs
+    cost_sorted = -neg_topk                               # (hp, k)
+    if iters == 0:
+        return jnp.sum(p * cost_sorted[:, 0])
+    cap_sorted = q[idx[:, :iters]]
+    poured, remainder = _greedy_pour_rows(p, cap_sorted, cost_sorted[:, :iters])
+    return jnp.sum(poured) + jnp.sum(remainder * cost_sorted[:, iters])
+
+
+def _symmetric(fn_dir, p, q, C, **kw):
+    return jnp.maximum(fn_dir(p, q, C, **kw), fn_dir(q, p, C.T, **kw))
+
+
+def rwmd(p: Array, q: Array, C: Array) -> Array:
+    """Symmetric RWMD = max of the two directional lower bounds."""
+    return _symmetric(rwmd_dir, p, q, C)
+
+
+def omr(p: Array, q: Array, C: Array) -> Array:
+    """Symmetric OMR."""
+    return _symmetric(omr_dir, p, q, C)
+
+
+def ict(p: Array, q: Array, C: Array) -> Array:
+    """Symmetric ICT."""
+    return _symmetric(ict_dir, p, q, C)
+
+
+def act(p: Array, q: Array, C: Array, iters: int = 1) -> Array:
+    """Symmetric ACT-``iters``."""
+    return _symmetric(act_dir, p, q, C, iters=iters)

@@ -1,0 +1,63 @@
+"""WMD baseline: exact EMD nearest-neighbor search with RWMD pruning.
+
+This is the method the paper is 10^4x faster than (Kusner et al. 2015 +
+the prefetch-and-prune trick): compute cheap RWMD lower bounds for the whole
+database, exactly solve the transportation LP only for the most promising
+candidates, and stop when the next lower bound exceeds the current top-l
+threshold.
+
+Host-side (scipy LP per candidate) by design — it is the accuracy/runtime
+REFERENCE for benchmarks/, not a production path.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.emd import emd_exact
+from repro.core.histogram import pair_from_corpus
+from repro.core.lc import Corpus, lc_rwmd_scores
+
+
+def wmd_search(corpus: Corpus, q_index: int, top_l: int,
+               prune_factor: int = 4) -> tuple[np.ndarray, np.ndarray]:
+    """Top-l most similar rows to ``corpus[q_index]`` under exact EMD.
+
+    prune_factor: how many RWMD-ranked candidates to solve exactly, as a
+    multiple of top_l (the paper's pruning: lower bound >= current k-th
+    best exact distance => candidate cannot enter the top-l).
+    """
+    lb = np.array(lc_rwmd_scores(corpus, corpus.ids[q_index],
+                                 corpus.w[q_index]))
+    lb[q_index] = np.inf                      # exclude self
+    order = np.argsort(lb)
+    exact: dict[int, float] = {}
+    threshold = np.inf
+    for rank, u in enumerate(order):
+        if lb[u] >= threshold and len(exact) >= top_l:
+            break                             # lower bound prunes the rest
+        if rank >= prune_factor * top_l and len(exact) >= top_l:
+            break
+        p, q, C = pair_from_corpus(corpus, int(u), q_index)
+        pn, qn, Cn = np.asarray(p), np.asarray(q), np.asarray(C)
+        keep_p, keep_q = pn > 0, qn > 0
+        exact[int(u)] = emd_exact(pn[keep_p], qn[keep_q],
+                                  Cn[np.ix_(keep_p, keep_q)])
+        if len(exact) >= top_l:
+            threshold = sorted(exact.values())[top_l - 1]
+    items = sorted(exact.items(), key=lambda kv: kv[1])[:top_l]
+    idx = np.asarray([u for u, _ in items])
+    val = np.asarray([v for _, v in items])
+    return val, idx
+
+
+def wmd_all_pairs_precision(corpus: Corpus, labels: np.ndarray, top_l: int,
+                            n_queries: int | None = None,
+                            prune_factor: int = 4) -> float:
+    """precision@top-l of exact-EMD search over the corpus (or a query
+    subset — the paper does the same to keep WMD benchmarks tractable)."""
+    n = corpus.n if n_queries is None else min(n_queries, corpus.n)
+    hits = []
+    for qi in range(n):
+        _, idx = wmd_search(corpus, qi, top_l, prune_factor)
+        hits.append(np.mean(labels[idx] == labels[qi]))
+    return float(np.mean(hits))

@@ -1,0 +1,66 @@
+"""Synthetic dataset generators mirroring the paper's two evaluation domains.
+
+The container is offline, so we synthesize datasets with the same structure
+as the paper's:
+
+* ``make_text_like`` — 20-Newsgroups-like: sparse histograms over a large
+  vocabulary embedded in R^m (word2vec-like, L2-normalized), with
+  class-conditional topic structure so nearest-neighbor precision is a
+  meaningful signal.
+* ``make_image_like`` — MNIST-like: dense 2-D pixel histograms, class =
+  digit-like blob pattern; optional background floor to reproduce the
+  RWMD collapse of Table 6.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.histogram import docs_to_corpus, images_to_corpus
+from repro.core.lc import Corpus
+
+
+def make_text_like(n_docs: int = 64, n_classes: int = 4, vocab: int = 512,
+                   m: int = 32, doc_len: int = 60, hmax: int = 32,
+                   seed: int = 0) -> tuple[Corpus, np.ndarray]:
+    """Class-conditional sparse documents over an embedded vocabulary."""
+    rng = np.random.default_rng(seed)
+    coords = rng.normal(size=(vocab, m))
+    coords /= np.linalg.norm(coords, axis=1, keepdims=True)  # word2vec-style L2
+    # Each class owns a topic: a distribution concentrated on a coherent
+    # region of the embedding space (words near a class anchor).
+    anchors = rng.normal(size=(n_classes, m))
+    anchors /= np.linalg.norm(anchors, axis=1, keepdims=True)
+    sim = coords @ anchors.T                                  # (vocab, n_classes)
+    topic_logits = 6.0 * sim
+    topic_probs = np.exp(topic_logits - topic_logits.max(axis=0))
+    topic_probs /= topic_probs.sum(axis=0)
+    labels = rng.integers(0, n_classes, size=n_docs)
+    docs = []
+    for u in range(n_docs):
+        mix = 0.85 * topic_probs[:, labels[u]] + 0.15 / vocab
+        mix /= mix.sum()
+        docs.append(rng.choice(vocab, size=doc_len, p=mix))
+    corpus = docs_to_corpus(docs, coords.astype(np.float32), hmax)
+    return corpus, labels
+
+
+def make_image_like(n_images: int = 64, n_classes: int = 4, side: int = 12,
+                    include_background: bool = False,
+                    seed: int = 0) -> tuple[Corpus, np.ndarray]:
+    """Digit-like greyscale blobs: each class is a fixed stroke pattern with
+    per-sample jitter, rendered on a side x side grid."""
+    rng = np.random.default_rng(seed)
+    # Class prototypes: 3 gaussian strokes per class at fixed positions.
+    protos = rng.uniform(1.5, side - 2.5, size=(n_classes, 3, 2))
+    yy, xx = np.meshgrid(np.arange(side), np.arange(side), indexing="ij")
+    grid = np.stack([yy, xx], axis=-1).astype(np.float64)    # (side, side, 2)
+    labels = rng.integers(0, n_classes, size=n_images)
+    images = np.zeros((n_images, side, side))
+    for u in range(n_images):
+        centers = protos[labels[u]] + rng.normal(scale=0.6, size=(3, 2))
+        for c in centers:
+            d2 = np.sum((grid - c) ** 2, axis=-1)
+            images[u] += np.exp(-d2 / 2.0)
+        images[u] *= images[u] > 0.05 * images[u].max()      # sparsify
+    corpus = images_to_corpus(images, include_background=include_background)
+    return corpus, labels

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+dist_topk   — fused pairwise-distance + row-top-k (LC-ACT Phase 1).
+act_phase2  — fused k-round constrained pour (LC-ACT Phases 2+3).
+
+Written for TPU (pl.pallas_call + BlockSpec VMEM tiling); validated with
+interpret=True on CPU. ``ops`` holds the jitted padding wrappers; ``ref``
+holds the pure-jnp oracles.
+"""
+from repro.kernels import ops, ref
+from repro.kernels.ops import act_phase2, dist_topk
+
+__all__ = ["ops", "ref", "act_phase2", "dist_topk"]

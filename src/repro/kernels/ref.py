@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.geometry import pairwise_dist
+from repro.core.lc import PAD_DIST
+
+
+def dist_topk_ref(coords: jax.Array, qc: jax.Array, qmask: jax.Array, k: int):
+    """Materialized-D reference for ``dist_topk``: full (v, h) distance matrix
+    then lax.top_k of the negated rows."""
+    D = pairwise_dist(coords.astype(jnp.float32), qc.astype(jnp.float32))
+    D = jnp.where(qmask.reshape(1, -1) > 0, D, PAD_DIST)
+    neg, s = jax.lax.top_k(-D, k)
+    return -neg, s
+
+
+def act_phase2_ref(x: jax.Array, zg: jax.Array, wg: jax.Array) -> jax.Array:
+    """Sequential-rounds reference for ``act_phase2`` — implements the
+    paper's eqs. (6)-(9) literally: k-1 min/subtract rounds then the dump."""
+    x = x.astype(jnp.float32)
+    iters = wg.shape[-1]
+    t = jnp.zeros(x.shape[:-1], jnp.float32)
+    for l in range(iters):
+        y = jnp.minimum(x, wg[..., l].astype(jnp.float32))   # eq. (6)
+        x = x - y                                            # eq. (7)
+        t = t + jnp.sum(y * zg[..., l], axis=-1)             # eq. (8)
+    t = t + jnp.sum(x * zg[..., iters], axis=-1)             # eq. (9)
+    return t[..., None]

@@ -1,0 +1,212 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run driver.
+
+For every (architecture x input-shape) cell — plus the paper's own two EMD
+search workloads — lower + compile the step on the production mesh(es),
+print memory_analysis / cost_analysis, extract roofline terms, and append a
+JSON record to the results file.
+
+The two lines above MUST stay the first statements in this module: jax locks
+the device count at first init, and only the dry-run is allowed to see 512
+placeholder host devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod both]
+"""
+import argparse
+import json
+import sys
+import time
+
+import jax
+
+from repro.analysis.hlo_collectives import collective_bytes
+from repro.analysis.jaxpr_cost import cost_of
+from repro.configs import ARCH_IDS, EMD_IDS, get_config
+from repro.launch import steps as St
+from repro.launch.mesh import make_production_mesh
+from repro.launch.search import jit_search_step, make_search_step, search_input_specs
+from repro.models.config import SHAPES, cells_for
+
+# --- TPU v5e hardware constants (roofline denominators) ---
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) for train; 2*N for per-token fwd."""
+    n = cfg.param_count()
+    if cfg.is_moe:
+        # active params: replace full expert stack by experts_per_token
+        full_moe = cfg.n_layers * (3 if cfg.mlp == "swiglu" else 2) \
+            * cfg.n_experts * cfg.d_model * cfg.d_ff
+        active_moe = full_moe * cfg.experts_per_token / cfg.n_experts
+        n = n - full_moe + active_moe
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6 if shape.kind == "train" else 2
+    return mult * n * tokens
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True, mode: str = "tp",
+             overrides: dict | None = None) -> dict:
+    import dataclasses
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    t0 = time.monotonic()
+
+    with jax.set_mesh(mesh):       # ambient mesh: activation annotations
+        if arch in EMD_IDS:
+            jitted = jit_search_step(cfg, mesh)
+            args = search_input_specs(cfg)
+            lowered = jitted.lower(*args)
+            jcost = cost_of(make_search_step(cfg.iters, 16), *args)
+            # LC-ACT "model flops": the algorithm's own matmul term
+            # (Phase-1 vhm per query) — everything else is intended overhead.
+            mf = 2.0 * cfg.queries * cfg.vocab * cfg.hmax * cfg.dim
+        else:
+            shape = SHAPES[shape_name]
+            if shape.kind == "train":
+                jitted, (p, o, b) = St.jit_train_step(cfg, shape, mesh,
+                                                      mode=mode)
+                lowered = jitted.lower(p, o, b)
+                jcost = cost_of(St.make_train_step(cfg, shape), p, o, b)
+            elif shape.kind == "prefill":
+                jitted, (p, b) = St.jit_prefill_step(cfg, shape, mesh)
+                lowered = jitted.lower(p, b)
+                jcost = cost_of(St.make_prefill_step(cfg), p, b)
+            else:
+                jitted, (p, b, c) = St.jit_decode_step(cfg, shape, mesh)
+                lowered = jitted.lower(p, b, c)
+                jcost = cost_of(St.make_decode_step(cfg), p, b, c)
+            mf = model_flops(cfg, shape)
+
+        compiled = lowered.compile()
+    t_compile = time.monotonic() - t0
+
+    mem = compiled.memory_analysis()
+    xla_cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo, n_dev)
+
+    # Global terms: jaxpr counter (exact scan trip counts); XLA's numbers
+    # kept for reference (they count loop bodies once — see analysis/).
+    flops = float(jcost["flops"])
+    bytes_acc = float(jcost["bytes"])
+    coll_total = sum(coll.values())
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mode": mode,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": n_dev,
+        "compile_s": round(t_compile, 1),
+        "hlo_flops": flops,
+        "hlo_bytes": bytes_acc,
+        "xla_flops_per_dev": float(xla_cost.get("flops", 0.0)) if xla_cost else 0.0,
+        "collective_bytes": coll_total,
+        "collectives": coll,
+        "model_flops": mf,
+        # roofline terms (seconds)
+        "t_compute": flops / (n_dev * PEAK_FLOPS),
+        "t_memory": bytes_acc / (n_dev * HBM_BW),
+        "t_collective": coll_total / (n_dev * LINK_BW),
+        "memory_analysis": str(mem),
+    }
+    for key in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                "output_size_in_bytes", "temp_size_in_bytes"):
+        val = getattr(mem, key, None)
+        if val is not None:
+            rec[key] = int(val)
+    terms = {"compute": rec["t_compute"], "memory": rec["t_memory"],
+             "collective": rec["t_collective"]}
+    rec["bottleneck"] = max(terms, key=terms.get)
+    rec["useful_flops_ratio"] = (mf / flops) if flops else 0.0
+    if verbose:
+        print(f"== {arch} x {shape_name} on {rec['mesh']} "
+              f"(compile {t_compile:.1f}s) ==")
+        print("memory_analysis:", mem)
+        print("cost_analysis: flops=%.3e bytes=%.3e" % (flops, bytes_acc))
+        print("collectives:", {k: f"{v:.3e}" for k, v in coll.items()})
+        print("roofline: compute=%.4fs memory=%.4fs collective=%.4fs -> %s"
+              % (rec["t_compute"], rec["t_memory"], rec["t_collective"],
+                 rec["bottleneck"]))
+        sys.stdout.flush()
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["no", "yes", "both"], default="no")
+    ap.add_argument("--mode", choices=["tp", "fsdp", "ep"], default="tp")
+    ap.add_argument("--remat-policy", choices=["full", "dots"], default=None)
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (int/float/str inferred)")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    args = ap.parse_args()
+    overrides = {}
+    if args.remat_policy:
+        overrides["remat_policy"] = args.remat_policy
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                pass
+        overrides[k] = v
+    overrides = overrides or None
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for s in cells_for(arch):
+                cells.append((arch, s))
+        for emd in EMD_IDS:
+            cells.append((emd, "search"))
+    else:
+        assert args.arch, "--arch or --all required"
+        if args.arch in EMD_IDS:
+            cells.append((args.arch, "search"))
+        else:
+            shapes = [args.shape] if args.shape else cells_for(args.arch)
+            cells += [(args.arch, s) for s in shapes]
+
+    pods = {"no": [False], "yes": [True], "both": [False, True]}[args.multi_pod]
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    failures = []
+    for arch, shape in cells:
+        for mp in pods:
+            try:
+                rec = run_cell(arch, shape, mp, mode=args.mode,
+                               overrides=overrides)
+                with open(args.out, "a") as f:
+                    rec = dict(rec)
+                    rec.pop("memory_analysis")
+                    f.write(json.dumps(rec) + "\n")
+            except Exception as e:  # noqa: BLE001 - report and continue
+                failures.append((arch, shape, mp, repr(e)))
+                print(f"FAILED {arch} x {shape} mp={mp}: {e!r}")
+                sys.stdout.flush()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f_ in failures:
+            print(" ", f_)
+        sys.exit(1)
+    print("\nall dry-run cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Distributed LC-ACT similarity search (the paper's workload, scaled out).
+
+One scoring step: a batch of queries against a vocabulary-backed histogram
+database.
+
+Sharding (DESIGN.md section 2):
+  * Phase 1 — queries over ``data``, vocabulary rows over ``model``:
+    the v x h distance matmul is TP-sharded; the per-row top-k is local.
+  * handoff — the tiny (v, k) ladders are all-gathered over ``model``
+    (v*k floats, ~2 MB at 20News scale).
+  * Phase 2/3 — database rows over ``model``, queries over ``data``: the
+    pour is embarrassingly parallel over the (query, row) grid; the final
+    score matrix lands P(data, model).
+  * top-l — per-shard top-l then a single small gather.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import lc
+from repro.launch.mesh import data_axes
+
+
+def _dp(mesh):
+    axes = data_axes(mesh)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def make_search_step(iters: int, top_l: int):
+    """Returns search_step(corpus_ids, corpus_w, coords, q_ids, q_w)
+    -> (top-l scores, top-l indices), each (nq, top_l)."""
+    from repro.sharding import annotate
+    k = iters + 1
+
+    def search_step(corpus_ids, corpus_w, coords, q_ids, q_w):
+        def p1(qi, qw):
+            return lc.phase1(coords, qi, qw, k)       # Z, W: (v, k)
+
+        Z, W = jax.vmap(p1)(q_ids, q_w)               # (nq, v, k)
+        # Pin the top-k OUTPUT layout: queries stay on their data shards,
+        # the (v, k) ladders replicated. Without this, XLA hoists the
+        # resharding above the top-k and all-gathers the full (nq, v, h)
+        # distance tensor — 36 GB/device at 20News scale (EXPERIMENTS.md
+        # section Perf, emd-20news iteration 1).
+        Z = annotate.constrain(Z, ("pod", "data"), None, None)
+        W = annotate.constrain(W, ("pod", "data"), None, None)
+
+        def pour_one(Zq, Wq):
+            Zg = Zq[corpus_ids]                       # (n, hmax, k)
+            if iters == 0:
+                return jnp.sum(corpus_w * Zg[..., 0], axis=-1)
+            Wg = Wq[corpus_ids][..., :iters]
+            return lc.pour(corpus_w, Zg, Wg, iters)
+
+        scores = jax.vmap(pour_one)(Z, W)             # (nq, n)
+        neg, idx = jax.lax.top_k(-scores, top_l)
+        return -neg, idx
+
+    return search_step
+
+
+def search_shardings(mesh, workload):
+    """(in_shardings, out_shardings) for search_step on ``mesh``."""
+    dp = _dp(mesh)
+    ns = lambda *spec: NamedSharding(mesh, P(*spec))
+    in_sh = (
+        ns("model", None),        # corpus_ids (n, hmax)
+        ns("model", None),        # corpus_w   (n, hmax)
+        ns(None, None),           # coords     (v, m) — replicated (small*m)
+        ns(dp, None),             # q_ids      (nq, hmax)
+        ns(dp, None),             # q_w        (nq, hmax)
+    )
+    out_sh = (ns(dp, None), ns(dp, None))
+    return in_sh, out_sh
+
+
+def search_input_specs(workload) -> tuple:
+    """ShapeDtypeStruct stand-ins for one scoring step of ``workload``.
+
+    The database row count is padded to a multiple of 512 (zero-weight pad
+    rows score 0 and are dropped after top-l) so it shards on any mesh."""
+    w = workload
+    n = -(-w.n_db // 512) * 512
+    return (
+        jax.ShapeDtypeStruct((n, w.hmax), jnp.int32),
+        jax.ShapeDtypeStruct((n, w.hmax), jnp.float32),
+        jax.ShapeDtypeStruct((w.vocab, w.dim), jnp.float32),
+        jax.ShapeDtypeStruct((w.queries, w.hmax), jnp.int32),
+        jax.ShapeDtypeStruct((w.queries, w.hmax), jnp.float32),
+    )
+
+
+def jit_search_step(workload, mesh, top_l: int = 16, iters: int | None = None):
+    iters = workload.iters if iters is None else iters
+    step = make_search_step(iters, top_l)
+    in_sh, out_sh = search_shardings(mesh, workload)
+    return jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)

@@ -1,0 +1,186 @@
+"""jit-able train / prefill / decode steps with full sharding annotations.
+
+These are the functions the dry-run lowers against the production meshes
+and the train/serve drivers execute on real devices. Everything is built
+from the config: input specs, parameter shardings, and the step callables.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import model as M
+from repro.models.config import ModelConfig, InputShape
+from repro.optim import adamw
+from repro.optim.grad_utils import accumulate_grads
+from repro.sharding import rules
+
+#: KV-cache capacity padding: seq_len + 512 keeps the sequence dim divisible
+#: by every mesh-axis product we shard it over (16, 256, 512).
+CACHE_PAD = 512
+
+
+def microbatches_for(cfg: ModelConfig, shape: InputShape) -> int:
+    """Gradient-accumulation factor: keeps per-device activation memory
+    bounded for the widest archs (EXPERIMENTS.md section Dry-run)."""
+    tokens = shape.seq_len * shape.global_batch
+    if cfg.d_model >= 16_384:
+        return 8                      # nemotron-4-340b
+    if cfg.d_model >= 5_000 or tokens > 2 ** 21:
+        return 4
+    return 1
+
+
+# ----------------------------------------------------------------------------
+# Abstract inputs (ShapeDtypeStruct stand-ins — never allocated)
+# ----------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct pytree for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = lambda s: jax.ShapeDtypeStruct(s, jnp.int32)
+    emb = lambda s: jax.ShapeDtypeStruct(s, jnp.bfloat16)
+    if shape.kind == "train":
+        batch = {"labels": tok((B, S))}
+        if cfg.frontend != "none":
+            batch["embeddings"] = emb((B, S, cfg.d_model))
+        else:
+            batch["tokens"] = tok((B, S))
+        return batch
+    if shape.kind == "prefill":
+        batch = {}
+        if cfg.frontend != "none":
+            batch["embeddings"] = emb((B, S, cfg.d_model))
+        else:
+            batch["tokens"] = tok((B, S))
+        return batch
+    # decode: one new token against a cache of S past tokens
+    batch = {"cache_index": jax.ShapeDtypeStruct((), jnp.int32)}
+    if cfg.frontend != "none":
+        batch["embeddings"] = emb((B, 1, cfg.d_model))
+    else:
+        batch["tokens"] = tok((B, 1))
+    return batch
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    rng = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda: M.init(rng, cfg))
+
+
+def abstract_opt_state(cfg: ModelConfig) -> Any:
+    params = abstract_params(cfg)
+    return jax.eval_shape(lambda: adamw.init(params, cfg.opt_state_dtype))
+
+
+def abstract_cache(cfg: ModelConfig, shape: InputShape) -> Any:
+    cap = shape.seq_len + CACHE_PAD
+    return jax.eval_shape(lambda: M.init_decode_cache(
+        cfg, shape.global_batch, cap - 1, dtype=jnp.bfloat16))
+
+
+# ----------------------------------------------------------------------------
+# Steps
+# ----------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, shape: InputShape,
+                    opt_cfg: adamw.AdamWConfig | None = None,
+                    n_micro: int | None = None, mode: str = "tp"):
+    from repro.sharding import annotate
+
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    n_micro = microbatches_for(cfg, shape) if n_micro is None else n_micro
+
+    def train_step(params, opt_state, batch):
+        with annotate.mode(mode):
+            loss_fn = lambda p, b: M.train_loss(p, b, cfg)
+            loss, grads = accumulate_grads(loss_fn, params, batch, n_micro)
+            params, opt_state, metrics = adamw.update(grads, opt_state,
+                                                      params, opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, cache = M.prefill(params, batch, cfg)
+        return logits, cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, batch, cache):
+        return M.decode_step(params, batch, cache, cfg)
+    return decode_step
+
+
+# ----------------------------------------------------------------------------
+# jit wrapping with shardings for a given mesh
+# ----------------------------------------------------------------------------
+
+def _shardings(tree_of_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def jit_train_step(cfg: ModelConfig, shape: InputShape, mesh, *,
+                   mode: str = "tp", **kw):
+    kw["mode"] = mode
+    params_abs = abstract_params(cfg)
+    opt_abs = abstract_opt_state(cfg)
+    batch_abs = input_specs(cfg, shape)
+    p_spec = rules.param_specs(params_abs, mesh, mode)
+    o_spec = {"m": p_spec, "v": p_spec, "step": P()}
+    b_spec = rules.batch_specs(batch_abs, mesh, mode)
+    m_spec = {"loss": P(), "grad_norm": P(), "lr": P()}
+    step = make_train_step(cfg, shape, **kw)
+    jitted = jax.jit(
+        step,
+        in_shardings=(_shardings(p_spec, mesh), _shardings(o_spec, mesh),
+                      _shardings(b_spec, mesh)),
+        out_shardings=(_shardings(p_spec, mesh), _shardings(o_spec, mesh),
+                       _shardings(m_spec, mesh)),
+        donate_argnums=(0, 1),
+    )
+    return jitted, (params_abs, opt_abs, batch_abs)
+
+
+def jit_prefill_step(cfg: ModelConfig, shape: InputShape, mesh):
+    params_abs = abstract_params(cfg)
+    batch_abs = input_specs(cfg, shape)
+    p_spec = rules.param_specs(params_abs, mesh)
+    b_spec = rules.batch_specs(batch_abs, mesh)
+    cache_abs = jax.eval_shape(
+        lambda p, b: make_prefill_step(cfg)(p, b)[1], params_abs, batch_abs)
+    c_spec = rules.cache_specs(cache_abs, cfg, mesh)
+    out_spec = (rules.logits_spec(mesh, shape.global_batch, cfg.vocab), c_spec)
+    jitted = jax.jit(
+        make_prefill_step(cfg),
+        in_shardings=(_shardings(p_spec, mesh), _shardings(b_spec, mesh)),
+        out_shardings=_shardings(out_spec, mesh),
+    )
+    return jitted, (params_abs, batch_abs)
+
+
+def jit_decode_step(cfg: ModelConfig, shape: InputShape, mesh):
+    params_abs = abstract_params(cfg)
+    batch_abs = input_specs(cfg, shape)
+    cache_abs = abstract_cache(cfg, shape)
+    p_spec = rules.param_specs(params_abs, mesh)
+    b_spec = rules.batch_specs(batch_abs, mesh)
+    c_spec = rules.cache_specs(cache_abs, cfg, mesh)
+    out_spec = (rules.logits_spec(mesh, shape.global_batch, cfg.vocab), c_spec)
+    jitted = jax.jit(
+        make_decode_step(cfg),
+        in_shardings=(_shardings(p_spec, mesh), _shardings(b_spec, mesh),
+                      _shardings(c_spec, mesh)),
+        out_shardings=_shardings(out_spec, mesh),
+        donate_argnums=(2,),
+    )
+    return jitted, (params_abs, batch_abs, cache_abs)

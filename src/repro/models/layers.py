@@ -1,0 +1,463 @@
+"""Transformer building blocks in pure JAX (no flax): norms, rotary
+embeddings, GQA attention with KV cache, MLP flavors, and a sort-based
+token-dropping MoE layer.
+
+Parameters are plain nested dicts of jnp arrays. Every ``*_init`` returns a
+param dict; every ``*_apply`` is a pure function of (params, inputs). Shapes
+are chosen so stacked-layer scanning (models/model.py) and the sharding
+rules (sharding/rules.py) can address leaves by path name.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+Params = dict[str, Any]
+
+NEG_INF = -1e30
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dense_init(key, in_dim: int, out_shape: tuple[int, ...], dtype) -> Array:
+    """Fan-in-scaled normal init, matmul weight of shape (in_dim, *out)."""
+    scale = in_dim ** -0.5
+    return (jax.random.normal(key, (in_dim, *out_shape)) * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------------------
+# Norms
+# ----------------------------------------------------------------------------
+
+def norm_init(cfg: ModelConfig) -> Params:
+    if cfg.norm == "nonparametric":
+        return {}
+    return {"scale": jnp.ones((cfg.d_model,), _dtype(cfg))}
+
+
+def norm_apply(params: Params, x: Array, cfg: ModelConfig) -> Array:
+    """RMSNorm, or OLMo-style non-parametric LayerNorm (no scale/bias)."""
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "nonparametric":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        return ((xf - mu) * jax.lax.rsqrt(var + 1e-5)).astype(x.dtype)
+    rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+    return (xf * rms).astype(x.dtype) * params["scale"]
+
+
+# ----------------------------------------------------------------------------
+# Rotary position embeddings (standard + sectioned M-RoPE)
+# ----------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float,
+               mrope: bool = False) -> Array:
+    """x: (B, S, H, hd); positions: (B, S) int32.
+
+    M-RoPE (qwen2-vl) splits the head dim into 3 sections (temporal/h/w);
+    with the stubbed vision frontend all three share the same position id
+    stream, so the math reduces to sectioned standard RoPE — kept explicit
+    so real 3-D position ids drop in without a model change.
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    if mrope:
+        # 3 sections of the rotary spectrum, each driven by its own
+        # position stream (identical streams under the stub frontend).
+        sec = hd // 2 // 3
+        sec_ids = jnp.minimum(jnp.arange(hd // 2) // max(sec, 1), 2)
+        pos3 = jnp.stack([positions] * 3, axis=-1)      # (B, S, 3)
+        angles = pos3[..., None, :].astype(jnp.float32)  # (B,S,1,3)
+        ang = jnp.take_along_axis(
+            angles * freqs[None, None, :, None],
+            sec_ids[None, None, :, None], axis=-1)[..., 0]  # (B,S,hd/2)
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# GQA attention with optional sliding window and KV cache
+# ----------------------------------------------------------------------------
+
+def attention_init(key, cfg: ModelConfig) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    return {
+        "wq": dense_init(kq, d, (cfg.n_heads, hd), dt),
+        "wk": dense_init(kk, d, (cfg.n_kv_heads, hd), dt),
+        "wv": dense_init(kv, d, (cfg.n_kv_heads, hd), dt),
+        "wo": dense_init(ko, cfg.n_heads * hd, (d,), dt),
+    }
+
+
+#: Full-sequence attention switches to the chunked online-softmax (flash)
+#: path above this length — the S x S score matrix must never materialize
+#: for the 32k prefill cells (83 GB/device at 4k already, see EXPERIMENTS.md).
+FLASH_THRESHOLD = 1024
+FLASH_CHUNK = 512
+
+
+def _flash_attention(q: Array, k: Array, v: Array, window: Array,
+                     scale: float) -> Array:
+    """Chunked causal attention with online softmax, pure JAX.
+
+    q: (B, S, KV, G, hd) grouped queries; k, v: (B, S, KV, hd).
+    Outer loop over query chunks is unrolled (static); each chunk scans only
+    its causal prefix of KV chunks (ragged inner scan — exact-causal FLOPs,
+    no S x S buffer). ``window`` may be a traced scalar (0 = global).
+    """
+    B, S, KV, G, hd = q.shape
+    C = FLASH_CHUNK
+    nq = S // C
+    outs = []
+    for i in range(nq):
+        q_blk = jax.lax.slice_in_dim(q, i * C, (i + 1) * C, axis=1)
+        q_blk = q_blk.astype(jnp.float32) * scale
+        qpos = i * C + jnp.arange(C)[:, None]                  # (C, 1)
+
+        def body(carry, j, q_blk=q_blk, qpos=qpos):
+            m, l, acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, j * C, C, axis=1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, j * C, C, axis=1)
+            s = jnp.einsum("bqngh,btnh->bqngt", q_blk,
+                           k_blk.astype(jnp.float32))          # (B,C,KV,G,C)
+            kpos = j * C + jnp.arange(C)[None, :]              # (1, C)
+            ok = kpos <= qpos
+            ok &= jnp.where(window > 0, (qpos - kpos) < window, True)
+            s = jnp.where(ok[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqngt,btnh->bqngh", p, v_blk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, C, KV, G), NEG_INF, jnp.float32),
+                jnp.zeros((B, C, KV, G), jnp.float32),
+                jnp.zeros((B, C, KV, G, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(body, init, jnp.arange(i + 1))
+        outs.append(acc / jnp.maximum(l, 1e-30)[..., None])
+    return jnp.concatenate(outs, axis=1)                        # (B,S,KV,G,hd)
+
+
+def attention_apply(params: Params, x: Array, cfg: ModelConfig, *,
+                    positions: Array, window: Array | int = 0,
+                    cache: Params | None = None,
+                    cache_index: Array | None = None,
+                    return_kv: bool = False):
+    """Full-sequence (train/prefill) or single-token (decode) attention.
+
+    ``window`` may be a traced int32 scalar (0 = full attention), so mixed
+    local/global stacks (gemma3) scan over one stacked parameter tree with a
+    per-layer window array instead of unrolling.
+
+    cache: {"k","v"}: (B, S_cache, kvH, hd). When given, x is (B, 1, d) and
+    the new KV is written at ``cache_index``; attention runs over the cache.
+    Returns (out, new_cache_or_kv).
+    """
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope)
+    window = jnp.asarray(window, jnp.int32)
+
+    if cache is not None:
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0))
+        new_cache = {"k": k_cache, "v": v_cache}
+        k, v = k_cache.astype(x.dtype), v_cache.astype(x.dtype)
+        skv = k.shape[1]
+        kpos = jnp.arange(skv)[None, :]
+        ok = kpos <= cache_index
+        ok &= jnp.where(window > 0, (cache_index - kpos) < window, True)
+        mask = jnp.where(ok, 0.0, NEG_INF)[None, :, :]   # (1,1,skv)
+        mask = mask[None]                                # (1,1,1,skv)
+    else:
+        new_cache = {"k": k, "v": v} if return_kv else None
+        group = H // KV
+        qg = q.reshape(B, S, KV, group, hd)
+        if S > FLASH_THRESHOLD and S % FLASH_CHUNK == 0:
+            out = _flash_attention(qg, k, v, window, hd ** -0.5)
+            out = out.astype(x.dtype).reshape(B, S, H * hd)
+            return jnp.einsum("bsk,kd->bsd", out, params["wo"]), new_cache
+        qpos = jnp.arange(S)[:, None]
+        kpos = jnp.arange(S)[None, :]
+        ok = kpos <= qpos
+        ok &= jnp.where(window > 0, (qpos - kpos) < window, True)
+        mask = jnp.where(ok, 0.0, NEG_INF)[None, None, :, :]
+
+    group = H // KV
+    qg = q.reshape(B, S, KV, group, hd)
+    scores = jnp.einsum("bsngk,btnk->bngst", qg, k).astype(jnp.float32)
+    scores = scores * (hd ** -0.5)
+    scores = scores + mask.astype(jnp.float32)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bngst,btnk->bsngk", probs, v)
+    out = out.reshape(B, S, H * hd)
+    return jnp.einsum("bsk,kd->bsd", out, params["wo"]), new_cache
+
+
+# ----------------------------------------------------------------------------
+# MLP flavors
+# ----------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None) -> Params:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    dt = _dtype(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_up": dense_init(k1, d, (ff,), dt),
+         "w_down": dense_init(k2, ff, (d,), dt)}
+    if cfg.mlp == "swiglu":
+        p["w_gate"] = dense_init(k3, d, (ff,), dt)
+    return p
+
+
+def mlp_apply(params: Params, x: Array, cfg: ModelConfig) -> Array:
+    up = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    if cfg.mlp == "swiglu":
+        gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+        h = jax.nn.silu(gate) * up
+    elif cfg.mlp == "relu2":                 # nemotron squared-ReLU
+        r = jax.nn.relu(up)
+        h = r * r
+    else:
+        h = jax.nn.gelu(up)
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"])
+
+
+# ----------------------------------------------------------------------------
+# Mixture of Experts: sort-based capacity dispatch (GShard semantics,
+# gather/scatter plumbing so HLO FLOPs stay ~= active-expert FLOPs)
+# ----------------------------------------------------------------------------
+
+def moe_init(key, cfg: ModelConfig) -> Params:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    s = cfg.moe_ff_shards
+    dt = _dtype(cfg)
+    kg, k1, k2, k3 = jax.random.split(key, 4)
+    # Packed layout: (E*s, d, ff/s) — slice s of expert e lives at row e*s+s.
+    p = {
+        "router": dense_init(kg, d, (E,), jnp.float32),
+        "w_up": (jax.random.normal(k1, (E * s, d, ff // s))
+                 * d ** -0.5).astype(dt),
+        "w_down": (jax.random.normal(k2, (E * s, ff // s, d))
+                   * ff ** -0.5).astype(dt),
+    }
+    if cfg.mlp == "swiglu":
+        p["w_gate"] = (jax.random.normal(k3, (E * s, d, ff // s))
+                       * d ** -0.5).astype(dt)
+    return p
+
+
+def pack_moe_weights(w: Array, s: int) -> Array:
+    """(E, d, ff) plain layout -> (E*s, d, ff/s) packed (tests/migration)."""
+    E, d, ff = w.shape
+    return (w.reshape(E, d, s, ff // s).transpose(0, 2, 1, 3)
+            .reshape(E * s, d, ff // s))
+
+
+def pack_moe_down(w: Array, s: int) -> Array:
+    """(E, ff, d) -> (E*s, ff/s, d)."""
+    E, ff, d = w.shape
+    return w.reshape(E * s, ff // s, d)
+
+
+def _moe_dispatch(params: Params, x: Array, cfg: ModelConfig, capacity: int):
+    """Routing + capacity bucketing for one token group x: (tg, d).
+
+    Returns (xe (E, C, d) expert inputs, slot/stok/sgate/keep for combine,
+    aux load-balance loss). Group-local: vmapped over groups, so the only
+    cross-device movement is the expert (EP) dimension of xe/ye.
+    """
+    tg, d = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    C = capacity
+    logits = (x.astype(jnp.float32) @ params["router"])          # (tg, E)
+    gate_top, ids = jax.lax.top_k(logits, k)                     # (tg, k)
+    gates = jax.nn.softmax(gate_top, axis=-1)                    # mixtral-style
+
+    flat_e = ids.reshape(-1)                                     # (tg*k,)
+    flat_tok = jnp.arange(tg * k, dtype=jnp.int32) // k
+    flat_gate = gates.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se = flat_e[order]
+    stok = flat_tok[order]
+    sgate = flat_gate[order]
+    # Position of each entry within its expert's run.
+    first = jnp.searchsorted(se, se, side="left")
+    pos = jnp.arange(tg * k, dtype=jnp.int32) - first.astype(jnp.int32)
+    keep = pos < C
+    slot = jnp.where(keep, se * C + pos, E * C)                  # drop row
+
+    xe = jnp.zeros((E * C + 1, d), x.dtype).at[slot].set(x[stok])
+    xe = xe[:E * C].reshape(E, C, d)
+    # Router aux loss (load balancing, Switch-style).
+    me = jnp.mean(jax.nn.one_hot(ids[:, 0], E), axis=0)
+    pe = jnp.mean(jax.nn.softmax(logits, axis=-1), axis=0)
+    aux = E * jnp.sum(me * pe)
+    return xe, (slot, stok, sgate, keep), aux
+
+
+def _moe_combine(ye: Array, route, tg: int, dtype) -> Array:
+    """Scatter expert outputs back to tokens for one group.
+    ye: (E, C, d)."""
+    slot, stok, sgate, keep = route
+    EC, d = ye.shape[0] * ye.shape[1], ye.shape[2]
+    ye_flat = jnp.concatenate([ye.reshape(EC, d),
+                               jnp.zeros((1, d), ye.dtype)], axis=0)
+    contrib = ye_flat[slot] * (sgate * keep)[:, None].astype(ye.dtype)
+    return jnp.zeros((tg, d), dtype).at[stok].add(contrib.astype(dtype))
+
+
+def _moe_routing(router: Array, xg: Array, k: int, E: int):
+    """Shared routing math for one group. Returns sorted entry arrays."""
+    tg = xg.shape[0]
+    logits = xg.astype(jnp.float32) @ router                     # (tg, E)
+    gate_top, ids = jax.lax.top_k(logits, k)
+    gates = jax.nn.softmax(gate_top, axis=-1)
+    flat_e = ids.reshape(-1)
+    flat_tok = jnp.arange(tg * k, dtype=jnp.int32) // k
+    order = jnp.argsort(flat_e, stable=True)
+    se = flat_e[order]
+    stok = flat_tok[order]
+    sgate = gates.reshape(-1)[order]
+    first = jnp.searchsorted(se, se, side="left")
+    pos = jnp.arange(tg * k, dtype=jnp.int32) - first.astype(jnp.int32)
+    me = jnp.mean(jax.nn.one_hot(ids[:, 0], E), axis=0)
+    pe = jnp.mean(jax.nn.softmax(logits, axis=-1), axis=0)
+    aux = E * jnp.sum(me * pe)
+    return se, stok, sgate, pos, aux
+
+
+def moe_apply_shard_map(params: Params, x: Array, cfg: ModelConfig,
+                        mesh) -> tuple[Array, Array]:
+    """Explicit-EP MoE: every rank routes (replicated, cheap), builds ONLY
+    its local packed-expert buckets, computes locally, and contributes a
+    partial token-output — one activation psum over "model" per layer.
+
+    No (G, E, C, d) tensor ever crosses the wire (vs ~100 GB/layer of
+    SPMD resharding in the constraint-based path — EXPERIMENTS.md Perf).
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.annotate import _dp_axes
+
+    B, S, d = x.shape
+    E, s, k = cfg.n_experts, cfg.moe_ff_shards, cfg.experts_per_token
+    C = int(S * k / E * cfg.moe_capacity_factor) + 1
+    dp = _dp_axes(mesh)
+    dp_ax = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def local(router, w_up, w_gate, w_down, x_loc):
+        e_loc = w_up.shape[0]                          # local packed rows
+        rank = jax.lax.axis_index("model")
+        row0 = rank * e_loc
+
+        def per_group(xg):
+            tg = xg.shape[0]
+            se, stok, sgate, pos, aux = _moe_routing(router, xg, k, E)
+            keep = pos < C
+            y = jnp.zeros((tg, d), x.dtype)
+            for j in range(e_loc):                     # static, small
+                e_j = (row0 + j) // s                  # expert of local row
+                mine = keep & (se == e_j)
+                slot = jnp.where(mine, pos, C)
+                xe = jnp.zeros((C + 1, d), x.dtype).at[slot].set(xg[stok])
+                xe = xe[:C]
+                up = xe @ w_up[j]
+                if cfg.mlp == "swiglu":
+                    h = jax.nn.silu(xe @ w_gate[j]) * up
+                else:
+                    r = jax.nn.relu(up)
+                    h = r * r if cfg.mlp == "relu2" else jax.nn.gelu(up)
+                ye = jnp.concatenate([h @ w_down[j],
+                                      jnp.zeros((1, d), x.dtype)], axis=0)
+                contrib = ye[slot] * (sgate * mine)[:, None].astype(x.dtype)
+                y = y.at[stok].add(contrib)
+            return y, aux
+
+        y, aux = jax.vmap(per_group)(x_loc)
+        y = jax.lax.psum(y, "model")                   # sums slices+experts
+        return y, jnp.mean(aux)
+
+    w_gate = params.get("w_gate", params["w_up"])      # placeholder if none
+    in_specs = (P(), P("model", None, None), P("model", None, None),
+                P("model", None, None), P(dp_ax, None, None))
+    fn = jax.shard_map(local, mesh=mesh, in_specs=in_specs,
+                       out_specs=(P(dp_ax, None, None), P()),
+                       check_vma=False)
+    y, aux = fn(params["router"], params["w_up"], w_gate, params["w_down"], x)
+    from jax.ad_checkpoint import checkpoint_name
+    y = checkpoint_name(y, "moe_out")
+    return y, jnp.mean(aux)
+
+
+def moe_apply(params: Params, x: Array, cfg: ModelConfig) -> tuple[Array, Array]:
+    """x: (B, S, d). Groups = batch rows (sequence-local routing).
+
+    Structure: per-group dispatch (vmap) -> globally-constrained expert
+    compute (the packed expert dim is sharded over "model": true EP) ->
+    per-group combine (vmap). With moe_ff_shards = s > 1 every expert's FFN
+    is split into s column slices; the combine sums the s partial outputs
+    (a pairwise psum on the wire instead of a full-mesh contraction psum).
+
+    With cfg.moe_shard_map and an ambient mesh carrying a "model" axis, the
+    explicit-EP shard_map path is used instead (see moe_apply_shard_map).
+    """
+    from repro.sharding import annotate
+
+    if cfg.moe_shard_map:
+        mesh = annotate._mesh()
+        if mesh is not None and "model" in mesh.axis_names:
+            return moe_apply_shard_map(params, x, cfg, mesh)
+
+    B, S, d = x.shape
+    E, s = cfg.n_experts, cfg.moe_ff_shards
+    k = cfg.experts_per_token
+    C = int(S * k / cfg.n_experts * cfg.moe_capacity_factor) + 1
+
+    xe, route, aux = jax.vmap(
+        lambda g: _moe_dispatch(params, g, cfg, C))(x)           # (G,E,C,d)
+    if s > 1:
+        xe = jnp.repeat(xe, s, axis=1)                           # (G,E*s,C,d)
+    xe = annotate.moe_experts(xe)                                # EP boundary
+
+    up = jnp.einsum("gecd,edf->gecf", xe, params["w_up"])
+    if cfg.mlp == "swiglu":
+        g_ = jnp.einsum("gecd,edf->gecf", xe, params["w_gate"])
+        h = jax.nn.silu(g_) * up
+    else:
+        r = jax.nn.relu(up)
+        h = r * r if cfg.mlp == "relu2" else jax.nn.gelu(up)
+    ye = jnp.einsum("gecf,efd->gecd", h, params["w_down"])       # (G,E*s,C,d)
+    if s > 1:
+        ye = ye.reshape(B, E, s, C, d).sum(axis=2)               # pairwise sum
+    ye = annotate.moe_tokens(ye)                                 # back to DP
+
+    y = jax.vmap(lambda e, r: _moe_combine(e, r, S, x.dtype))(ye, route)
+    return y, jnp.mean(aux)

@@ -1,0 +1,347 @@
+"""Decoder LM assembly: stacked-layer scan, per-family block wiring,
+train / prefill / decode entry points.
+
+Layers are STACKED (leading L axis on every block parameter) and applied
+with ``jax.lax.scan`` so the HLO stays one-block-sized regardless of depth —
+essential for the 33-cell multi-pod dry-run compile budget. Heterogeneous
+attention patterns (gemma3 local:global) ride along as a per-layer window
+array; the zamba2 hybrid scans (groups x period) with the weight-tied shared
+attention block applied once per group.
+
+Entry points:
+  init(rng, cfg)                      -> params
+  train_loss(params, batch, cfg)      -> scalar loss      (train_4k)
+  prefill(params, batch, cfg)         -> (logits, cache)  (prefill_32k)
+  decode_step(params, batch, cache, cfg) -> (logits, cache)  (decode_*)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+from repro.sharding import annotate
+
+Array = jax.Array
+Params = dict[str, Any]
+
+
+# ----------------------------------------------------------------------------
+# Init
+# ----------------------------------------------------------------------------
+
+def _block_init(key, cfg: ModelConfig) -> Params:
+    """One transformer block (attention archs) or one SSM block."""
+    if cfg.family == "ssm" or (cfg.family == "hybrid"):
+        return {"ln": L.norm_init(cfg), "ssm": S.ssm_init(key, cfg)}
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": L.norm_init(cfg), "ln2": L.norm_init(cfg),
+         "attn": L.attention_init(k1, cfg)}
+    if cfg.is_moe:
+        p["moe"] = L.moe_init(k2, cfg)
+    else:
+        p["mlp"] = L.mlp_init(k2, cfg)
+    return p
+
+
+def init(rng: Array, cfg: ModelConfig) -> Params:
+    ke, kb, kh, ks = jax.random.split(rng, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    params: Params = {
+        "embed": (jax.random.normal(ke, (cfg.vocab, cfg.d_model))
+                  * cfg.d_model ** -0.5).astype(dt),
+        "final_ln": L.norm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(kh, cfg.d_model, (cfg.vocab,), dt)
+    block_keys = jax.random.split(kb, cfg.n_layers)
+    params["blocks"] = jax.vmap(lambda k: _block_init(k, cfg))(block_keys)
+    if cfg.family == "hybrid":
+        # zamba2: ONE weight-tied attention+MLP block reused every
+        # ``hybrid_attn_every`` layers (the paper-config d_ff belongs here).
+        ka, km = jax.random.split(ks)
+        params["shared_attn"] = {"ln": L.norm_init(cfg),
+                                 "attn": L.attention_init(ka, cfg),
+                                 "ln2": L.norm_init(cfg),
+                                 "mlp": L.mlp_init(km, cfg)}
+    return params
+
+
+def window_schedule(cfg: ModelConfig) -> Array:
+    """Per-layer sliding-window sizes (0 = global full attention)."""
+    if cfg.local_global_ratio > 0:
+        period = cfg.local_global_ratio + 1
+        idx = jnp.arange(cfg.n_layers)
+        is_global = (idx % period) == cfg.local_global_ratio
+        return jnp.where(is_global, 0, cfg.sliding_window).astype(jnp.int32)
+    return jnp.full((cfg.n_layers,), cfg.sliding_window, jnp.int32)
+
+
+# ----------------------------------------------------------------------------
+# Forward (train / prefill): scan over stacked blocks
+# ----------------------------------------------------------------------------
+
+def _attn_block(bp: Params, x: Array, cfg: ModelConfig, positions: Array,
+                window, collect_kv: bool):
+    x = annotate.activations(x)
+    h = L.norm_apply(bp["ln1"], x, cfg)
+    a, kv = L.attention_apply(bp["attn"], h, cfg, positions=positions,
+                              window=window, return_kv=collect_kv)
+    x = x + a
+    h = L.norm_apply(bp["ln2"], x, cfg)
+    if cfg.is_moe:
+        y, aux = L.moe_apply(bp["moe"], h, cfg)
+    else:
+        y, aux = L.mlp_apply(bp["mlp"], h, cfg), jnp.float32(0.0)
+    return x + y, aux, kv
+
+
+def _remat(body, cfg: ModelConfig):
+    if not cfg.remat:
+        return body
+    if cfg.remat_policy == "dots":
+        # Save matmul outputs AND the MoE combine (its psum would otherwise
+        # re-fire on the wire during backward recompute).
+        pol = jax.checkpoint_policies.save_from_both_policies(
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            jax.checkpoint_policies.save_only_these_names("moe_out"))
+        return jax.checkpoint(body, policy=pol)
+    return jax.checkpoint(body)
+
+
+def _run_attn_stack(params: Params, x: Array, cfg: ModelConfig,
+                    positions: Array, collect_kv: bool):
+    windows = window_schedule(cfg)
+
+    def body(carry, xs):
+        x, aux_sum = carry
+        bp, window = xs
+        x, aux, kv = _attn_block(bp, x, cfg, positions, window, collect_kv)
+        return (x, aux_sum + aux), kv
+
+    body_fn = _remat(body, cfg)
+    (x, aux), kvs = jax.lax.scan(body_fn, (x, jnp.float32(0.0)),
+                                 (params["blocks"], windows))
+    return x, aux, kvs
+
+
+def _run_ssm_stack(params: Params, x: Array, cfg: ModelConfig):
+    def body(x, bp):
+        x = annotate.activations(x)
+        h = L.norm_apply(bp["ln"], x, cfg)
+        y, cache = S.ssm_apply(bp["ssm"], h, cfg)
+        return x + y, cache
+
+    body_fn = _remat(body, cfg)
+    return jax.lax.scan(body_fn, x, params["blocks"])
+
+
+def _run_hybrid_stack(params: Params, x: Array, cfg: ModelConfig,
+                      positions: Array, collect_kv: bool):
+    """zamba2: scan over groups of ``hybrid_attn_every`` SSM blocks, with the
+    weight-tied shared attention block applied at the end of each group."""
+    every = cfg.hybrid_attn_every
+    n_groups = cfg.n_layers // every
+    assert n_groups * every == cfg.n_layers, cfg.n_layers
+    grouped = jax.tree.map(
+        lambda a: a.reshape(n_groups, every, *a.shape[1:]), params["blocks"])
+    shared = params["shared_attn"]
+
+    def group_body(x, gbp):
+        def inner(x, bp):
+            x = annotate.activations(x)
+            h = L.norm_apply(bp["ln"], x, cfg)
+            y, cache = S.ssm_apply(bp["ssm"], h, cfg)
+            return x + y, cache
+
+        x, ssm_caches = jax.lax.scan(inner, x, gbp)
+        x = annotate.activations(x)
+        h = L.norm_apply(shared["ln"], x, cfg)
+        a, kv = L.attention_apply(shared["attn"], h, cfg, positions=positions,
+                                  window=0, return_kv=collect_kv)
+        x = x + a
+        h = L.norm_apply(shared["ln2"], x, cfg)
+        x = x + L.mlp_apply(shared["mlp"], h, cfg)
+        return x, (ssm_caches, kv)
+
+    body_fn = _remat(group_body, cfg)
+    return jax.lax.scan(body_fn, x, grouped)
+
+
+def _embed_inputs(params: Params, batch: dict, cfg: ModelConfig) -> Array:
+    """Token ids -> embeddings, or pass through stub frontend embeddings."""
+    if cfg.frontend != "none":
+        x = batch["embeddings"].astype(jnp.dtype(cfg.param_dtype))
+    else:
+        x = params["embed"][batch["tokens"]]
+    return annotate.activations(x)
+
+
+def _logits(params: Params, x: Array, cfg: ModelConfig) -> Array:
+    x = L.norm_apply(params["final_ln"], x, cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return annotate.logits(jnp.einsum("bsd,dv->bsv", x, head))
+
+
+def forward(params: Params, batch: dict, cfg: ModelConfig,
+            collect_cache: bool = False, last_token_logits: bool = False):
+    """Full-sequence forward. Returns (logits, aux_loss, caches).
+
+    ``last_token_logits``: compute the LM head only for the final position
+    (prefill serving — avoids the (B, S, vocab) buffer entirely).
+    """
+    x = _embed_inputs(params, batch, cfg)
+    B, seq = x.shape[0], x.shape[1]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (B, seq))
+    aux = jnp.float32(0.0)
+    caches = None
+    if cfg.family == "ssm":
+        x, caches = _run_ssm_stack(params, x, cfg)
+    elif cfg.family == "hybrid":
+        x, caches = _run_hybrid_stack(params, x, cfg, positions, collect_cache)
+    else:
+        x, aux, caches = _run_attn_stack(params, x, cfg, positions,
+                                         collect_cache)
+    if last_token_logits:
+        x = x[:, -1:, :]
+    return _logits(params, x, cfg), aux, caches
+
+
+def train_loss(params: Params, batch: dict, cfg: ModelConfig) -> Array:
+    """Next-token cross-entropy (+ MoE router aux loss)."""
+    logits, aux, _ = forward(params, batch, cfg)
+    labels = batch["labels"]
+    logits_f = logits.astype(jnp.float32)
+    lmax = jax.lax.stop_gradient(jnp.max(logits_f, axis=-1, keepdims=True))
+    shifted = logits_f - lmax
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    # Select the gold logit with an iota-compare reduce instead of
+    # take_along_axis: a vocab-axis gather would force XLA to re-gather
+    # model-sharded logits; select+max stays shard-local + one tiny psum.
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    gold = jnp.max(jnp.where(vocab_iota == labels[..., None], shifted,
+                             -jnp.inf), axis=-1)
+    mask = batch.get("loss_mask")
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        denom = nll.size
+    loss = jnp.sum(nll) / denom
+    return loss + 0.01 * aux
+
+
+# ----------------------------------------------------------------------------
+# Serving: prefill + single-token decode
+# ----------------------------------------------------------------------------
+
+def prefill(params: Params, batch: dict, cfg: ModelConfig):
+    """Returns (last-token logits, decode cache)."""
+    logits, _, caches = forward(params, batch, cfg, collect_cache=True,
+                                last_token_logits=True)
+    return logits, caches
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, seq_len: int,
+                      dtype=jnp.bfloat16) -> Params:
+    """Empty decode cache sized for ``seq_len`` past tokens (+1 new)."""
+    hd, KV = cfg.head_dim, cfg.n_kv_heads
+    size = seq_len + 1
+    kv = lambda: {"k": jnp.zeros((batch, size, KV, hd), dtype),
+                  "v": jnp.zeros((batch, size, KV, hd), dtype)}
+    if cfg.family == "ssm":
+        return {"ssm": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)),
+            S.ssm_decode_init(cfg, batch))}
+    if cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.hybrid_attn_every
+        ssm0 = S.ssm_decode_init(cfg, batch)
+        return {
+            "ssm": jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a, (n_groups, cfg.hybrid_attn_every, *a.shape)), ssm0),
+            "attn": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_groups, *a.shape)), kv()),
+        }
+    stack = lambda t: jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)), t)
+    return {"attn": stack(kv())}
+
+
+def decode_step(params: Params, batch: dict, cache: Params,
+                cfg: ModelConfig):
+    """One-token decode. batch: {"tokens": (B,1)} (or embeddings) plus
+    {"cache_index": scalar int32 — number of tokens already in the cache}."""
+    x = _embed_inputs(params, batch, cfg)
+    idx = batch["cache_index"]
+    B = x.shape[0]
+    positions = jnp.broadcast_to(idx, (B, 1)).astype(jnp.int32)
+
+    if cfg.family == "ssm":
+        def body(x, xs):
+            bp, c = xs
+            h = L.norm_apply(bp["ln"], x, cfg)
+            y, c2 = S.ssm_decode_step(bp["ssm"], h, c, cfg)
+            return x + y, c2
+        x, new_ssm = jax.lax.scan(body, x, (params["blocks"], cache["ssm"]))
+        new_cache = {"ssm": new_ssm}
+    elif cfg.family == "hybrid":
+        every = cfg.hybrid_attn_every
+        n_groups = cfg.n_layers // every
+        grouped = jax.tree.map(
+            lambda a: a.reshape(n_groups, every, *a.shape[1:]),
+            params["blocks"])
+        shared = params["shared_attn"]
+
+        def group_body(x, xs):
+            gbp, ssm_c, attn_c = xs
+
+            def inner(x, ys):
+                bp, c = ys
+                h = L.norm_apply(bp["ln"], x, cfg)
+                y, c2 = S.ssm_decode_step(bp["ssm"], h, c, cfg)
+                return x + y, c2
+
+            x, new_ssm_c = jax.lax.scan(inner, x, (gbp, ssm_c))
+            h = L.norm_apply(shared["ln"], x, cfg)
+            a, new_attn_c = L.attention_apply(
+                shared["attn"], h, cfg, positions=positions, window=0,
+                cache=attn_c, cache_index=idx)
+            x = x + a
+            h = L.norm_apply(shared["ln2"], x, cfg)
+            x = x + L.mlp_apply(shared["mlp"], h, cfg)
+            return x, (new_ssm_c, new_attn_c)
+
+        x, (new_ssm, new_attn) = jax.lax.scan(
+            group_body, x, (grouped, cache["ssm"], cache["attn"]))
+        new_cache = {"ssm": new_ssm, "attn": new_attn}
+    else:
+        windows = window_schedule(cfg)
+
+        def body(x, xs):
+            bp, window, c = xs
+            h = L.norm_apply(bp["ln1"], x, cfg)
+            a, c2 = L.attention_apply(bp["attn"], h, cfg, positions=positions,
+                                      window=window, cache=c, cache_index=idx)
+            x = x + a
+            h = L.norm_apply(bp["ln2"], x, cfg)
+            if cfg.is_moe:
+                y, _ = L.moe_apply(bp["moe"], h, cfg)
+            else:
+                y = L.mlp_apply(bp["mlp"], h, cfg)
+            return x + y, c2
+
+        x, new_attn = jax.lax.scan(body, x,
+                                   (params["blocks"], windows, cache["attn"]))
+        new_cache = {"attn": new_attn}
+
+    return _logits(params, x, cfg), new_cache

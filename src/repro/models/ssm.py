@@ -1,0 +1,190 @@
+"""Mamba2 (SSD — state-space duality) blocks, training + decode paths.
+
+Chunked SSD algorithm (Dao & Gu 2024): the sequence is split into chunks;
+within-chunk interactions are an attention-like masked matmul (MXU-friendly),
+cross-chunk interactions flow through a scanned per-chunk state recurrence.
+Decode is the O(1)-per-token recurrent update on (B, H, P, N) state.
+
+Used by ``mamba2-2.7b`` (pure SSM) and ``zamba2-2.7b`` (hybrid, with a shared
+attention block interleaved by models/model.py).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+Params = dict[str, Any]
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    heads = d_in // cfg.ssm_head_dim
+    n = cfg.ssm_state
+    conv_dim = d_in + 2 * n                    # x, B, C share the conv
+    return d_in, heads, n, conv_dim
+
+
+def ssm_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    d_in, heads, n, conv_dim = _dims(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    proj_out = 2 * d_in + 2 * n + heads        # z, x, B, C, dt
+    return {
+        "in_proj": (jax.random.normal(k1, (d, proj_out)) * d ** -0.5).astype(dt),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm_conv_width, conv_dim))
+                   * cfg.ssm_conv_width ** -0.5).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, heads)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "d_skip": jnp.ones((heads,), jnp.float32),
+        "norm": jnp.ones((d_in,), dt),
+        "out_proj": (jax.random.normal(k3, (d_in, d)) * d_in ** -0.5).astype(dt),
+    }
+
+
+def _split_proj(zxbcdt: Array, cfg: ModelConfig):
+    d_in, heads, n, _ = _dims(cfg)
+    z, xs, B, C, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    return z, xs, B, C, dt
+
+
+def _conv_full(xbc: Array, params: Params, cfg: ModelConfig) -> Array:
+    """Causal depthwise conv over (B, S, conv_dim)."""
+    w = params["conv_w"].astype(jnp.float32)           # (kw, conv_dim)
+    kw = w.shape[0]
+    x = xbc.astype(jnp.float32)
+    x = jnp.pad(x, ((0, 0), (kw - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        x, w[:, None, :],                              # (kw, 1, conv_dim)
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=xbc.shape[-1])
+    return jax.nn.silu(out + params["conv_b"].astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _ssd_chunked(x: Array, dt: Array, a: Array, B: Array, C: Array,
+                 chunk: int):
+    """Chunked SSD. x: (b,s,h,p); dt: (b,s,h) (>0); a: (h,) (<0);
+    B, C: (b,s,n) (single group, broadcast over heads).
+    Returns y: (b,s,h,p)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc, cl = s // chunk, chunk
+
+    xr = x.reshape(b, nc, cl, h, p)
+    dtr = dt.reshape(b, nc, cl, h)
+    Br = B.reshape(b, nc, cl, n)
+    Cr = C.reshape(b, nc, cl, n)
+    dA = dtr * a                                        # (b,nc,cl,h) negative
+    dA_cs = jnp.cumsum(dA, axis=2)                      # within-chunk cumsum
+    xdt = xr * dtr[..., None]
+
+    # --- diagonal (within-chunk) term: attention-like masked matmul ---
+    cb = jnp.einsum("bzin,bzjn->bzij", Cr, Br)          # (b,nc,cl,cl)
+    li = dA_cs[:, :, :, None, :]                        # i index -> axis 2
+    lj = dA_cs[:, :, None, :, :]                        # j index
+    decay = jnp.exp(jnp.clip(li - lj, -60.0, 0.0))      # (b,nc,cl,cl,h)
+    causal = jnp.tril(jnp.ones((cl, cl), bool))
+    scores = cb[..., None] * jnp.where(causal[None, None, :, :, None],
+                                       decay, 0.0)
+    y_diag = jnp.einsum("bzijh,bzjhp->bzihp", scores, xdt)
+
+    # --- per-chunk final states ---
+    decay_to_end = jnp.exp(jnp.clip(dA_cs[:, :, -1:, :] - dA_cs, -60.0, 0.0))
+    states = jnp.einsum("bzjn,bzjh,bzjhp->bzhpn", Br, decay_to_end, xdt)
+
+    # --- cross-chunk recurrence ---
+    chunk_decay = jnp.exp(jnp.clip(dA_cs[:, :, -1, :], -60.0, 0.0))  # (b,nc,h)
+
+    def step(carry, inp):
+        st, dec = inp                                   # (b,h,p,n), (b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry                               # emit PREVIOUS state
+
+    init = jnp.zeros((b, h, p, n), x.dtype)
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)       # (b,nc,h,p,n)
+
+    # --- off-diagonal term: contribution of previous chunks' states ---
+    c_decay = jnp.exp(jnp.clip(dA_cs, -60.0, 0.0))      # decay from chunk start
+    y_off = jnp.einsum("bzin,bzih,bzhpn->bzihp", Cr, c_decay, prev_states)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final
+
+
+def ssm_apply(params: Params, x: Array, cfg: ModelConfig):
+    """Full-sequence SSD pass. x: (B, S, d) -> (y, decode_cache).
+
+    decode_cache = {"state": (B,h,p,n), "conv": (B, kw-1, conv_dim)} — the
+    recurrent state after the last token, so prefill hands off to
+    ``ssm_decode_step`` directly."""
+    d_in, heads, n, conv_dim = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, params["in_proj"])
+    z, xs, B, C, dt = _split_proj(zxbcdt, cfg)
+    xbc_pre = jnp.concatenate([xs, B, C], axis=-1)
+    conv_tail = xbc_pre[:, -(cfg.ssm_conv_width - 1):, :]
+    xbc = _conv_full(xbc_pre, params, cfg)
+    xs, B, C = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])                       # (h,) negative
+    xh = xs.reshape(*xs.shape[:-1], heads, cfg.ssm_head_dim)
+    y, final = _ssd_chunked(xh.astype(jnp.float32), dt, a,
+                            B.astype(jnp.float32), C.astype(jnp.float32),
+                            cfg.ssm_chunk)
+    y = y + params["d_skip"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(*x.shape[:-1], d_in)
+    # gated RMSNorm then output projection
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    rms = jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + 1e-6)
+    y = (y * rms).astype(x.dtype) * params["norm"]
+    cache = {"state": final, "conv": conv_tail.astype(jnp.float32)}
+    return jnp.einsum("bsk,kd->bsd", y, params["out_proj"]), cache
+
+
+def ssm_decode_init(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    d_in, heads, n, conv_dim = _dims(cfg)
+    return {
+        "state": jnp.zeros((batch, heads, cfg.ssm_head_dim, n), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+    }
+
+
+def ssm_decode_step(params: Params, x: Array, cache: Params,
+                    cfg: ModelConfig):
+    """Single-token recurrent update. x: (B, 1, d)."""
+    d_in, heads, n, conv_dim = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, params["in_proj"])[:, 0]
+    z, xs, B, C, dt = _split_proj(zxbcdt, cfg)
+    xbc_new = jnp.concatenate([xs, B, C], axis=-1)      # (B, conv_dim)
+    window = jnp.concatenate(
+        [cache["conv"], xbc_new[:, None, :].astype(cache["conv"].dtype)], axis=1)
+    w = params["conv_w"].astype(jnp.float32)            # (kw, conv_dim)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w)
+    xbc = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32))
+    xs, B, C = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,h)
+    a = -jnp.exp(params["a_log"])
+    xh = xs.reshape(-1, heads, cfg.ssm_head_dim)
+    decay = jnp.exp(dt * a)                             # (B, h)
+    state = cache["state"] * decay[..., None, None] + jnp.einsum(
+        "bn,bhp,bh->bhpn", B, xh, dt)
+    y = jnp.einsum("bn,bhpn->bhp", C, state)
+    y = y + params["d_skip"][:, None] * xh
+    y = y.reshape(-1, d_in) * jax.nn.silu(z.astype(jnp.float32))
+    rms = jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + 1e-6)
+    y = (y * rms).astype(x.dtype) * params["norm"]
+    out = jnp.einsum("bk,kd->bd", y, params["out_proj"])[:, None, :]
+    new_cache = {"state": state.astype(cache["state"].dtype),
+                 "conv": window[:, 1:]}
+    return out, new_cache

@@ -1,0 +1,36 @@
+"""Elastic scaling: re-shard a checkpointed state onto a different mesh.
+
+Scale-up/down = restore on the new mesh: ``reshard_plan`` computes the
+target NamedShardings from the same rule table used at train time, so the
+plan is always consistent with what the (re)compiled step expects. Nothing
+about the checkpoint format depends on the mesh it was written from (leaves
+are stored unsharded), which is what makes 8 -> 4 -> 8 device moves a pure
+restore (tests/test_distributed.py).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.checkpoint import store
+from repro.sharding import rules
+
+
+def reshard_plan(params_like: Any, new_mesh: Mesh) -> Any:
+    """Target shardings for ``params_like`` on ``new_mesh``."""
+    return rules.param_shardings(params_like, new_mesh)
+
+
+def restore_on_mesh(ckpt_dir: str, step: int, params_like: Any,
+                    new_mesh: Mesh) -> Any:
+    """Checkpoint -> params resharded for ``new_mesh`` (the elastic event)."""
+    return store.restore(ckpt_dir, step, params_like,
+                         shardings=reshard_plan(params_like, new_mesh))
+
+
+def reshard_live(tree: Any, new_mesh: Mesh) -> Any:
+    """In-memory reshard (survivor-only recovery, no checkpoint round-trip)."""
+    target = reshard_plan(tree, new_mesh)
+    return jax.tree.map(jax.device_put, tree, target)

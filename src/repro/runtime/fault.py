@@ -1,0 +1,90 @@
+"""Fault tolerance: checkpointed step loop with failure recovery and
+straggler tracking.
+
+``FaultTolerantRunner`` wraps any (state, batch) -> state step function:
+  * checkpoints every ``ckpt_every`` steps (atomic, see checkpoint/store);
+  * on a step failure (node loss, preemption — surfaced as an exception
+    from the runtime), rolls back to the last checkpoint and replays; the
+    deterministic data pipeline (data/tokens.py) guarantees replayed
+    microbatches are bit-identical;
+  * tracks per-step wall time; steps slower than ``straggler_factor`` x the
+    running median are recorded so the controller can exclude the offending
+    hosts at the next elastic event (runtime/elastic.py).
+
+On a real multi-host cluster the exception source is jax's distributed
+runtime (missing heartbeat -> coordinator error); here failures are
+injected by tests, which exercises the identical recovery path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable
+
+from repro.checkpoint import store
+
+
+@dataclasses.dataclass
+class StragglerStats:
+    times: list[float] = dataclasses.field(default_factory=list)
+    flagged_steps: list[int] = dataclasses.field(default_factory=list)
+
+    def record(self, step: int, dt: float, factor: float) -> bool:
+        self.times.append(dt)
+        if len(self.times) >= 8:
+            med = statistics.median(self.times[-64:])
+            if dt > factor * med:
+                self.flagged_steps.append(step)
+                return True
+        return False
+
+
+class FaultTolerantRunner:
+    def __init__(self, step_fn: Callable[[Any, Any], Any],
+                 batch_fn: Callable[[int], Any], ckpt_dir: str,
+                 ckpt_every: int = 10, max_restarts: int = 16,
+                 straggler_factor: float = 3.0):
+        self.step_fn = step_fn
+        self.batch_fn = batch_fn
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.max_restarts = max_restarts
+        self.straggler = StragglerStats()
+        self.straggler_factor = straggler_factor
+        self.restarts = 0
+
+    def _save(self, state: Any, step: int) -> None:
+        store.save(self.ckpt_dir, step, state, extra={"wall": time.time()})
+
+    def _resume_point(self, state: Any) -> tuple[Any, int]:
+        last = store.latest_step(self.ckpt_dir)
+        if last is None:
+            return state, 0
+        return store.restore(self.ckpt_dir, last, state), last
+
+    def run(self, state: Any, n_steps: int,
+            on_step: Callable[[int, Any], None] | None = None) -> Any:
+        """Run to ``n_steps`` total, resuming/replaying through failures."""
+        state, step = self._resume_point(state)
+        if step == 0:
+            self._save(state, 0)
+        while step < n_steps:
+            try:
+                t0 = time.monotonic()
+                batch = self.batch_fn(step)
+                state = self.step_fn(state, batch)
+                dt = time.monotonic() - t0
+                step += 1
+                self.straggler.record(step, dt, self.straggler_factor)
+                if on_step is not None:
+                    on_step(step, state)
+                if step % self.ckpt_every == 0:
+                    self._save(state, step)
+            except Exception:
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise
+                state, step = self._resume_point(state)
+        self._save(state, step)
+        return state

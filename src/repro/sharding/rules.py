@@ -1,0 +1,233 @@
+"""Sharding rules: parameter / optimizer / activation / cache PartitionSpecs.
+
+The scheme (DESIGN.md section 4):
+  * DP    — batch over ("pod", "data")
+  * FSDP  — parameter d_model-like dims over "data" (ZeRO-3: all-gather on
+            use, reduce-scatter on grad; expressed through PartitionSpecs,
+            XLA SPMD inserts the collectives)
+  * TP    — heads / ffn / vocab dims over "model"
+  * EP    — MoE expert dim over "model"
+  * SP    — long-context KV cache sequence over "model" (and "data" when
+            the batch can't fill it)
+
+Every leaf is resolved through an ordered CANDIDATE list; the first spec
+whose every named dim divides evenly into the mesh is taken, ending in full
+replication — so one rule table serves all 10 architectures (28-head
+qwen2-vl falls through head-sharding to d_model-sharding, 8-expert mixtral
+falls through EP to within-expert TP, etc.).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+Axis = str | tuple[str, ...] | None
+
+# name -> list of (ndim, core spec) candidates, tried in order.
+# Specs are written for the FULL array ndim (stacked L / group dims included).
+_CAND: dict[str, list[tuple[int, tuple[Axis, ...]]]] = {
+    "embed": [(2, ("model", "data")), (2, (None, "data")), (2, (None, None))],
+    "lm_head": [(2, ("data", "model")), (2, (None, "model"))],
+    # attention projections (stacked (L, d, h, hd) / shared (d, h, hd))
+    "wq": [(4, (None, "data", "model", None)), (4, (None, "data", None, "model")),
+           (4, (None, ("data", "model"), None, None)), (4, (None, "data", None, None)),
+           (3, ("data", "model", None)), (3, ("data", None, "model")),
+           (3, ("data", None, None))],
+    "wo": [(3, (None, "model", "data")), (3, (None, None, "data")),
+           (2, ("model", "data")), (2, (None, "data"))],
+    # dense MLP (L, d, ff) / shared (d, ff); MoE (L, E, d, ff)
+    "w_up": [(4, (None, "model", "data", None)), (4, (None, None, "data", "model")),
+             (4, (None, None, "data", None)),
+             (3, (None, "data", "model")), (3, (None, "data", None)),
+             (2, ("data", "model")), (2, ("data", None))],
+    "w_down": [(4, (None, "model", None, "data")), (4, (None, None, "model", "data")),
+               (4, (None, None, None, "data")),
+               (3, (None, "model", "data")), (3, (None, None, "data")),
+               (2, ("model", "data")), (2, (None, "data"))],
+    "router": [(3, (None, "data", None)), (2, ("data", None))],
+    # SSM
+    "in_proj": [(3, (None, "data", "model")), (3, (None, "data", None)),
+                (2, ("data", None))],
+    "out_proj": [(3, (None, "model", "data")), (3, (None, None, "data")),
+                 (2, (None, "data"))],
+}
+_CAND["wk"] = _CAND["wq"]
+_CAND["wv"] = _CAND["wq"]
+_CAND["w_gate"] = _CAND["w_up"]
+# Small leaves (norm scales, conv, per-head scalars): replicate.
+_REPLICATED = {"scale", "norm", "conv_w", "conv_b", "a_log", "dt_bias",
+               "d_skip"}
+
+
+def _divides(shape: tuple[int, ...], spec: tuple[Axis, ...],
+             mesh: Mesh) -> bool:
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            continue
+        axes = (ax,) if isinstance(ax, str) else ax
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        if dim % size != 0:
+            return False
+    return True
+
+
+def _fsdp_axis(spec: tuple[Axis, ...]) -> tuple[Axis, ...]:
+    """Rewrite a TP/FSDP-hybrid candidate into pure ZeRO-3: drop TP dims,
+    shard the FSDP dim over the flattened ("data", "model") axes."""
+    out: list[Axis] = []
+    for ax in spec:
+        if ax == "data" or (isinstance(ax, tuple) and "data" in ax):
+            out.append(("data", "model"))
+        else:
+            out.append(None)
+    return tuple(out)
+
+
+_MOE_LEAVES = {"w_up", "w_gate", "w_down"}
+
+
+def _leaf_spec(name: str, shape: tuple[int, ...], mesh: Mesh,
+               mode: str = "tp") -> P:
+    if name in _REPLICATED or name not in _CAND:
+        return P()
+    # mode "ep": FSDP for the dense stack, native EP for expert tensors
+    # (4-D moe leaves keep their "model"-sharded expert dim).
+    fsdp_this = (mode == "fsdp"
+                 or (mode == "ep" and not (name in _MOE_LEAVES
+                                           and len(shape) == 4)))
+    for ndim, spec in _CAND[name]:
+        if fsdp_this:
+            spec = _fsdp_axis(spec)
+        if ndim == len(shape) and _divides(shape, spec, mesh):
+            return P(*spec)
+    return P()
+
+
+def param_specs(params: Any, mesh: Mesh, mode: str = "tp") -> Any:
+    """PartitionSpec tree matching ``params`` (works on shapes or arrays).
+
+    mode="tp"   — Megatron TP over "model" + FSDP over "data" (baseline).
+    mode="fsdp" — pure ZeRO-3 over the flattened mesh; no TP collectives.
+    """
+    def spec_of(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        return _leaf_spec(name or "", tuple(leaf.shape), mesh, mode)
+
+    return jax.tree_util.tree_map_with_path(spec_of, params)
+
+
+def param_shardings(params: Any, mesh: Mesh, mode: str = "tp") -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, mesh, mode))
+
+
+# ----------------------------------------------------------------------------
+# Batch / cache specs
+# ----------------------------------------------------------------------------
+
+def _dp(mesh: Mesh) -> Axis:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _fits(dim: int, ax: Axis, mesh: Mesh) -> bool:
+    axes = (ax,) if isinstance(ax, str) else ax
+    return dim % int(np.prod([mesh.shape[a] for a in axes])) == 0
+
+
+def batch_specs(batch: Any, mesh: Mesh, mode: str = "tp") -> Any:
+    """Specs for a train/prefill/decode input batch pytree.
+
+    Leading dim = global batch, sharded over DP axes when divisible
+    (long_500k batch=1 falls back to replication); trailing dims replicated.
+    In fsdp mode the batch spreads over the whole mesh.
+    """
+    dp = _dp(mesh)
+    if mode == "fsdp":
+        axes = tuple(a for a in ("pod", "data", "model")
+                     if a in mesh.axis_names)
+        dp = axes if len(axes) > 1 else axes[0]
+
+    def spec_of(leaf):
+        shape = tuple(leaf.shape)
+        if not shape:
+            return P()
+        axes = (dp,) if isinstance(dp, str) else tuple(dp)
+        # progressive fallback: drop axes from the right until divisible
+        while axes and shape[0] % int(np.prod([mesh.shape[a]
+                                               for a in axes])) != 0:
+            axes = axes[:-1]
+        first = (axes if len(axes) > 1 else axes[0]) if axes else None
+        return P(first, *([None] * (len(shape) - 1)))
+
+    return jax.tree.map(spec_of, batch)
+
+
+def cache_specs(cache: Any, cfg: ModelConfig, mesh: Mesh) -> Any:
+    """Decode-cache specs.
+
+    Attention KV leaves (L, B, S, KV, hd): batch over DP when divisible;
+    KV heads over "model" when divisible, else SP — sequence over "model"
+    (and over DP too when the batch can't use it, e.g. long_500k B=1).
+    SSM state leaves (L, B, H, P, N) / conv (L, B, kw-1, C): batch over DP,
+    SSM heads over "model".
+    """
+    dp = _dp(mesh)
+    msize = mesh.shape.get("model", 1)
+
+    def spec_of(path, leaf):
+        shape = tuple(leaf.shape)
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        # find batch dim: first dim after the leading stack dims — caches are
+        # built as (stack..., B, ...): stack depth is 1 (L or groups) or 2
+        # (zamba groups x every). Identify B as the dim matching no stack.
+        if name in ("k", "v"):
+            # (..., B, S, KV, hd)
+            lead = len(shape) - 4
+            b, s, kv, hd = shape[-4:]
+            b_ax = dp if _fits(b, dp, mesh) else None
+            if kv % msize == 0:
+                spec = (None,) * lead + (b_ax, None, "model", None)
+            else:
+                s_ax: Axis = "model"
+                if b_ax is None and _fits(s, tuple(mesh.axis_names), mesh):
+                    s_ax = tuple(mesh.axis_names)   # SP over the whole mesh
+                if not _fits(s, s_ax, mesh):
+                    s_ax = None
+                spec = (None,) * lead + (b_ax, s_ax, None, None)
+            return P(*spec)
+        if name == "state":
+            # (..., B, H, P, N)
+            lead = len(shape) - 4
+            b, h = shape[-4], shape[-3]
+            b_ax = dp if _fits(b, dp, mesh) else None
+            h_ax = "model" if h % msize == 0 else None
+            return P(*((None,) * lead + (b_ax, h_ax, None, None)))
+        if name == "conv":
+            lead = len(shape) - 3
+            b = shape[-3]
+            b_ax = dp if _fits(b, dp, mesh) else None
+            return P(*((None,) * lead + (b_ax, None, None)))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_of, cache)
+
+
+def logits_spec(mesh: Mesh, batch: int, vocab: int) -> P:
+    dp = _dp(mesh)
+    b_ax = dp if _fits(batch, dp, mesh) else None
+    v_ax = "model" if vocab % mesh.shape.get("model", 1) == 0 else None
+    return P(b_ax, None, v_ax)

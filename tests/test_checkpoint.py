@@ -1,0 +1,71 @@
+"""Checkpoint store: roundtrip, integrity, atomicity, resume."""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+
+
+@pytest.fixture
+def tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "nested": {"b": jnp.ones((2, 2), jnp.bfloat16),
+                       "c": [jnp.zeros(3), jnp.asarray(5)]}}
+
+
+def test_roundtrip(tmp_path, tree):
+    d = str(tmp_path)
+    store.save(d, 7, tree, extra={"loss": 1.5})
+    assert store.latest_step(d) == 7
+    out = store.restore(d, 7, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert store.restore_extra(d, 7)["loss"] == 1.5
+
+
+import jax  # noqa: E402  (used in roundtrip comparison)
+
+
+def test_corruption_detected(tmp_path, tree):
+    d = str(tmp_path)
+    path = store.save(d, 1, tree)
+    victim = os.path.join(path, "a.npy")
+    arr = np.load(victim)
+    arr_flat = arr.ravel()
+    arr_flat[0] += 1
+    np.save(victim, arr)
+    with pytest.raises(IOError, match="corruption"):
+        store.restore(d, 1, tree)
+    # verify=False permits (for forensics)
+    store.restore(d, 1, tree, verify=False)
+
+
+def test_latest_ignores_torn_tmp(tmp_path, tree):
+    d = str(tmp_path)
+    store.save(d, 3, tree)
+    os.makedirs(os.path.join(d, "step_00000009.tmp"))
+    os.makedirs(os.path.join(d, "step_00000010"))  # no manifest => torn
+    assert store.latest_step(d) == 3
+
+
+def test_save_overwrites_same_step(tmp_path, tree):
+    d = str(tmp_path)
+    store.save(d, 2, tree)
+    tree2 = jax.tree.map(lambda a: a * 0 + 9, tree)
+    store.save(d, 2, tree2)
+    out = store.restore(d, 2, tree)
+    assert float(np.asarray(jax.tree.leaves(out)[0]).ravel()[0]) == 9.0
+
+
+def test_manifest_contents(tmp_path, tree):
+    d = str(tmp_path)
+    p = store.save(d, 4, tree)
+    with open(os.path.join(p, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["step"] == 4
+    assert "a" in man["leaves"]
+    assert man["leaves"]["a"]["shape"] == [3, 4]
+    assert len(man["leaves"]["a"]["sha256"]) == 64

@@ -1,0 +1,81 @@
+"""Fault tolerance: failure recovery determinism + straggler tracking."""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tokens import DataConfig, global_batch, shard_batch
+from repro.runtime.fault import FaultTolerantRunner, StragglerStats
+
+
+def _step(state, batch):
+    return {"w": state["w"] + jnp.sum(batch["tokens"] % 7),
+            "n": state["n"] + 1}
+
+
+def _data(step):
+    cfg = DataConfig(vocab=100, seq_len=8, global_batch=4, seed=1)
+    b = global_batch(cfg, step)
+    return {"tokens": jnp.asarray(b["tokens"])}
+
+
+def test_recovery_reproduces_failure_free_run(tmp_path):
+    init = {"w": jnp.float32(0.0), "n": jnp.int32(0)}
+    clean = FaultTolerantRunner(_step, _data, str(tmp_path / "clean"),
+                                ckpt_every=5)
+    ref = clean.run(init, 23)
+
+    fail_at = {3, 11, 12, 19}
+    calls = {"n": 0}
+
+    def flaky(state, batch):
+        calls["n"] += 1
+        # fail the FIRST time we hit each designated step
+        step = int(state["n"])
+        if step in fail_at:
+            fail_at.discard(step)
+            raise RuntimeError(f"injected node failure at step {step}")
+        return _step(state, batch)
+
+    runner = FaultTolerantRunner(flaky, _data, str(tmp_path / "flaky"),
+                                 ckpt_every=5)
+    out = runner.run(init, 23)
+    assert runner.restarts == 4
+    assert int(out["n"]) == int(ref["n"]) == 23
+    assert float(out["w"]) == float(ref["w"])   # bit-identical replay
+
+
+def test_resume_from_disk(tmp_path):
+    init = {"w": jnp.float32(0.0), "n": jnp.int32(0)}
+    d = str(tmp_path / "resume")
+    r1 = FaultTolerantRunner(_step, _data, d, ckpt_every=5)
+    r1.run(init, 10)
+    # new process/runner picks up from the checkpoint, not from scratch
+    seen = []
+    r2 = FaultTolerantRunner(_step, _data, d, ckpt_every=5)
+    out = r2.run(init, 15, on_step=lambda s, _: seen.append(s))
+    assert seen == [11, 12, 13, 14, 15]
+    ref = FaultTolerantRunner(_step, _data, str(tmp_path / "ref"),
+                              ckpt_every=5).run(init, 15)
+    assert float(out["w"]) == float(ref["w"])
+
+
+def test_straggler_flagging():
+    st = StragglerStats()
+    for i in range(20):
+        assert not st.record(i, 1.0, factor=3.0)
+    assert st.record(20, 10.0, factor=3.0)
+    assert st.flagged_steps == [20]
+
+
+def test_data_pipeline_deterministic_and_shardable():
+    cfg = DataConfig(vocab=50, seq_len=16, global_batch=8, seed=4, n_shards=4)
+    a = shard_batch(cfg, step=3, shard=2)
+    b = shard_batch(cfg, step=3, shard=2)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    # shards are disjoint slices of a consistent global batch
+    g = global_batch(cfg, step=3)
+    assert g["tokens"].shape == (8, 16)
+    np.testing.assert_array_equal(g["tokens"][4:6], a["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])

@@ -1,0 +1,90 @@
+"""Linear-complexity engines vs per-pair oracles + paper-table phenomena."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lc, retrieval
+from repro.core.histogram import pair_from_corpus
+from repro.core.relaxations import act_dir, omr_dir, rwmd_dir
+from repro.data.synth import make_image_like, make_text_like
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_text_like(n_docs=14, vocab=96, m=8, doc_len=30, hmax=16,
+                          seed=3)
+
+
+@pytest.mark.parametrize("iters", [0, 1, 2, 5])
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_lc_act_equals_pairwise(corpus, iters, use_kernels):
+    c, _ = corpus
+    t = lc.lc_act_scores(c, c.ids[0], c.w[0], iters=iters,
+                         use_kernels=use_kernels)
+    for u in range(c.n):
+        x, q, C = pair_from_corpus(c, u, 0)
+        ref = float(act_dir(x, q, C, iters=iters))
+        assert abs(ref - float(t[u])) < 1e-5
+
+
+def test_lc_omr_equals_pairwise(corpus):
+    c, _ = corpus
+    t = lc.lc_omr_scores(c, c.ids[1], c.w[1])
+    for u in range(c.n):
+        x, q, C = pair_from_corpus(c, u, 1)
+        assert abs(float(omr_dir(x, q, C)) - float(t[u])) < 1e-5
+
+
+def test_lc_rwmd_reverse_direction(corpus):
+    c, _ = corpus
+    t = lc.lc_rwmd_scores_rev(c, c.ids[2], c.w[2], block=4)
+    for u in range(c.n):
+        x, q, C = pair_from_corpus(c, u, 2)
+        assert abs(float(rwmd_dir(q, x, C.T)) - float(t[u])) < 1e-5
+
+
+def test_self_distance_zero(corpus):
+    c, _ = corpus
+    t = lc.lc_act_scores(c, c.ids[5], c.w[5], iters=3)
+    assert float(t[5]) < 1e-6
+
+
+def test_symmetric_scores_is_max():
+    a = jnp.asarray([[0.0, 1.0], [2.0, 0.0]])
+    s = lc.symmetric_scores(a)
+    assert np.allclose(np.asarray(s), [[0, 2], [2, 0]])
+
+
+def test_table6_dense_rwmd_collapse():
+    """Paper Table 6: with background included, RWMD is ~0 for every pair
+    (random neighbors) while OMR/ACT still rank correctly."""
+    c, labels = make_image_like(n_images=24, include_background=True, seed=1)
+    rw = lc.lc_rwmd_scores(c, c.ids[0], c.w[0])
+    assert float(jnp.max(rw)) < 1e-6          # total collapse
+    om = lc.lc_omr_scores(c, c.ids[0], c.w[0])
+    assert float(jnp.max(om)) > 1e-3          # OMR still discriminates
+    S_omr = retrieval.all_pairs_scores(c, method="omr")
+    S_rw = retrieval.all_pairs_scores(c, method="rwmd")
+    p_omr = retrieval.precision_at_l(S_omr, jnp.asarray(labels), 4)
+    p_rw = retrieval.precision_at_l(S_rw, jnp.asarray(labels), 4)
+    assert p_omr > p_rw + 0.2
+
+
+def test_act_precision_at_least_rwmd_sparse():
+    c, labels = make_text_like(n_docs=40, n_classes=5, vocab=256, m=12,
+                               doc_len=30, hmax=24, seed=7)
+    labels = jnp.asarray(labels)
+    S_rw = retrieval.all_pairs_scores(c, method="rwmd")
+    S_a = retrieval.all_pairs_scores(c, method="act", iters=3)
+    assert (retrieval.precision_at_l(S_a, labels, 8)
+            >= retrieval.precision_at_l(S_rw, labels, 8) - 0.02)
+
+
+def test_search_top_l(corpus):
+    c, _ = corpus
+    scores, idx = retrieval.search(c, c.ids[3], c.w[3], top_l=5,
+                                   method="act", iters=2)
+    assert idx.shape == (5,)
+    assert int(idx[0]) == 3                    # self is nearest
+    assert float(scores[0]) < 1e-6
+    assert np.all(np.diff(np.asarray(scores)) >= -1e-7)

@@ -1,0 +1,109 @@
+"""Per-architecture smoke tests (reduced configs, CPU) + consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, smoke_config
+from repro.models import model as M
+from repro.models.config import SHAPES, cells_for, LONG_CONTEXT_ARCHS
+
+B, S = 2, 16
+
+
+def _batch(cfg, rng):
+    if cfg.frontend != "none":
+        return {"embeddings": jax.random.normal(rng, (B, S, cfg.d_model)),
+                "labels": jnp.zeros((B, S), jnp.int32)}
+    return {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab),
+            "labels": jnp.zeros((B, S), jnp.int32)}
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_smoke_forward_train_decode(name):
+    cfg = smoke_config(name)
+    rng = jax.random.PRNGKey(0)
+    params = M.init(rng, cfg)
+    batch = _batch(cfg, rng)
+    loss = M.train_loss(params, batch, cfg)
+    assert np.isfinite(float(loss)), name
+    logits, aux, _ = M.forward(params, batch, cfg)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    # prefill + one decode step
+    pl, cache = M.prefill(params, batch, cfg)
+    assert pl.shape == (B, 1, cfg.vocab)
+    dc = M.init_decode_cache(cfg, B, S, dtype=jnp.float32)
+    db = {"cache_index": jnp.int32(S - 1)}
+    if cfg.frontend != "none":
+        db["embeddings"] = jax.random.normal(rng, (B, 1, cfg.d_model))
+    else:
+        db["tokens"] = jnp.zeros((B, 1), jnp.int32)
+    dl, _ = M.decode_step(params, db, dc, cfg)
+    assert dl.shape == (B, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(dl, np.float32)).all()
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_param_count_matches_init(name):
+    cfg = get_config(name)
+    shapes = jax.eval_shape(lambda: M.init(jax.random.PRNGKey(0), cfg))
+    n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+    assert n == cfg.param_count(), (name, n, cfg.param_count())
+
+
+@pytest.mark.parametrize("name", ["olmo-1b", "mamba2-2.7b", "zamba2-2.7b",
+                                  "gemma3-27b"])
+def test_decode_matches_full_forward(name):
+    cfg = smoke_config(name)
+    rng = jax.random.PRNGKey(1)
+    params = M.init(rng, cfg)
+    toks = jax.random.randint(rng, (B, S), 0, cfg.vocab)
+    full, _, _ = M.forward(params, {"tokens": toks}, cfg)
+    cache = M.init_decode_cache(cfg, B, S, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        dl, cache = M.decode_step(
+            params, {"tokens": toks[:, t:t + 1],
+                     "cache_index": jnp.int32(t)}, cache, cfg)
+        outs.append(dl)
+    err = float(jnp.max(jnp.abs(jnp.concatenate(outs, 1) - full)))
+    assert err < 2e-2, (name, err)
+
+
+def test_sliding_window_schedule_gemma():
+    cfg = get_config("gemma3-27b")
+    ws = np.asarray(M.window_schedule(cfg))
+    assert ws.shape == (62,)
+    assert (ws[5::6] == 0).all()              # every 6th layer global
+    assert (np.delete(ws, np.arange(5, 62, 6)) == 1024).all()
+
+
+def test_window_changes_output():
+    """A local window must actually mask long-range attention."""
+    import dataclasses
+    cfg = smoke_config("gemma3-27b")
+    cfg_nw = dataclasses.replace(cfg, sliding_window=0, local_global_ratio=0)
+    rng = jax.random.PRNGKey(2)
+    params = M.init(rng, cfg)
+    toks = jax.random.randint(rng, (1, 16), 0, cfg.vocab)
+    a, _, _ = M.forward(params, {"tokens": toks}, cfg)
+    b, _, _ = M.forward(params, {"tokens": toks}, cfg_nw)
+    assert float(jnp.max(jnp.abs(a - b))) > 1e-6
+
+
+def test_moe_router_load_balance_loss_positive():
+    cfg = smoke_config("mixtral-8x22b")
+    rng = jax.random.PRNGKey(3)
+    params = M.init(rng, cfg)
+    _, aux, _ = M.forward(params, _batch(cfg, rng), cfg)
+    assert float(aux) > 0.0
+
+
+def test_long_context_assignment():
+    assert LONG_CONTEXT_ARCHS == {"mamba2-2.7b", "zamba2-2.7b", "gemma3-27b"}
+    assert "long_500k" in cells_for("mamba2-2.7b")
+    assert "long_500k" not in cells_for("nemotron-4-340b")
+    total = sum(len(cells_for(a)) for a in ARCH_IDS)
+    assert total == 33
+    assert SHAPES["long_500k"].kind == "decode"

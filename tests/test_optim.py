@@ -1,0 +1,70 @@
+"""Optimizer, schedule, grad accumulation, int8 compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adamw
+from repro.optim.grad_utils import (accumulate_grads, compress_int8,
+                                    decompress_int8)
+
+
+def test_adamw_converges_quadratic():
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = adamw.init(params)
+    cfg = adamw.AdamWConfig(peak_lr=0.1, min_lr=0.01, warmup_steps=5,
+                            total_steps=300, weight_decay=0.0)
+    loss_fn = lambda p: jnp.sum((p["w"] - target) ** 2)
+    for _ in range(300):
+        grads = jax.grad(loss_fn)(params)
+        params, state, _ = adamw.update(grads, state, params, cfg)
+    assert float(loss_fn(params)) < 1e-3
+
+
+def test_schedule_shape():
+    cfg = adamw.AdamWConfig(peak_lr=1.0, min_lr=0.1, warmup_steps=10,
+                            total_steps=100)
+    lrs = [float(adamw.schedule(jnp.int32(s), cfg)) for s in range(101)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[10] - 1.0) < 1e-6
+    assert lrs[100] <= 0.1 + 1e-6
+    assert all(a >= b - 1e-9 for a, b in zip(lrs[10:], lrs[11:]))  # decay
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones(4) * 10.0}
+    clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 20.0) < 1e-5
+    assert abs(float(adamw.global_norm(clipped)) - 1.0) < 1e-5
+
+
+def test_accumulate_grads_matches_monolithic():
+    params = {"w": jnp.asarray([[1.0, 2.0], [3.0, 4.0]])}
+    batch = {"x": jnp.arange(8.0).reshape(8, 1), "y": jnp.ones((8, 2))}
+
+    def loss_fn(p, b):
+        pred = b["x"] @ jnp.ones((1, 2)) @ p["w"]
+        return jnp.mean((pred - b["y"]) ** 2)
+
+    l1, g1 = accumulate_grads(loss_fn, params, batch, 1)
+    l4, g4 = accumulate_grads(loss_fn, params, batch, 4)
+    assert abs(float(l1) - float(l4)) < 1e-5
+    np.testing.assert_allclose(np.asarray(g1["w"]), np.asarray(g4["w"]),
+                               rtol=1e-5)
+
+
+def test_int8_compression_unbiased_and_tight(rng):
+    x = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+    key = jax.random.PRNGKey(0)
+    # unbiased: mean of many stochastic quantizations approaches x
+    acc = jnp.zeros_like(x)
+    n = 64
+    for i in range(n):
+        q, s = compress_int8(x, jax.random.fold_in(key, i))
+        acc = acc + decompress_int8(q, s)
+    err = float(jnp.max(jnp.abs(acc / n - x)))
+    scale = float(jnp.max(jnp.abs(x))) / 127
+    assert err < 3 * scale / np.sqrt(n) + 1e-6
+    # single-shot error bounded by one quantization step
+    q, s = compress_int8(x, key)
+    assert float(jnp.max(jnp.abs(decompress_int8(q, s) - x))) <= float(s) + 1e-6

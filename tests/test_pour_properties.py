@@ -1,0 +1,61 @@
+"""Hypothesis property tests of the LC engine internals: the prefix-sum
+pour vs the paper's literal sequential rounds, and the partitionable
+k-selection."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lc import pour, smallest_k
+from repro.kernels.ref import act_phase2_ref
+
+settings.register_profile("ci2", deadline=None, max_examples=30)
+settings.load_profile("ci2")
+
+
+@given(st.integers(1, 12), st.integers(1, 10), st.integers(1, 6),
+       st.integers(0, 2**31 - 1))
+def test_pour_equals_sequential_rounds(n, hmax, iters, seed):
+    """The exclusive-prefix water-filling == eqs. (6)-(9) literal loop."""
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.uniform(size=(n, hmax))
+                    * (r.uniform(size=(n, hmax)) > 0.3), jnp.float32)
+    zg = jnp.asarray(np.sort(r.uniform(size=(n, hmax, iters + 1)), -1),
+                     jnp.float32)
+    wg = jnp.asarray(r.uniform(size=(n, hmax, iters)) * 0.4, jnp.float32)
+    got = pour(x, zg, wg, iters)
+    want = act_phase2_ref(x, zg, wg)[:, 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(1, 20), st.integers(1, 16), st.integers(0, 2**31 - 1))
+def test_smallest_k_properties(rows, h, seed):
+    import jax
+    r = np.random.default_rng(seed)
+    k = min(r.integers(1, 9), h)
+    d = jnp.asarray(r.normal(size=(rows, h)), jnp.float32)
+    z, s = smallest_k(d, int(k))
+    # ascending values, valid indices, matches lax.top_k
+    assert (np.diff(np.asarray(z), axis=1) >= -1e-7).all()
+    assert ((np.asarray(s) >= 0) & (np.asarray(s) < h)).all()
+    neg, sr = jax.lax.top_k(-d, int(k))
+    np.testing.assert_allclose(np.asarray(z), -np.asarray(neg), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(sr))
+
+
+@given(st.integers(2, 10), st.integers(0, 2**31 - 1))
+def test_pour_monotone_in_iters(hmax, seed):
+    """More constrained-transfer rounds never decrease the bound
+    (ACT-k monotonicity at the engine level)."""
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.uniform(size=(4, hmax)), jnp.float32)
+    kmax = 5
+    z_full = jnp.asarray(np.sort(r.uniform(size=(4, hmax, kmax + 1)), -1),
+                         jnp.float32)
+    w_full = jnp.asarray(r.uniform(size=(4, hmax, kmax)) * 0.4, jnp.float32)
+    prev = None
+    for it in range(kmax + 1):
+        t = np.asarray(pour(x, z_full[..., :it + 1], w_full[..., :it], it))
+        if prev is not None:
+            assert (t >= prev - 1e-5).all()
+        prev = t
