@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import retrieval
+from repro.api import EmdIndex, EngineConfig
 from repro.data.synth import make_image_like, make_text_like
 
 
@@ -46,6 +46,15 @@ def image_corpus(n_images=192, n_classes=6, side=12, background=False,
     return c, np.asarray(labels)
 
 
-def precision_all(corpus, labels, method: str, top_l: int, **kw) -> float:
-    S = retrieval.all_pairs_scores(corpus, method=method, **kw)
-    return retrieval.precision_at_l(S, jnp.asarray(labels), top_l)
+def build_index(corpus, method: str, iters: int = 1,
+                backend: str = "reference") -> EmdIndex:
+    """One EmdIndex per (method, iters, backend) — every benchmark entry
+    point scores through the unified serving API."""
+    return EmdIndex.build(corpus, EngineConfig(method=method, iters=iters,
+                                               backend=backend))
+
+
+def precision_all(corpus, labels, method: str, top_l: int,
+                  iters: int = 1) -> float:
+    return build_index(corpus, method, iters).precision_at_l(
+        jnp.asarray(labels), top_l)

@@ -13,8 +13,8 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, precision_all, text_corpus, timeit
-from repro.core import lc, retrieval
+from benchmarks.common import (build_index, emit, precision_all,
+                               text_corpus, timeit)
 from repro.core.wmd import wmd_search
 
 
@@ -32,17 +32,11 @@ def run(n_wmd_queries: int = 12) -> None:
         ("act-3", dict(method="act", iters=3)),
         ("act-7", dict(method="act", iters=7)),
     ]
-    # per-query scoring time
+    # per-query scoring time, served through the unified index
     per_q = {}
     for name, kw in methods:
-        if kw["method"] == "act":
-            fn = lambda i=kw["iters"]: lc.lc_act_scores(corpus, q_ids, q_w,
-                                                        iters=i)
-        elif kw["method"] == "omr":
-            fn = lambda: lc.lc_omr_scores(corpus, q_ids, q_w)
-        else:
-            fn = lambda m=kw["method"]: retrieval.METHODS[m](corpus, q_ids, q_w)
-        per_q[name] = timeit(fn)
+        index = build_index(corpus, **kw)
+        per_q[name] = timeit(lambda ix=index: ix.scores(q_ids, q_w))
 
     # WMD (exact EMD + RWMD pruning) reference on a query subset
     t0 = time.perf_counter()

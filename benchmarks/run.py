@@ -7,7 +7,9 @@
   table3_complexity  Tables 2/3 empirical linear-scaling check
   kernels_bench      DESIGN 2   kernel traffic/fusion model
 
-Each prints ``name,us_per_call,derived`` CSV rows.
+Each prints ``name,us_per_call,derived`` CSV rows. All retrieval-bench
+entry points score through the unified ``repro.api.EmdIndex`` serving API
+(``benchmarks.common.build_index``); only kernel microbenches go below it.
 Run: PYTHONPATH=src python -m benchmarks.run [--only fig8]
 """
 from __future__ import annotations

@@ -8,8 +8,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, image_corpus, precision_all, timeit
-from repro.core import lc, sinkhorn
+from benchmarks.common import (build_index, emit, image_corpus,
+                               precision_all, timeit)
+from repro.core import sinkhorn
 from repro.core.geometry import pairwise_dist
 
 
@@ -42,8 +43,8 @@ def run(n_queries: int = 24, top_l: int = 8) -> None:
     emit("fig8b.sinkhorn", t_sink,
          f"prec@{top_l}={float(np.mean(hits)):.4f} lam=20")
 
-    t_act = timeit(lambda: lc.lc_act_scores(corpus, corpus.ids[0],
-                                            corpus.w[0], iters=1))
+    index = build_index(corpus, "act", iters=1)
+    t_act = timeit(lambda: index.scores(corpus.ids[0], corpus.w[0]))
     p_act = precision_all(corpus, labels, method="act", top_l=top_l, iters=1)
     emit("fig8b.act-1", t_act,
          f"prec@{top_l}={p_act:.4f} speedup={t_sink / t_act:.0f}x")

@@ -9,15 +9,15 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, timeit
-from repro.core import lc
+from benchmarks.common import build_index, emit, timeit
 from repro.data.synth import make_text_like
 
 
 def _time_for(n_docs=256, vocab=1024, m=32, hmax=32, iters=3, seed=0):
     c, _ = make_text_like(n_docs=n_docs, vocab=vocab, m=m,
                           doc_len=2 * hmax, hmax=hmax, seed=seed)
-    return timeit(lambda: lc.lc_act_scores(c, c.ids[0], c.w[0], iters=iters))
+    index = build_index(c, "act", iters=iters)
+    return timeit(lambda: index.scores(c.ids[0], c.w[0]))
 
 
 def run() -> None:

@@ -3,14 +3,14 @@ background): BoW vs RWMD vs ACT-1/3/7. Expected: all high; ACT >= BoW for
 larger l; ACT-k improves monotonically with k."""
 from __future__ import annotations
 
-from benchmarks.common import emit, image_corpus, precision_all, timeit
-from repro.core import lc
+from benchmarks.common import (build_index, emit, image_corpus,
+                               precision_all, timeit)
 
 
 def run() -> None:
     corpus, labels = image_corpus(background=False)
-    t = timeit(lambda: lc.lc_act_scores(corpus, corpus.ids[0], corpus.w[0],
-                                        iters=1))
+    index = build_index(corpus, "act", iters=1)
+    t = timeit(lambda: index.scores(corpus.ids[0], corpus.w[0]))
     for name, kw in [("bow", dict(method="bow")),
                      ("rwmd", dict(method="act", iters=0)),
                      ("act-1", dict(method="act", iters=1)),

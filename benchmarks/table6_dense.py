@@ -3,14 +3,15 @@
 the paper's central robustness claim."""
 from __future__ import annotations
 
-from benchmarks.common import emit, image_corpus, precision_all, timeit
-from repro.core import lc
+from benchmarks.common import (build_index, emit, image_corpus,
+                               precision_all, timeit)
 
 
 def run() -> None:
     corpus, labels = image_corpus(background=True)
     n_classes = int(labels.max()) + 1
-    t = timeit(lambda: lc.lc_omr_scores(corpus, corpus.ids[0], corpus.w[0]))
+    index = build_index(corpus, "omr")
+    t = timeit(lambda: index.scores(corpus.ids[0], corpus.w[0]))
     rows = [("bow", dict(method="bow")),
             ("rwmd", dict(method="act", iters=0)),
             ("omr", dict(method="omr")),

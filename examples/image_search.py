@@ -2,14 +2,12 @@
 
 MNIST-like blobs WITH background (all supports overlap). RWMD collapses to
 0 for every pair (paper Table 6: 10% precision = chance); OMR/ACT restore
-the ranking at the same linear complexity.
+the ranking at the same linear complexity. All scoring goes through the
+unified ``EmdIndex`` API.
 
 Run: PYTHONPATH=src python examples/image_search.py
 """
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import lc, retrieval
+from repro.api import EmdIndex, EngineConfig
 from repro.data.synth import make_image_like
 
 
@@ -18,17 +16,18 @@ def main() -> None:
         corpus, labels = make_image_like(n_images=96, n_classes=6, side=12,
                                          include_background=background,
                                          seed=4)
-        lj = jnp.asarray(labels)
         tag = "dense (with background)" if background else "sparse"
         print(f"\n=== {tag}: n={corpus.n} bins/histogram={corpus.hmax} ===")
-        rw = lc.lc_rwmd_scores(corpus, corpus.ids[0], corpus.w[0])
+        rw = EmdIndex.build(corpus, EngineConfig(method="rwmd")).scores(
+            corpus.ids[0], corpus.w[0])
         print(f"RWMD scores vs doc 0: min={float(rw.min()):.5f} "
               f"max={float(rw.max()):.5f}"
               + ("   <- ALL ZERO: full support overlap" if background else ""))
-        for name, method, kw in [("RWMD", "rwmd", {}), ("OMR", "omr", {}),
-                                 ("ACT-7", "act", dict(iters=7))]:
-            S = retrieval.all_pairs_scores(corpus, method=method, **kw)
-            p = retrieval.precision_at_l(S, lj, 8)
+        for name, cfg in [("RWMD", EngineConfig(method="rwmd")),
+                          ("OMR", EngineConfig(method="omr")),
+                          ("ACT-7", EngineConfig(method="act", iters=7))]:
+            index = EmdIndex.build(corpus, cfg)
+            p = index.precision_at_l(labels, 8)
             chance = 1.0 / (int(labels.max()) + 1)
             note = "  (~chance!)" if abs(p - chance) < 0.08 else ""
             print(f"  {name:6s} precision@8 = {p:.3f}{note}")

@@ -5,9 +5,9 @@ Run: PYTHONPATH=src python examples/quickstart.py
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import EmdIndex, EngineConfig
 from repro.core import (act, emd_exact, ict, l1_normalize, omr,
                         pairwise_dist, rwmd, sinkhorn_cost)
-from repro.core.retrieval import search
 from repro.data.synth import make_text_like
 
 
@@ -33,8 +33,9 @@ def main() -> None:
 
     corpus, labels = make_text_like(n_docs=64, vocab=256, m=16, doc_len=40,
                                     hmax=24, seed=1)
-    scores, idx = search(corpus, corpus.ids[7], corpus.w[7], top_l=5,
-                         method="act", iters=2)
+    index = EmdIndex.build(corpus, EngineConfig(method="act", iters=2,
+                                                top_l=5))
+    scores, idx = index.search(corpus.ids[7], corpus.w[7])
     print("\nLC-ACT top-5 neighbors of doc 7 "
           f"(label {labels[7]}): ids={np.asarray(idx).tolist()} "
           f"labels={labels[np.asarray(idx)].tolist()}")

@@ -1,8 +1,10 @@
 """End-to-end text similarity search (the paper's 20 Newsgroups workflow).
 
-Builds a word2vec-like embedded corpus, scores every document against the
-database with each method, and reports precision@top-l + per-query runtime —
-a miniature of the paper's Fig. 8(a).
+Builds a word2vec-like embedded corpus, serves it through one
+``EmdIndex`` per method, and reports precision@top-l + per-query runtime —
+a miniature of the paper's Fig. 8(a). The same call sites work unchanged
+with ``backend="pallas"`` (fused kernels) or ``backend="distributed"``
+(mesh-sharded), demonstrated at the end.
 
 Run: PYTHONPATH=src python examples/text_search.py
 """
@@ -12,7 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import lc, retrieval
+from repro.api import EmdIndex, EngineConfig
+from repro.core import retrieval
 from repro.data.synth import make_text_like
 
 
@@ -22,14 +25,15 @@ def main() -> None:
     labels = jnp.asarray(labels)
     print(f"corpus: n={corpus.n} hmax={corpus.hmax} v={corpus.v} m={corpus.m}")
 
-    for name, method, kw in [("BoW-cosine", "bow", {}),
-                             ("WCD", "wcd", {}),
-                             ("LC-RWMD", "rwmd", {}),
-                             ("LC-OMR", "omr", {}),
-                             ("LC-ACT-1", "act", dict(iters=1)),
-                             ("LC-ACT-7", "act", dict(iters=7))]:
+    for name, cfg in [("BoW-cosine", EngineConfig(method="bow")),
+                      ("WCD", EngineConfig(method="wcd")),
+                      ("LC-RWMD", EngineConfig(method="rwmd")),
+                      ("LC-OMR", EngineConfig(method="omr")),
+                      ("LC-ACT-1", EngineConfig(method="act", iters=1)),
+                      ("LC-ACT-7", EngineConfig(method="act", iters=7))]:
+        index = EmdIndex.build(corpus, cfg)
         t0 = time.perf_counter()
-        S = retrieval.all_pairs_scores(corpus, method=method, **kw)
+        S = index.all_pairs()
         jax.block_until_ready(S)
         dt = time.perf_counter() - t0
         precs = [retrieval.precision_at_l(S, labels, L) for L in (1, 4, 16)]
@@ -37,12 +41,24 @@ def main() -> None:
               + "/".join(f"{p:.3f}" for p in precs)
               + f"   ({1e3 * dt / corpus.n:.2f} ms/query)")
 
-    # single query with the Pallas-kernel-backed engine
-    s_k = lc.lc_act_scores(corpus, corpus.ids[0], corpus.w[0], iters=3,
-                           use_kernels=True)
-    s_j = lc.lc_act_scores(corpus, corpus.ids[0], corpus.w[0], iters=3)
-    print("\nkernel engine max |diff| vs jnp engine:",
+    # identical call, Pallas-kernel backend (interpret mode off-TPU)
+    idx_ref = EmdIndex.build(corpus, EngineConfig(method="act", iters=3))
+    s_j = idx_ref.scores(corpus.ids[0], corpus.w[0])
+    idx_k = EmdIndex.build(corpus, EngineConfig(method="act", iters=3,
+                                                backend="pallas"))
+    s_k = idx_k.scores(corpus.ids[0], corpus.w[0])
+    print("\npallas backend max |diff| vs reference backend:",
           float(jnp.max(jnp.abs(s_k - s_j))))
+
+    # identical call, distributed backend (single-device mesh here; a
+    # multi-host launcher passes its production mesh to build())
+    idx_d = EmdIndex.build(corpus, EngineConfig(method="act", iters=3,
+                                                backend="distributed"))
+    s_d = idx_d.scores(corpus.ids[:8], corpus.w[:8])
+    loop = np.stack([np.asarray(idx_ref.scores(corpus.ids[u], corpus.w[u]))
+                     for u in range(8)])
+    print("distributed backend max |diff| vs reference backend:",
+          float(np.max(np.abs(np.asarray(s_d) - loop))))
 
 
 if __name__ == "__main__":

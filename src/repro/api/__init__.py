@@ -1,0 +1,19 @@
+"""Unified EMD serving API (the stable surface scaling work lands behind).
+
+One entry point — :class:`EmdIndex` — over the three engines that
+previously had four disjoint call conventions:
+
+* ``backend="reference"``  — pjit-able jnp engines in ``core.lc``,
+* ``backend="pallas"``     — fused TPU kernels in ``kernels/``,
+* ``backend="distributed"``— the mesh-sharded multi-query step in
+  ``launch/search.py``.
+
+Configured by the frozen :class:`EngineConfig`; methods are typed
+:class:`~repro.core.retrieval.MethodSpec` registry entries.
+"""
+from repro.api.config import BACKENDS, DISTRIBUTABLE_METHODS, EngineConfig
+from repro.api.index import EmdIndex
+from repro.core.retrieval import METHODS, MethodSpec
+
+__all__ = ["BACKENDS", "DISTRIBUTABLE_METHODS", "EngineConfig", "EmdIndex",
+           "METHODS", "MethodSpec"]

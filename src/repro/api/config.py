@@ -1,0 +1,100 @@
+"""Engine configuration for the unified serving API.
+
+``EngineConfig`` is the single typed knob surface that replaces the old
+string-keyed ``retrieval.METHODS`` lookups, the loose ``use_kernels`` flag,
+and ``jit_search_step``'s positional kwargs. It is frozen and hashable so
+it can key jit caches and be shipped around a cluster verbatim.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.retrieval import METHODS
+
+#: Execution engines EmdIndex can place a method on.
+BACKENDS = ("reference", "pallas", "distributed")
+
+#: Methods the distributed phase1+pour step can express (LC-ACT family).
+DISTRIBUTABLE_METHODS = ("act", "rwmd")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Frozen description of how an :class:`~repro.api.EmdIndex` scores.
+
+    method:       one of ``rwmd | rwmd_rev | omr | act | bow | wcd``
+                  (the typed ``retrieval.METHODS`` registry keys).
+    iters:        LC-ACT Phase-2 rounds (ignored by other methods).
+    backend:      ``reference`` (pjit-able jnp), ``pallas`` (fused TPU
+                  kernels; methods without kernel support fall back to
+                  reference compute), or ``distributed`` (mesh-sharded
+                  multi-query step from ``launch/search.py``).
+    symmetric:    score single queries with the paper's symmetric measure
+                  (max of the two directional bounds; needs a method with
+                  a registered reverse, i.e. rwmd).
+    top_l:        default neighbor count for ``EmdIndex.search``.
+    block_v/block_h/block_n: Pallas kernel tile sizes (vocabulary rows,
+                  histogram slots, database rows).
+    rev_block:    row-block size of the streamed reverse-RWMD scorer.
+    pad_multiple: distributed backend pads database rows to a multiple of
+                  this so the corpus shards on any mesh (was a magic 512).
+    """
+    method: str = "act"
+    iters: int = 1
+    backend: str = "reference"
+    symmetric: bool = False
+    top_l: int = 16
+    block_v: int = 256
+    block_h: int = 256
+    block_n: int = 256
+    rev_block: int = 256
+    pad_multiple: int = 512
+
+    def __post_init__(self) -> None:
+        if self.method not in METHODS:
+            raise ValueError(f"unknown method {self.method!r}; "
+                             f"registered: {sorted(METHODS)}")
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             f"one of {BACKENDS}")
+        if self.iters < 0:
+            raise ValueError(f"iters must be >= 0, got {self.iters}")
+        if self.top_l < 1:
+            raise ValueError(f"top_l must be >= 1, got {self.top_l}")
+        if min(self.block_v, self.block_h, self.block_n, self.rev_block,
+               self.pad_multiple) < 1:
+            raise ValueError("block sizes and pad_multiple must be >= 1")
+        spec = METHODS[self.method]
+        if self.symmetric and not spec.symmetric and spec.reverse is None:
+            raise ValueError(
+                f"method {self.method!r} has no reverse direction; "
+                "symmetric=True needs one (use method='rwmd')")
+        if self.backend == "distributed":
+            if self.method not in DISTRIBUTABLE_METHODS:
+                raise ValueError(
+                    f"backend='distributed' supports {DISTRIBUTABLE_METHODS}"
+                    f", got method={self.method!r}")
+            if self.symmetric:
+                raise ValueError("symmetric scoring is not implemented on "
+                                 "the distributed backend")
+
+    @property
+    def spec(self):
+        """The typed :class:`~repro.core.retrieval.MethodSpec` entry."""
+        return METHODS[self.method]
+
+    @property
+    def effective_iters(self) -> int:
+        """Phase-2 rounds actually run (0 for non-ACT methods)."""
+        return self.iters if self.spec.uses_iters else 0
+
+    def score_kwargs(self) -> dict:
+        """Static kwargs for the uniform ``retrieval`` scorer signature."""
+        return dict(
+            method=self.method,
+            iters=self.effective_iters,
+            use_kernels=(self.backend == "pallas"
+                         and self.spec.supports_kernels),
+            block_v=self.block_v, block_h=self.block_h,
+            block_n=self.block_n, rev_block=self.rev_block,
+        )

@@ -1,0 +1,180 @@
+"""``EmdIndex``: one serving entry point over every EMD engine.
+
+Build once, query many times — the nearest-neighbor index shape
+(build/query phases) the paper's batch algorithms imply. ``build``
+precomputes and owns everything reusable across queries: the device-placed
+corpus, the method spec, and (for ``backend="distributed"``) the mesh,
+shardings, row padding, and jitted multi-query step. Callers then write
+identical code whether the engine underneath is the pjit-able jnp
+reference, the fused Pallas kernels, or a mesh-sharded multi-host step.
+
+    index = EmdIndex.build(corpus, EngineConfig(method="act", iters=3))
+    scores = index.scores(q_ids, q_w)          # (h,) -> (n,)
+    scores = index.scores(Q_ids, Q_w)          # (nq, h) -> (nq, n)
+    top, idx = index.search(q_ids, q_w)        # top-l neighbors
+    S = index.all_pairs()                      # n x n symmetric matrix
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.config import EngineConfig
+from repro.core import lc, retrieval
+from repro.core.lc import Corpus
+
+Array = jax.Array
+
+
+def _pad_rows(x: Array, n_padded: int) -> Array:
+    return jnp.pad(x, ((0, n_padded - x.shape[0]), (0, 0)))
+
+
+def _mesh_context(mesh):
+    """Ambient-mesh context for sharding annotations. ``jax.set_mesh``
+    landed after 0.4.x; without it the in_shardings on the jitted step
+    still place data correctly and ``annotate.constrain`` no-ops."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh else contextlib.nullcontext()
+
+
+@dataclasses.dataclass(frozen=True, repr=False)
+class EmdIndex:
+    """Immutable handle over a built index. Construct via :meth:`build`."""
+    corpus: Corpus
+    config: EngineConfig
+    _mesh: Any = None
+    _scores_step: Any = None
+    _padded_corpus: Corpus | None = None
+
+    def __repr__(self) -> str:
+        mesh = "" if self._mesh is None else f", mesh={dict(self._mesh.shape)}"
+        return (f"EmdIndex(n={self.corpus.n}, hmax={self.corpus.hmax}, "
+                f"v={self.corpus.v}, m={self.corpus.m}, "
+                f"method={self.config.method!r}, "
+                f"backend={self.config.backend!r}{mesh})")
+
+    # ------------------------------------------------------------- build
+    @classmethod
+    def build(cls, corpus: Corpus, config: EngineConfig | None = None, *,
+              mesh=None) -> "EmdIndex":
+        """Precompute everything reusable across queries of ``corpus``.
+
+        ``mesh``: distributed backend only — the device mesh to shard
+        over; defaults to a single-device (1, 1) data x model mesh so
+        single-host callers and multi-host launchers run the same code.
+        """
+        config = EngineConfig() if config is None else config
+        if config.backend != "distributed":
+            return cls(corpus=jax.device_put(corpus), config=config)
+
+        from repro.configs.emd_20news import EMDWorkload
+        from repro.launch import mesh as mesh_mod
+        from repro.launch import search as dsearch
+
+        mesh = mesh_mod.make_test_mesh(1, 1) if mesh is None else mesh
+        n_pad = -(-corpus.n // config.pad_multiple) * config.pad_multiple
+        padded = Corpus(ids=_pad_rows(corpus.ids, n_pad),
+                        w=_pad_rows(corpus.w, n_pad), coords=corpus.coords)
+        workload = EMDWorkload(name="emd-index", n_db=corpus.n,
+                               vocab=corpus.v, dim=corpus.m,
+                               hmax=corpus.hmax,
+                               iters=config.effective_iters, queries=0)
+        step = dsearch.jit_scores_step(workload, mesh)
+        in_sh, _ = dsearch.scores_shardings(mesh, workload)
+        padded = Corpus(ids=jax.device_put(padded.ids, in_sh[0]),
+                        w=jax.device_put(padded.w, in_sh[1]),
+                        coords=jax.device_put(padded.coords, in_sh[2]))
+        return cls(corpus=corpus, config=config, _mesh=mesh,
+                   _scores_step=step, _padded_corpus=padded)
+
+    # --------------------------------------------------------- properties
+    @property
+    def n(self) -> int:
+        """Number of database histograms."""
+        return self.corpus.n
+
+    @property
+    def backend(self) -> str:
+        return self.config.backend
+
+    @property
+    def mesh(self):
+        """The device mesh (distributed backend), else ``None``."""
+        return self._mesh
+
+    # ------------------------------------------------------------ scoring
+    def scores(self, q_ids: Array, q_w: Array) -> Array:
+        """Directional bound of every database row vs the query/queries.
+
+        Accepts a single query ``(h,)`` -> ``(n,)`` or a batch
+        ``(nq, h)`` -> ``(nq, n)``, uniformly across backends. Lower =
+        more similar.
+        """
+        q_ids = jnp.asarray(q_ids)
+        q_w = jnp.asarray(q_w)
+        if q_ids.ndim not in (1, 2) or q_ids.shape != q_w.shape:
+            raise ValueError(
+                f"expected matching (h,) or (nq, h) queries, got "
+                f"ids {q_ids.shape} / w {q_w.shape}")
+        single = q_ids.ndim == 1
+        if self.config.backend == "distributed":
+            qi = q_ids[None] if single else q_ids
+            qw = q_w[None] if single else q_w
+            nq = qi.shape[0]
+            # Pad the query batch to the data-axis size so any nq shards.
+            from repro.launch.mesh import data_axes
+            dp = int(np.prod([self._mesh.shape[a]
+                              for a in data_axes(self._mesh)]))
+            qi = _pad_rows(qi, -(-nq // dp) * dp)
+            qw = _pad_rows(qw, -(-nq // dp) * dp)
+            p = self._padded_corpus
+            with _mesh_context(self._mesh):
+                s = self._scores_step(p.ids, p.w, p.coords, qi, qw)
+            s = s[:nq, :self.n]            # drop pad queries and pad rows
+            return s[0] if single else s
+        kw = self.config.score_kwargs()
+        if single:
+            return retrieval.query_scores(self.corpus, q_ids, q_w,
+                                          symmetric=self.config.symmetric,
+                                          **kw)
+        return retrieval.batch_scores(self.corpus, q_ids, q_w,
+                                      symmetric=self.config.symmetric, **kw)
+
+    def search(self, q_ids: Array, q_w: Array,
+               top_l: int | None = None) -> tuple[Array, Array]:
+        """(scores, indices) of the top-l most similar database rows,
+        ascending; ``(top_l,)`` each for a single query, ``(nq, top_l)``
+        for a batch. ``top_l`` defaults to ``config.top_l``."""
+        top_l = self.config.top_l if top_l is None else top_l
+        s = self.scores(q_ids, q_w)
+        neg, idx = jax.lax.top_k(-s, top_l)
+        return -neg, idx
+
+    def all_pairs(self) -> Array:
+        """n x n symmetric score matrix over the corpus (the paper's
+        evaluation mode; feed to ``retrieval.precision_at_l``)."""
+        if self.config.backend == "distributed":
+            asym = self.scores(self.corpus.ids, self.corpus.w)
+            return lc.symmetric_scores(asym)
+        return retrieval.all_pairs_scores(self.corpus,
+                                          **self.config.score_kwargs())
+
+    # ---------------------------------------------------------- plumbing
+    def precision_at_l(self, labels, top_l: int | None = None) -> float:
+        """Corpus-as-queries precision@top-l (paper Section 6)."""
+        top_l = self.config.top_l if top_l is None else top_l
+        return retrieval.precision_at_l(self.all_pairs(),
+                                        jnp.asarray(np.asarray(labels)),
+                                        top_l)
+
+    def with_config(self, **changes) -> "EmdIndex":
+        """Rebuild this index with ``dataclasses.replace``d config."""
+        return EmdIndex.build(self.corpus,
+                              dataclasses.replace(self.config, **changes),
+                              mesh=self._mesh)

@@ -3,6 +3,11 @@
 Per-pair measures: ``relaxations`` (RWMD/OMR/ICT/ACT), oracles ``emd`` and
 ``sinkhorn``. Batch linear-complexity engines: ``lc`` (LC-RWMD/LC-OMR/
 LC-ACT). Retrieval harness: ``retrieval``.
+
+This package is the thin compute layer. Serving callers should use the
+unified facade in ``repro.api`` (``EmdIndex`` + ``EngineConfig``), which
+composes these engines with the Pallas kernels and the distributed step
+behind one backend-agnostic surface.
 """
 from repro.core.emd import emd_exact, emd_exact_flow
 from repro.core.geometry import l1_normalize, l2_normalize, pairwise_dist, pairwise_sqdist

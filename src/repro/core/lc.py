@@ -19,6 +19,11 @@ dense X of the paper never hit HBM at production sizes (see
 ``kernels/dist_topk`` and ``kernels/act_phase2`` for the fused versions;
 this module is the readable pjit-able reference engine that the kernels are
 validated against).
+
+NOTE (serving callers): prefer ``repro.api.EmdIndex`` — these engines are
+the thin compute layer behind its ``backend="reference"``/``"pallas"``
+paths; calling them directly bypasses batching, symmetric scoring, and
+backend selection.
 """
 from __future__ import annotations
 
@@ -76,7 +81,6 @@ def smallest_k(D: Array, k: int):
     partition and forces a full all-gather of D (EXPERIMENTS.md section
     Perf, emd-20news iteration 2). k is small (<= 16) per the paper.
     """
-    h = D.shape[-1]
     col = jax.lax.broadcasted_iota(jnp.int32, D.shape, D.ndim - 1)
     work = D
     zs, ss = [], []
@@ -87,7 +91,6 @@ def smallest_k(D: Array, k: int):
         work = jnp.where(col == mi, jnp.asarray(PAD_DIST, D.dtype), work)
         zs.append(mv)
         ss.append(mi)
-    del h
     return (jnp.concatenate(zs, axis=-1),
             jnp.concatenate(ss, axis=-1).astype(jnp.int32))
 
@@ -128,16 +131,24 @@ def pour(x: Array, Zg: Array, Wg: Array, iters: int) -> Array:
     return poured + jnp.sum(remainder * Zg[..., iters], axis=-1)
 
 
-@functools.partial(jax.jit, static_argnames=("iters", "use_kernels"))
+@functools.partial(jax.jit, static_argnames=("iters", "use_kernels",
+                                             "block_v", "block_h", "block_n"))
 def lc_act_scores(corpus: Corpus, q_ids: Array, q_w: Array, iters: int = 1,
-                  *, use_kernels: bool = False) -> Array:
+                  *, use_kernels: bool = False, block_v: int = 256,
+                  block_h: int = 256, block_n: int = 256) -> Array:
     """LC-ACT: lower bounds on EMD(x_u, q) — cost of moving each database
-    histogram INTO the query — for all n database rows. O(vhm + nhk)."""
+    histogram INTO the query — for all n database rows. O(vhm + nhk).
+
+    ``use_kernels`` routes both phases through the fused Pallas kernels
+    (``kernels/dist_topk``, ``kernels/act_phase2``) with the given block
+    sizes; otherwise the pjit-able jnp reference path runs.
+    """
     k = iters + 1
     if use_kernels:
         from repro.kernels import ops as kops
         Z, S = kops.dist_topk(corpus.coords, corpus.coords[q_ids], k,
-                              qmask=(q_w > 0.0))
+                              qmask=(q_w > 0.0), block_v=block_v,
+                              block_h=block_h)
         W = q_w[S]
     else:
         Z, W = phase1(corpus.coords, q_ids, q_w, k)
@@ -147,14 +158,19 @@ def lc_act_scores(corpus: Corpus, q_ids: Array, q_w: Array, iters: int = 1,
     Wg = W[corpus.ids][..., :iters]                      # (n, hmax, iters)
     if use_kernels:
         from repro.kernels import ops as kops
-        return kops.act_phase2(corpus.w, Zg, Wg)
+        return kops.act_phase2(corpus.w, Zg, Wg, block_n=block_n,
+                               block_h=block_h)
     return pour(corpus.w, Zg, Wg, iters)
 
 
-@jax.jit
-def lc_rwmd_scores(corpus: Corpus, q_ids: Array, q_w: Array) -> Array:
+@functools.partial(jax.jit, static_argnames=("use_kernels", "block_v",
+                                             "block_h"))
+def lc_rwmd_scores(corpus: Corpus, q_ids: Array, q_w: Array, *,
+                   use_kernels: bool = False, block_v: int = 256,
+                   block_h: int = 256) -> Array:
     """LC-RWMD direction db -> query (== LC-ACT with zero Phase-2 rounds)."""
-    return lc_act_scores(corpus, q_ids, q_w, iters=0)
+    return lc_act_scores(corpus, q_ids, q_w, iters=0, use_kernels=use_kernels,
+                         block_v=block_v, block_h=block_h)
 
 
 @functools.partial(jax.jit, static_argnames=("block",))
@@ -192,10 +208,20 @@ def lc_rwmd_scores_rev(corpus: Corpus, q_ids: Array, q_w: Array,
     return out.reshape(-1)[:n]
 
 
-@jax.jit
-def lc_omr_scores(corpus: Corpus, q_ids: Array, q_w: Array) -> Array:
+@functools.partial(jax.jit, static_argnames=("use_kernels", "block_v",
+                                             "block_h"))
+def lc_omr_scores(corpus: Corpus, q_ids: Array, q_w: Array, *,
+                  use_kernels: bool = False, block_v: int = 256,
+                  block_h: int = 256) -> Array:
     """LC-OMR: Algorithm 1 batched over the corpus (top-2 per vocab row)."""
-    Z, W = phase1(corpus.coords, q_ids, q_w, 2)
+    if use_kernels:
+        from repro.kernels import ops as kops
+        Z, S = kops.dist_topk(corpus.coords, corpus.coords[q_ids], 2,
+                              qmask=(q_w > 0.0), block_v=block_v,
+                              block_h=block_h)
+        W = q_w[S]
+    else:
+        Z, W = phase1(corpus.coords, q_ids, q_w, 2)
     Z0g = Z[corpus.ids][..., 0]
     Z1g = Z[corpus.ids][..., 1]
     W0g = W[corpus.ids][..., 0]

@@ -4,16 +4,22 @@ This is the paper's evaluation harness (Section 6) as a library: every
 document is a query, scored against the whole corpus, and precision@top-l
 is the fraction of retrieved neighbors sharing the query's label.
 
-``search`` runs one query; ``all_pairs_scores`` builds the full n x n
-asymmetric bound matrix (vmapped/jitted) and symmetrizes it with the max of
-the two directions, exactly as the paper evaluates. The distributed version
-(database rows sharded over the ``data`` mesh axis, vocabulary matmul over
-``model``) lives in ``launch/search.py``.
+The registry is typed: every entry is a :class:`MethodSpec` whose scorer
+shares one uniform signature, so ``search`` / ``all_pairs_scores`` jit
+end-to-end with no per-method special-casing. ``search`` runs one query;
+``all_pairs_scores`` builds the full n x n bound matrix (scanned/jitted)
+and symmetrizes it unless the method is already symmetric.
+
+NOTE (serving callers): prefer ``repro.api.EmdIndex`` — the unified facade
+over this module, the Pallas kernels, and the distributed engine in
+``launch/search.py``. This module remains the thin compute layer the
+facade composes.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Callable
+from typing import Callable, Protocol
 
 import jax
 import jax.numpy as jnp
@@ -22,33 +28,92 @@ from repro.core import lc
 
 Array = jax.Array
 
-METHODS: dict[str, Callable] = {}
+
+class ScoreFn(Protocol):
+    """Uniform scorer signature every registered method implements.
+
+    Scores ONE query histogram (``q_ids``/``q_w``, each ``(h,)``) against
+    all ``n`` database rows, returning ``(n,)`` distances (lower = more
+    similar). Methods ignore the kwargs they do not use.
+    """
+
+    def __call__(self, corpus: lc.Corpus, q_ids: Array, q_w: Array, *,
+                 iters: int = 1, use_kernels: bool = False,
+                 block_v: int = 256, block_h: int = 256, block_n: int = 256,
+                 rev_block: int = 256) -> Array: ...
 
 
-def _register(name):
-    def deco(fn):
-        METHODS[name] = fn
+@dataclasses.dataclass(frozen=True)
+class MethodSpec:
+    """Typed registry entry for one scoring method.
+
+    name:        registry key (``EngineConfig.method`` value).
+    paper_name:  the paper's name for the measure (README table).
+    fn:          uniform-signature scorer (see :class:`ScoreFn`).
+    symmetric:   True if the measure is symmetric in (query, db) — its
+                 all-pairs matrix needs no max-symmetrization (BoW, WCD).
+    uses_iters:  True if ``iters`` changes the result (LC-ACT only).
+    supports_kernels: True if ``use_kernels=True`` routes through the
+                 fused Pallas kernels rather than silently falling back.
+    reverse:     registry name of the opposite-direction bound, if one
+                 exists (rwmd <-> rwmd_rev); enables the per-query
+                 symmetric path ``symmetric_query_scores``.
+    """
+    name: str
+    paper_name: str
+    fn: ScoreFn
+    symmetric: bool = False
+    uses_iters: bool = False
+    supports_kernels: bool = False
+    reverse: str | None = None
+
+
+METHODS: dict[str, MethodSpec] = {}
+
+
+def _register(name: str, *, paper_name: str, symmetric: bool = False,
+              uses_iters: bool = False, supports_kernels: bool = False,
+              reverse: str | None = None) -> Callable[[ScoreFn], ScoreFn]:
+    def deco(fn: ScoreFn) -> ScoreFn:
+        METHODS[name] = MethodSpec(name=name, paper_name=paper_name, fn=fn,
+                                   symmetric=symmetric, uses_iters=uses_iters,
+                                   supports_kernels=supports_kernels,
+                                   reverse=reverse)
         return fn
     return deco
 
 
-@_register("rwmd")
-def _rwmd(corpus, q_ids, q_w, **kw):
-    return lc.lc_rwmd_scores(corpus, q_ids, q_w)
+@_register("rwmd", paper_name="LC-RWMD (db -> query)",
+           supports_kernels=True, reverse="rwmd_rev")
+def _rwmd(corpus, q_ids, q_w, *, use_kernels=False, block_v=256,
+          block_h=256, **_):
+    return lc.lc_rwmd_scores(corpus, q_ids, q_w, use_kernels=use_kernels,
+                             block_v=block_v, block_h=block_h)
 
 
-@_register("omr")
-def _omr(corpus, q_ids, q_w, **kw):
-    return lc.lc_omr_scores(corpus, q_ids, q_w)
+@_register("rwmd_rev", paper_name="LC-RWMD (query -> db)", reverse="rwmd")
+def _rwmd_rev(corpus, q_ids, q_w, *, rev_block=256, **_):
+    return lc.lc_rwmd_scores_rev(corpus, q_ids, q_w, block=rev_block)
 
 
-@_register("act")
-def _act(corpus, q_ids, q_w, iters: int = 1, **kw):
-    return lc.lc_act_scores(corpus, q_ids, q_w, iters=iters, **kw)
+@_register("omr", paper_name="LC-OMR", supports_kernels=True)
+def _omr(corpus, q_ids, q_w, *, use_kernels=False, block_v=256,
+         block_h=256, **_):
+    return lc.lc_omr_scores(corpus, q_ids, q_w, use_kernels=use_kernels,
+                            block_v=block_v, block_h=block_h)
 
 
-@_register("bow")
-def _bow(corpus, q_ids, q_w, **kw):
+@_register("act", paper_name="LC-ACT-k", uses_iters=True,
+           supports_kernels=True)
+def _act(corpus, q_ids, q_w, *, iters=1, use_kernels=False, block_v=256,
+         block_h=256, block_n=256, **_):
+    return lc.lc_act_scores(corpus, q_ids, q_w, iters=iters,
+                            use_kernels=use_kernels, block_v=block_v,
+                            block_h=block_h, block_n=block_n)
+
+
+@_register("bow", paper_name="BoW cosine baseline", symmetric=True)
+def _bow(corpus, q_ids, q_w, **_):
     """Bag-of-words cosine baseline (O(nh)): 1 - cosine as a distance."""
     qv = jnp.zeros((corpus.v,), corpus.w.dtype).at[q_ids].add(q_w)
     qv = qv / jnp.maximum(jnp.linalg.norm(qv), 1e-12)
@@ -58,38 +123,105 @@ def _bow(corpus, q_ids, q_w, **kw):
     return 1.0 - dots
 
 
-@_register("wcd")
-def _wcd(corpus, q_ids, q_w, **kw):
+@_register("wcd", paper_name="Word Centroid Distance baseline",
+           symmetric=True)
+def _wcd(corpus, q_ids, q_w, **_):
     """Word Centroid Distance baseline (O(nm))."""
     qc = q_w @ corpus.coords[q_ids]                       # (m,)
     cent = jax.vmap(lambda i, w: w @ corpus.coords[i])(corpus.ids, corpus.w)
     return jnp.linalg.norm(cent - qc[None, :], axis=1)
 
 
+_STATIC_KW = ("method", "iters", "use_kernels", "block_v", "block_h",
+              "block_n", "rev_block")
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("method", "symmetric") + _STATIC_KW[1:])
+def query_scores(corpus: lc.Corpus, q_ids: Array, q_w: Array, *,
+                 method: str = "act", symmetric: bool = False,
+                 iters: int = 1, use_kernels: bool = False,
+                 block_v: int = 256, block_h: int = 256, block_n: int = 256,
+                 rev_block: int = 256) -> Array:
+    """One query against the whole database, jitted end-to-end.
+
+    ``symmetric=True`` returns the paper's symmetric measure for a single
+    query: the max of the two directional bounds (requires a method with a
+    registered ``reverse``, i.e. rwmd / rwmd_rev).
+    """
+    spec = METHODS[method]
+    kw = dict(iters=iters, use_kernels=use_kernels, block_v=block_v,
+              block_h=block_h, block_n=block_n, rev_block=rev_block)
+    fwd = spec.fn(corpus, q_ids, q_w, **kw)
+    if not symmetric or spec.symmetric:
+        return fwd
+    if spec.reverse is None:
+        raise ValueError(
+            f"method {method!r} has no reverse direction registered; "
+            "per-query symmetric scoring needs one (use rwmd/rwmd_rev)")
+    return jnp.maximum(fwd, METHODS[spec.reverse].fn(corpus, q_ids, q_w, **kw))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("method", "symmetric") + _STATIC_KW[1:])
+def batch_scores(corpus: lc.Corpus, q_ids: Array, q_w: Array, *,
+                 method: str = "act", symmetric: bool = False,
+                 iters: int = 1, use_kernels: bool = False,
+                 block_v: int = 256, block_h: int = 256, block_n: int = 256,
+                 rev_block: int = 256) -> Array:
+    """Batch of queries ``(nq, h)`` -> ``(nq, n)`` score matrix.
+
+    Scanned (``lax.map``) rather than vmapped so each query runs the exact
+    single-query compute graph: batched results match a Python loop of
+    ``query_scores`` calls bit-for-bit.
+    """
+    def one(ab):
+        return query_scores(corpus, ab[0], ab[1], method=method,
+                            symmetric=symmetric, iters=iters,
+                            use_kernels=use_kernels, block_v=block_v,
+                            block_h=block_h, block_n=block_n,
+                            rev_block=rev_block)
+    return jax.lax.map(one, (q_ids, q_w))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("top_l", "symmetric") + _STATIC_KW)
 def search(corpus: lc.Corpus, q_ids: Array, q_w: Array, top_l: int,
-           method: str = "act", **kw):
-    """Return (scores, indices) of the top-l most similar database rows."""
-    scores = METHODS[method](corpus, q_ids, q_w, **kw)
+           method: str = "act", iters: int = 1, *, symmetric: bool = False,
+           use_kernels: bool = False, block_v: int = 256, block_h: int = 256,
+           block_n: int = 256, rev_block: int = 256):
+    """Return (scores, indices) of the top-l most similar database rows.
+
+    Jitted end-to-end (method dispatch is static), so scoring + top-k
+    compile into one program instead of re-tracing the method per call.
+    """
+    scores = query_scores(corpus, q_ids, q_w, method=method,
+                          symmetric=symmetric, iters=iters,
+                          use_kernels=use_kernels, block_v=block_v,
+                          block_h=block_h, block_n=block_n,
+                          rev_block=rev_block)
     neg, idx = jax.lax.top_k(-scores, top_l)
     return -neg, idx
 
 
-@functools.partial(jax.jit, static_argnames=("method", "iters"))
+@functools.partial(jax.jit, static_argnames=_STATIC_KW)
 def all_pairs_scores(corpus: lc.Corpus, method: str = "act",
-                     iters: int = 1) -> Array:
+                     iters: int = 1, *, use_kernels: bool = False,
+                     block_v: int = 256, block_h: int = 256,
+                     block_n: int = 256, rev_block: int = 256) -> Array:
     """n x n symmetric bound matrix over the corpus (paper's eval mode).
 
     asym[a, b] = directional bound of moving histogram b INTO histogram a
-    (query = row a); symmetric = max(asym, asym^T).
+    (query = row a); symmetric = max(asym, asym^T) unless the method's
+    spec declares the measure already symmetric.
     """
-    def one(q_ids, q_w):
-        if method == "act":
-            return lc.lc_act_scores(corpus, q_ids, q_w, iters=iters)
-        return METHODS[method](corpus, q_ids, q_w)
-
-    asym = jax.lax.map(lambda ab: one(*ab), (corpus.ids, corpus.w))
-    if method in ("bow", "wcd"):
-        return asym                                     # already symmetric
+    spec = METHODS[method]
+    asym = batch_scores(corpus, corpus.ids, corpus.w, method=method,
+                        iters=iters, use_kernels=use_kernels,
+                        block_v=block_v, block_h=block_h, block_n=block_n,
+                        rev_block=rev_block)
+    if spec.symmetric:
+        return asym
     return lc.symmetric_scores(asym)
 
 

@@ -1,7 +1,9 @@
 """Distributed LC-ACT similarity search (the paper's workload, scaled out).
 
 One scoring step: a batch of queries against a vocabulary-backed histogram
-database.
+database. Serving callers should reach this through
+``repro.api.EmdIndex`` (``backend="distributed"``), which builds the mesh,
+shardings, and jitted step from this module internally.
 
 Sharding (DESIGN.md section 2):
   * Phase 1 — queries over ``data``, vocabulary rows over ``model``:
@@ -15,8 +17,6 @@ Sharding (DESIGN.md section 2):
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -25,18 +25,24 @@ from repro.core import lc
 from repro.launch.mesh import data_axes
 
 
+#: Database rows are padded to a multiple of this so the corpus shards on
+#: any mesh. Overridable per call site (``repro.api.EngineConfig``
+#: carries it as ``pad_multiple``).
+DEFAULT_ROW_PAD_MULTIPLE = 512
+
+
 def _dp(mesh):
     axes = data_axes(mesh)
     return axes if len(axes) > 1 else axes[0]
 
 
-def make_search_step(iters: int, top_l: int):
-    """Returns search_step(corpus_ids, corpus_w, coords, q_ids, q_w)
-    -> (top-l scores, top-l indices), each (nq, top_l)."""
+def make_scores_step(iters: int):
+    """Returns scores_step(corpus_ids, corpus_w, coords, q_ids, q_w)
+    -> full (nq, n) LC-ACT score matrix."""
     from repro.sharding import annotate
     k = iters + 1
 
-    def search_step(corpus_ids, corpus_w, coords, q_ids, q_w):
+    def scores_step(corpus_ids, corpus_w, coords, q_ids, q_w):
         def p1(qi, qw):
             return lc.phase1(coords, qi, qw, k)       # Z, W: (v, k)
 
@@ -56,7 +62,26 @@ def make_search_step(iters: int, top_l: int):
             Wg = Wq[corpus_ids][..., :iters]
             return lc.pour(corpus_w, Zg, Wg, iters)
 
-        scores = jax.vmap(pour_one)(Z, W)             # (nq, n)
+        return jax.vmap(pour_one)(Z, W)               # (nq, n)
+
+    return scores_step
+
+
+def make_search_step(iters: int, top_l: int, n_valid: int | None = None):
+    """Returns search_step(corpus_ids, corpus_w, coords, q_ids, q_w)
+    -> (top-l scores, top-l indices), each (nq, top_l).
+
+    ``n_valid``: number of real (non-padding) database rows. Zero-weight
+    pad rows score 0 — the best possible score — so they must be masked
+    out before top-l, not after. ``None`` = no padding."""
+    scores_step = make_scores_step(iters)
+
+    def search_step(corpus_ids, corpus_w, coords, q_ids, q_w):
+        scores = scores_step(corpus_ids, corpus_w, coords, q_ids, q_w)
+        if n_valid is not None and n_valid < corpus_ids.shape[0]:
+            col = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+            scores = jnp.where(col < n_valid, scores,
+                               jnp.asarray(lc.PAD_DIST, scores.dtype))
         neg, idx = jax.lax.top_k(-scores, top_l)
         return -neg, idx
 
@@ -78,13 +103,24 @@ def search_shardings(mesh, workload):
     return in_sh, out_sh
 
 
-def search_input_specs(workload) -> tuple:
+def scores_shardings(mesh, workload):
+    """(in_shardings, out_sharding) for scores_step on ``mesh``: the full
+    (nq, n) matrix lands P(data, model) — queries on their data shards,
+    database columns on the model shards that poured them."""
+    dp = _dp(mesh)
+    in_sh, _ = search_shardings(mesh, workload)
+    return in_sh, NamedSharding(mesh, P(dp, "model"))
+
+
+def search_input_specs(workload,
+                       pad_multiple: int = DEFAULT_ROW_PAD_MULTIPLE) -> tuple:
     """ShapeDtypeStruct stand-ins for one scoring step of ``workload``.
 
-    The database row count is padded to a multiple of 512 (zero-weight pad
-    rows score 0 and are dropped after top-l) so it shards on any mesh."""
+    The database row count is padded to a multiple of ``pad_multiple``
+    (zero-weight pad rows are masked out before top-l) so it shards on
+    any mesh."""
     w = workload
-    n = -(-w.n_db // 512) * 512
+    n = -(-w.n_db // pad_multiple) * pad_multiple
     return (
         jax.ShapeDtypeStruct((n, w.hmax), jnp.int32),
         jax.ShapeDtypeStruct((n, w.hmax), jnp.float32),
@@ -94,8 +130,20 @@ def search_input_specs(workload) -> tuple:
     )
 
 
-def jit_search_step(workload, mesh, top_l: int = 16, iters: int | None = None):
+def jit_search_step(workload, mesh, top_l: int = 16, iters: int | None = None,
+                    n_valid: int | None = None):
+    """``n_valid`` defaults to the workload's real row count so top-l never
+    returns the zero-scoring pad rows added by ``search_input_specs``."""
     iters = workload.iters if iters is None else iters
-    step = make_search_step(iters, top_l)
+    n_valid = workload.n_db if n_valid is None else n_valid
+    step = make_search_step(iters, top_l, n_valid=n_valid)
     in_sh, out_sh = search_shardings(mesh, workload)
+    return jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+
+
+def jit_scores_step(workload, mesh, iters: int | None = None):
+    """Jitted full-score-matrix step on ``mesh`` (``repro.api`` backend)."""
+    iters = workload.iters if iters is None else iters
+    step = make_scores_step(iters)
+    in_sh, out_sh = scores_shardings(mesh, workload)
     return jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)

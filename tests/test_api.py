@@ -1,0 +1,199 @@
+"""The unified serving API: EmdIndex over reference / Pallas / distributed
+engines, EngineConfig validation, and the typed method registry."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import EmdIndex, EngineConfig, METHODS
+from repro.core import lc, retrieval
+from repro.data.synth import make_text_like
+
+
+@pytest.fixture(scope="module")
+def corpus_labels():
+    # doc_len < hmax so every histogram row has zero-weight padded slots —
+    # queries drawn from the corpus exercise query-side padding too.
+    return make_text_like(n_docs=24, n_classes=4, vocab=128, m=8,
+                          doc_len=10, hmax=16, seed=3)
+
+
+def _backends(method="act", iters=2, **kw):
+    return [EngineConfig(method=method, iters=iters, backend=b,
+                         pad_multiple=16, top_l=5, **kw)
+            for b in ("reference", "pallas", "distributed")]
+
+
+def test_cross_backend_top_l_parity(corpus_labels):
+    """Acceptance: reference, pallas, and distributed (single-device mesh)
+    produce identical top-l results."""
+    corpus, _ = corpus_labels
+    q_ids, q_w = corpus.ids[:6], corpus.w[:6]
+    results = []
+    for cfg in _backends():
+        index = EmdIndex.build(corpus, cfg)
+        scores, idx = index.search(q_ids, q_w)
+        results.append((np.asarray(scores), np.asarray(idx)))
+    (s_ref, i_ref), (s_pal, i_pal), (s_dst, i_dst) = results
+    np.testing.assert_array_equal(i_ref, i_pal)
+    np.testing.assert_array_equal(i_ref, i_dst)
+    np.testing.assert_allclose(s_ref, s_pal, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(s_ref, s_dst, rtol=1e-5, atol=1e-6)
+
+
+def test_cross_backend_all_pairs_parity(corpus_labels):
+    corpus, _ = corpus_labels
+    mats = [np.asarray(EmdIndex.build(corpus, cfg).all_pairs())
+            for cfg in _backends(method="rwmd", iters=0)]
+    np.testing.assert_allclose(mats[0], mats[1], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(mats[0], mats[2], rtol=1e-5, atol=1e-6)
+    # symmetric by construction
+    np.testing.assert_array_equal(mats[0], mats[0].T)
+
+
+@pytest.mark.parametrize("method,iters,single_fn", [
+    ("act", 3, lambda c, qi, qw: lc.lc_act_scores(c, qi, qw, iters=3)),
+    ("rwmd", 0, lc.lc_rwmd_scores),
+])
+def test_batched_scores_bit_for_bit(corpus_labels, method, iters, single_fn):
+    """(nq, h) through EmdIndex.scores == a Python loop of single-query
+    engine calls, bit-for-bit, including padded query slots."""
+    corpus, _ = corpus_labels
+    nq = 7
+    q_ids, q_w = corpus.ids[:nq], corpus.w[:nq]
+    assert bool((np.asarray(q_w) == 0.0).any()), "want padded query slots"
+    index = EmdIndex.build(corpus, EngineConfig(method=method, iters=iters))
+    batched = np.asarray(index.scores(q_ids, q_w))
+    assert batched.shape == (nq, corpus.n)
+    looped = np.stack([np.asarray(single_fn(corpus, q_ids[u], q_w[u]))
+                       for u in range(nq)])
+    np.testing.assert_array_equal(batched, looped)
+
+
+def test_single_and_batch_shapes_uniform(corpus_labels):
+    corpus, _ = corpus_labels
+    for cfg in _backends():
+        index = EmdIndex.build(corpus, cfg)
+        s1 = index.scores(corpus.ids[0], corpus.w[0])
+        sb = index.scores(corpus.ids[:3], corpus.w[:3])
+        assert s1.shape == (corpus.n,)
+        assert sb.shape == (3, corpus.n)
+        np.testing.assert_array_equal(np.asarray(s1), np.asarray(sb[0]))
+        t1, i1 = index.search(corpus.ids[0], corpus.w[0], top_l=4)
+        tb, ib = index.search(corpus.ids[:3], corpus.w[:3], top_l=4)
+        assert t1.shape == (4,) and ib.shape == (3, 4)
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(ib[0]))
+
+
+def test_symmetric_single_query_path(corpus_labels):
+    """Paper's symmetric measure per query: max of the two directions."""
+    corpus, _ = corpus_labels
+    index = EmdIndex.build(corpus, EngineConfig(method="rwmd",
+                                                symmetric=True))
+    got = np.asarray(index.scores(corpus.ids[2], corpus.w[2]))
+    fwd = np.asarray(lc.lc_rwmd_scores(corpus, corpus.ids[2], corpus.w[2]))
+    rev = np.asarray(lc.lc_rwmd_scores_rev(corpus, corpus.ids[2],
+                                           corpus.w[2]))
+    np.testing.assert_array_equal(got, np.maximum(fwd, rev))
+    # the symmetric single-query column matches the all-pairs matrix row
+    S = np.asarray(retrieval.all_pairs_scores(corpus, method="rwmd"))
+    np.testing.assert_allclose(got, S[2], rtol=1e-5, atol=1e-6)
+
+
+def test_rwmd_rev_registered_and_linked():
+    assert "rwmd_rev" in METHODS
+    assert METHODS["rwmd"].reverse == "rwmd_rev"
+    assert METHODS["rwmd_rev"].reverse == "rwmd"
+    assert METHODS["act"].uses_iters and METHODS["act"].supports_kernels
+    assert METHODS["bow"].symmetric and METHODS["wcd"].symmetric
+
+
+def test_rwmd_rev_all_pairs_is_transpose_direction(corpus_labels):
+    corpus, _ = corpus_labels
+    fwd = np.stack([np.asarray(lc.lc_rwmd_scores(corpus, corpus.ids[u],
+                                                 corpus.w[u]))
+                    for u in range(corpus.n)])
+    rev = np.asarray(retrieval.batch_scores(corpus, corpus.ids, corpus.w,
+                                            method="rwmd_rev"))
+    np.testing.assert_allclose(rev, fwd.T, rtol=1e-5, atol=1e-6)
+
+
+def test_search_jittable_end_to_end(corpus_labels):
+    """retrieval.search composes under an outer jit (static dispatch, no
+    per-call retracing of the method table)."""
+    corpus, _ = corpus_labels
+
+    @jax.jit
+    def nested(c, qi, qw):
+        s, i = retrieval.search(c, qi, qw, top_l=3, method="omr")
+        return s + 0.0, i
+    s, i = nested(corpus, corpus.ids[1], corpus.w[1])
+    ref = np.asarray(lc.lc_omr_scores(corpus, corpus.ids[1], corpus.w[1]))
+    np.testing.assert_allclose(np.asarray(s), np.sort(ref)[:3],
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_kernel_block_kwargs_thread_through(corpus_labels):
+    """use_kernels/block kwargs are honored by every kernel-capable
+    method, not only ACT."""
+    corpus, _ = corpus_labels
+    for method in ("rwmd", "omr", "act"):
+        a = retrieval.query_scores(corpus, corpus.ids[4], corpus.w[4],
+                                   method=method, use_kernels=False)
+        b = retrieval.query_scores(corpus, corpus.ids[4], corpus.w[4],
+                                   method=method, use_kernels=True,
+                                   block_v=32, block_h=16, block_n=16)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_engine_config_validation():
+    with pytest.raises(ValueError, match="unknown method"):
+        EngineConfig(method="nope")
+    with pytest.raises(ValueError, match="unknown backend"):
+        EngineConfig(backend="gpu")
+    with pytest.raises(ValueError, match="iters"):
+        EngineConfig(iters=-1)
+    with pytest.raises(ValueError, match="distributed"):
+        EngineConfig(method="omr", backend="distributed")
+    with pytest.raises(ValueError, match="reverse"):
+        EngineConfig(method="act", symmetric=True)
+    with pytest.raises(ValueError, match="symmetric"):
+        EngineConfig(method="rwmd", symmetric=True, backend="distributed")
+    assert isinstance(EngineConfig(), EngineConfig)
+    # frozen + hashable (usable as a jit-cache key)
+    cfg = EngineConfig()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.iters = 3
+    assert hash(cfg) == hash(EngineConfig())
+
+
+def test_distributed_pad_rows_masked_in_search(corpus_labels):
+    """Zero-weight pad rows score 0; they must never appear in top-l."""
+    corpus, _ = corpus_labels
+    index = EmdIndex.build(corpus, EngineConfig(
+        method="act", iters=1, backend="distributed", pad_multiple=64))
+    assert index._padded_corpus.n == 64 > corpus.n
+    _, idx = index.search(corpus.ids[:4], corpus.w[:4], top_l=8)
+    assert int(np.asarray(idx).max()) < corpus.n
+
+
+def test_with_config_rebuild(corpus_labels):
+    corpus, _ = corpus_labels
+    index = EmdIndex.build(corpus, EngineConfig(method="act", iters=1))
+    moved = index.with_config(iters=3)
+    assert moved.config.iters == 3 and moved.config.method == "act"
+    ref = lc.lc_act_scores(corpus, corpus.ids[0], corpus.w[0], iters=3)
+    np.testing.assert_array_equal(
+        np.asarray(moved.scores(corpus.ids[0], corpus.w[0])),
+        np.asarray(ref))
+
+
+def test_scores_rejects_mismatched_shapes(corpus_labels):
+    corpus, _ = corpus_labels
+    index = EmdIndex.build(corpus, EngineConfig())
+    with pytest.raises(ValueError, match="queries"):
+        index.scores(corpus.ids[:2], corpus.w[:3])
+    with pytest.raises(ValueError, match="queries"):
+        index.scores(corpus.ids[None, :2], corpus.w[None, None, :2])

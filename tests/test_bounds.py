@@ -6,6 +6,9 @@ Theorem 3: with an effective cost (C_ij = 0 iff i == j), OMR(p,q)=0 => p=q.
 """
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (act, emd_exact, ict, l1_normalize, omr,

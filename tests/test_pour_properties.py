@@ -3,6 +3,9 @@ pour vs the paper's literal sequential rounds, and the partitionable
 k-selection."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.lc import pour, smallest_k

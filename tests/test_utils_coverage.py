@@ -2,7 +2,6 @@
 WMD pruned-search baseline, the report builder, and the retrieval registry."""
 import json
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import retrieval
@@ -50,7 +49,13 @@ def test_wmd_search_exact_ranking_consistency():
 
 
 def test_retrieval_registry_complete():
-    assert set(retrieval.METHODS) == {"rwmd", "omr", "act", "bow", "wcd"}
+    assert set(retrieval.METHODS) == {"rwmd", "rwmd_rev", "omr", "act",
+                                      "bow", "wcd"}
+    for name, spec in retrieval.METHODS.items():
+        assert isinstance(spec, retrieval.MethodSpec)
+        assert spec.name == name and spec.paper_name
+        if spec.reverse is not None:
+            assert retrieval.METHODS[spec.reverse].reverse == name
 
 
 def test_report_builder(tmp_path):
