@@ -1,0 +1,104 @@
+"""Batched multi-query throughput: queries/sec of the batched engine
+(Phase 1 amortized across the query batch, query-blocked Phase 2) vs the
+``engine="scan"`` ``lax.map`` fallback, at nq in {1, 8, 64}.
+
+Timing is PAIRED: scan and batched runs interleave rep by rep and the
+speedup is the median of per-rep ratios, so machine-load drift cancels
+instead of polluting one side. Emits CSV rows like every other benchmark
+AND writes ``BENCH_batch.json`` (repo root, override with
+BENCH_BATCH_JSON) so the queries/sec trajectory is tracked across PRs.
+``BENCH_SMOKE=1`` shrinks every dimension to CI smoke sizes.
+
+On CPU the headline case is rwmd (LC-RWMD, the paper's zero-Phase-2-round
+serving fast path): its batched engine replaces per-query ranked top-1
+selection with one masked min and streams blocked gathers, a >= 2x
+queries/sec win at nq=64. act/omr amortize the same way but stay
+gather/pour-bound on CPU; on TPU the stacked Phase-1 matmul and the
+query-batched kernel grids are where the batch axis pays off hardest.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, text_corpus
+from repro.api import EmdIndex, EngineConfig
+
+#: (method, iters) cases: the fast relaxation, the overlap fix, the
+#: tight bound.
+CASES = (("rwmd", 0), ("omr", 0), ("act", 3))
+
+
+def _sizes(smoke: bool) -> dict:
+    if smoke:
+        return dict(n_docs=48, n_classes=4, vocab=192, m=16, doc_len=24,
+                    hmax=16, nqs=(1, 4), reps=3)
+    return dict(n_docs=512, n_classes=8, vocab=512, m=16, doc_len=20,
+                hmax=16, nqs=(1, 8, 64), reps=11)
+
+
+def _paired(fn_a, fn_b, reps: int):
+    """Interleaved timing: per-rep (a_us, b_us) pairs after joint warmup.
+    Returns (median_a_us, median_b_us, median of per-rep a/b ratios)."""
+    jax.block_until_ready(fn_a())
+    jax.block_until_ready(fn_b())
+    ta, tb, ratios = [], [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a())
+        a = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b())
+        b = (time.perf_counter() - t0) * 1e6
+        ta.append(a)
+        tb.append(b)
+        ratios.append(a / b)
+    return (float(np.median(ta)), float(np.median(tb)),
+            float(np.median(ratios)))
+
+
+def run() -> None:
+    smoke = os.environ.get("BENCH_SMOKE", "0") not in ("0", "")
+    sz = _sizes(smoke)
+    nqs, reps = sz.pop("nqs"), sz.pop("reps")
+    corpus, _ = text_corpus(**sz, seed=11)
+    report = {"bench": "bench_batch", "smoke": smoke,
+              "sizes": dict(sz, nqs=list(nqs)),
+              "backend": jax.default_backend(),
+              "entries": [], "speedup_batched_over_scan": {}}
+
+    for method, iters in CASES:
+        for nq in nqs:
+            q_ids, q_w = corpus.ids[:nq], corpus.w[:nq]
+            scan = EmdIndex.build(corpus, EngineConfig(
+                method=method, iters=iters, batch_engine="scan"))
+            batched = EmdIndex.build(corpus, EngineConfig(
+                method=method, iters=iters, batch_engine="batched"))
+            us_s, us_b, speedup = _paired(
+                lambda: scan.scores(q_ids, q_w),
+                lambda: batched.scores(q_ids, q_w), reps)
+            for engine, us in (("scan", us_s), ("batched", us_b)):
+                qps = nq / (us / 1e6)
+                emit(f"bench_batch.{method}.nq{nq}.{engine}", us,
+                     f"qps={qps:.1f}")
+                report["entries"].append(dict(
+                    method=method, iters=iters, nq=nq, engine=engine,
+                    us_per_call=round(us, 1),
+                    queries_per_sec=round(qps, 1)))
+            emit(f"bench_batch.{method}.nq{nq}.speedup", 0.0,
+                 f"batched/scan={speedup:.2f}x")
+            report["speedup_batched_over_scan"][f"{method}.nq{nq}"] = round(
+                speedup, 2)
+
+    path = os.environ.get("BENCH_BATCH_JSON", "BENCH_batch.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    run()

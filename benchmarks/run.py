@@ -6,6 +6,7 @@
   table6_dense       Table 6    dense histograms (RWMD collapse)
   table3_complexity  Tables 2/3 empirical linear-scaling check
   kernels_bench      DESIGN 2   kernel traffic/fusion model
+  bench_batch        serving    batched vs scanned queries/sec (+ JSON)
 
 Each prints ``name,us_per_call,derived`` CSV rows. All retrieval-bench
 entry points score through the unified ``repro.api.EmdIndex`` serving API
@@ -26,10 +27,11 @@ def main() -> None:
                     help="substring filter on benchmark module names")
     args = ap.parse_args()
 
-    from benchmarks import (fig8_tradeoff, kernels_bench, sinkhorn_compare,
-                            table3_complexity, table5_mnist, table6_dense)
+    from benchmarks import (bench_batch, fig8_tradeoff, kernels_bench,
+                            sinkhorn_compare, table3_complexity, table5_mnist,
+                            table6_dense)
     mods = [table6_dense, table5_mnist, fig8_tradeoff, sinkhorn_compare,
-            table3_complexity, kernels_bench]
+            table3_complexity, kernels_bench, bench_batch]
     print("name,us_per_call,derived")
     failures = 0
     for mod in mods:

@@ -33,8 +33,15 @@ class EngineConfig:
                   (max of the two directional bounds; needs a method with
                   a registered reverse, i.e. rwmd).
     top_l:        default neighbor count for ``EmdIndex.search``.
+    batch_engine: multi-query dispatch for ``EmdIndex.scores`` batches:
+                  ``batched`` (default) amortizes Phase 1 across the
+                  query batch; ``scan`` replays the exact single-query
+                  graph per query via ``lax.map`` — bit-for-bit equal to
+                  a loop of single-query calls, for verification.
     block_v/block_h/block_n: Pallas kernel tile sizes (vocabulary rows,
                   histogram slots, database rows).
+    block_q:      query-block size of the batched engine's Phase-2
+                  schedule (queries gathered/poured per tile).
     rev_block:    row-block size of the streamed reverse-RWMD scorer.
     pad_multiple: distributed backend pads database rows to a multiple of
                   this so the corpus shards on any mesh (was a magic 512).
@@ -44,9 +51,11 @@ class EngineConfig:
     backend: str = "reference"
     symmetric: bool = False
     top_l: int = 16
+    batch_engine: str = "batched"
     block_v: int = 256
     block_h: int = 256
     block_n: int = 256
+    block_q: int = 8
     rev_block: int = 256
     pad_multiple: int = 512
 
@@ -61,8 +70,11 @@ class EngineConfig:
             raise ValueError(f"iters must be >= 0, got {self.iters}")
         if self.top_l < 1:
             raise ValueError(f"top_l must be >= 1, got {self.top_l}")
-        if min(self.block_v, self.block_h, self.block_n, self.rev_block,
-               self.pad_multiple) < 1:
+        if self.batch_engine not in ("batched", "scan"):
+            raise ValueError(f"unknown batch_engine {self.batch_engine!r}; "
+                             "one of ('batched', 'scan')")
+        if min(self.block_v, self.block_h, self.block_n, self.block_q,
+               self.rev_block, self.pad_multiple) < 1:
             raise ValueError("block sizes and pad_multiple must be >= 1")
         spec = METHODS[self.method]
         if self.symmetric and not spec.symmetric and spec.reverse is None:
@@ -97,4 +109,5 @@ class EngineConfig:
                          and self.spec.supports_kernels),
             block_v=self.block_v, block_h=self.block_h,
             block_n=self.block_n, rev_block=self.rev_block,
+            block_q=self.block_q,
         )

@@ -144,7 +144,8 @@ class EmdIndex:
                                           symmetric=self.config.symmetric,
                                           **kw)
         return retrieval.batch_scores(self.corpus, q_ids, q_w,
-                                      symmetric=self.config.symmetric, **kw)
+                                      symmetric=self.config.symmetric,
+                                      engine=self.config.batch_engine, **kw)
 
     def search(self, q_ids: Array, q_w: Array,
                top_l: int | None = None) -> tuple[Array, Array]:
@@ -163,6 +164,7 @@ class EmdIndex:
             asym = self.scores(self.corpus.ids, self.corpus.w)
             return lc.symmetric_scores(asym)
         return retrieval.all_pairs_scores(self.corpus,
+                                          engine=self.config.batch_engine,
                                           **self.config.score_kwargs())
 
     # ---------------------------------------------------------- plumbing

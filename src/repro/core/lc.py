@@ -3,7 +3,10 @@
 One query histogram is scored against ``n`` database histograms that share a
 vocabulary ``V`` of ``v`` coordinates in R^m. Per-query work against the
 vocabulary is done ONCE (Phase 1), then reused across all database rows
-(Phases 2/3):
+(Phases 2/3). The ``*_batched`` engines lift that amortization one level
+further: a whole query batch shares one stacked Phase-1 matmul and a
+query-blocked Phase-2 schedule (see the "Batched multi-query engines"
+section below). Single-query structure:
 
   Phase 1:  D = dist(V, Qcoords)            (v, h)   -- one MXU matmul
             Z, S = row-top-k smallest of D  (v, k)
@@ -73,6 +76,50 @@ class Corpus:
 PAD_DIST = 1e30
 
 
+_INT_MAX = jnp.int32(2**31 - 1)
+
+
+def _extract_smallest_k(work: Array, col_ids: Array, k: int):
+    """k rounds of masked min-extraction over the last axis: per row the
+    (value, global column id) of the k smallest entries, ascending, ties
+    to the lowest id. Extracted entries are masked to PAD_DIST, matching
+    the historical ``smallest_k`` semantics on degenerate rows."""
+    zs, ss = [], []
+    for _ in range(k):
+        mv = jnp.min(work, axis=-1, keepdims=True)
+        cand = jnp.where(work == mv, col_ids, _INT_MAX)
+        mi = jnp.min(cand, axis=-1, keepdims=True)
+        work = jnp.where(col_ids == mi, jnp.asarray(PAD_DIST, work.dtype),
+                         work)
+        zs.append(mv)
+        ss.append(mi)
+    return (jnp.concatenate(zs, axis=-1),
+            jnp.concatenate(ss, axis=-1).astype(jnp.int32))
+
+
+def _merge_smallest_k(zr: Array, sr: Array, zt: Array, st: Array, k: int):
+    """Merge running (value, index) registers with a tile's top-k: k
+    extraction rounds over the 2k candidates, masking exactly one winner
+    position per round (indices may legitimately repeat on degenerate
+    rows, so masking by id alone would drop candidates)."""
+    zc = jnp.concatenate([zr, zt], axis=-1)              # (..., 2k)
+    sc = jnp.concatenate([sr, st], axis=-1)
+    pos = jax.lax.broadcasted_iota(jnp.int32, zc.shape, zc.ndim - 1)
+    out_z, out_s = [], []
+    work = zc
+    for _ in range(k):
+        mv = jnp.min(work, axis=-1, keepdims=True)
+        is_min = work == mv
+        mi = jnp.min(jnp.where(is_min, sc, _INT_MAX), axis=-1, keepdims=True)
+        win = jnp.min(jnp.where(is_min & (sc == mi), pos, _INT_MAX),
+                      axis=-1, keepdims=True)
+        work = jnp.where(pos == win, jnp.asarray(PAD_DIST, work.dtype), work)
+        out_z.append(mv)
+        out_s.append(mi)
+    return (jnp.concatenate(out_z, axis=-1),
+            jnp.concatenate(out_s, axis=-1).astype(jnp.int32))
+
+
 def smallest_k(D: Array, k: int):
     """Row-wise k smallest (values, indices), ascending, via k rounds of
     masked min-extraction — identical selection to ``lax.top_k`` (lowest
@@ -80,19 +127,45 @@ def smallest_k(D: Array, k: int):
     partitioner shards it on batch dims. The TopK custom-call does NOT
     partition and forces a full all-gather of D (EXPERIMENTS.md section
     Perf, emd-20news iteration 2). k is small (<= 16) per the paper.
+
+    Each extraction round re-scans the full matrix, so D is read k times;
+    ``streaming_smallest_k`` performs the same selection reading D once
+    and is what the engines use. This version is kept as the reference
+    the streaming path is property-tested against.
     """
     col = jax.lax.broadcasted_iota(jnp.int32, D.shape, D.ndim - 1)
-    work = D
-    zs, ss = [], []
-    for _ in range(k):
-        mv = jnp.min(work, axis=-1, keepdims=True)
-        cand = jnp.where(work == mv, col, jnp.int32(2**31 - 1))
-        mi = jnp.min(cand, axis=-1, keepdims=True)
-        work = jnp.where(col == mi, jnp.asarray(PAD_DIST, D.dtype), work)
-        zs.append(mv)
-        ss.append(mi)
-    return (jnp.concatenate(zs, axis=-1),
-            jnp.concatenate(ss, axis=-1).astype(jnp.int32))
+    return _extract_smallest_k(D, col, k)
+
+
+def streaming_smallest_k(D: Array, k: int, chunk: int = 512):
+    """Row-wise k smallest (values, indices) along the last axis in a
+    SINGLE pass over ``D``: the columns stream through in tiles of
+    ``chunk`` and k running (value, index) registers per row are updated
+    by an insertion-compare merge with each tile's candidates — D is read
+    once instead of k times (``smallest_k`` re-scans the full matrix per
+    extraction round, which at production column counts means k trips to
+    HBM). Selection is identical to ``smallest_k`` (ascending values;
+    ties resolve to the lowest column index) whenever every row has at
+    least k columns; when the column count fits one tile the schedule
+    degenerates to a single in-register extraction with no merge.
+    """
+    h = D.shape[-1]
+    if h <= chunk:
+        return smallest_k(D, k)
+    nchunks = -(-h // chunk)
+    # Pad with PAD_DIST at column ids >= h: real columns win all ties.
+    Dp = jnp.pad(D, ((0, 0),) * (D.ndim - 1) + ((0, nchunks * chunk - h),),
+                 constant_values=PAD_DIST)
+    Dt = jnp.moveaxis(Dp.reshape(D.shape[:-1] + (nchunks, chunk)), -2, 0)
+    tile_col = jax.lax.broadcasted_iota(jnp.int32, Dt.shape[1:], D.ndim - 1)
+    Z0, S0 = _extract_smallest_k(Dt[0], tile_col, k)
+
+    def body(i, carry):
+        d = jax.lax.dynamic_index_in_dim(Dt, i, 0, keepdims=False)
+        zt, st = _extract_smallest_k(d, i * chunk + tile_col, k)
+        return _merge_smallest_k(*carry, zt, st, k)
+
+    return jax.lax.fori_loop(1, nchunks, body, (Z0, S0))
 
 
 def phase1(coords: Array, q_ids: Array, q_w: Array, k: int):
@@ -105,9 +178,29 @@ def phase1(coords: Array, q_ids: Array, q_w: Array, k: int):
     qc = coords[q_ids]                                   # (h, m)
     D = pairwise_dist(coords, qc)                        # (v, h)
     D = jnp.where(q_w[None, :] > 0.0, D, PAD_DIST)
-    Z, S = smallest_k(D, k)                              # (v, k)
+    Z, S = streaming_smallest_k(D, k)                    # (v, k)
     W = q_w[S]
     return Z, W
+
+
+def phase1_batched(coords: Array, Q_ids: Array, Q_w: Array, k: int):
+    """Batched Phase 1: one fused distance matmul for the WHOLE query batch.
+
+    All nq query histograms' bins are stacked into a single (v, nq*h)
+    distance computation — one MXU call instead of nq — then the
+    single-pass top-k runs per query on the reshaped (v, nq, h) view.
+    Returns query-major Z, W of shape (nq, v, k).
+    """
+    nq, h = Q_ids.shape
+    v = coords.shape[0]
+    qc = coords[Q_ids.reshape(-1)]                       # (nq*h, m)
+    D = pairwise_dist(coords, qc).reshape(v, nq, h)      # one (v, nq*h) matmul
+    D = jnp.where(Q_w[None] > 0.0, D, PAD_DIST)
+    Z, S = streaming_smallest_k(D, k)                    # (v, nq, k)
+    Zq = jnp.moveaxis(Z, 1, 0)                           # (nq, v, k)
+    Sq = jnp.moveaxis(S, 1, 0)
+    W = jax.vmap(lambda w, s: w[s])(Q_w, Sq)             # (nq, v, k)
+    return Zq, W
 
 
 def pour(x: Array, Zg: Array, Wg: Array, iters: int) -> Array:
@@ -222,14 +315,171 @@ def lc_omr_scores(corpus: Corpus, q_ids: Array, q_w: Array, *,
         W = q_w[S]
     else:
         Z, W = phase1(corpus.coords, q_ids, q_w, 2)
-    Z0g = Z[corpus.ids][..., 0]
-    Z1g = Z[corpus.ids][..., 1]
-    W0g = W[corpus.ids][..., 0]
+    Zg = Z[corpus.ids]                                   # (n, hmax, 2)
+    W0g = W[corpus.ids][..., 0]                          # one gather each
     x = corpus.w
-    overlap = Z0g == 0.0
+    overlap = Zg[..., 0] == 0.0
     rest = x - jnp.minimum(x, W0g)
-    per_entry = jnp.where(overlap, rest * Z1g, x * Z0g)
+    per_entry = jnp.where(overlap, rest * Zg[..., 1], x * Zg[..., 0])
     return jnp.sum(per_entry, axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Batched multi-query engines: the query batch is a first-class axis.
+# Phase 1 runs ONCE for the whole batch (one stacked (v, nq*h) matmul +
+# one single-pass top-k); Phase 2/3 stream query blocks so the
+# (nq, n, hmax, k) gather tensor is never materialized.
+# --------------------------------------------------------------------------
+
+
+def _map_query_blocks(fn, arrays, nq: int, block_q: int):
+    """``lax.map`` ``fn`` over blocks of ``block_q`` queries.
+
+    Each array has leading query axis ``nq``; the axis is zero-padded to a
+    block multiple (padding scores are dropped) and ``fn`` receives one
+    ``(block_q, ...)`` slice per array. Output re-flattened to (nq, ...).
+    A batch that fits one block runs ``fn`` directly, fully vectorized.
+    """
+    if nq <= block_q:
+        return fn(*arrays)
+    pad = (-nq) % block_q
+    padded = tuple(jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+                   for a in arrays)
+    blocked = tuple(a.reshape((-1, block_q) + a.shape[1:]) for a in padded)
+    out = jax.lax.map(lambda args: fn(*args), blocked)
+    return out.reshape((-1,) + out.shape[2:])[:nq]
+
+
+def _phase1_batched_dispatch(corpus: Corpus, Q_ids: Array, Q_w: Array,
+                             k: int, use_kernels: bool, block_v: int,
+                             block_h: int):
+    """Batched Phase 1 via the fused Pallas kernel or the jnp reference.
+    Returns query-major Z, W of shape (nq, v, k)."""
+    if use_kernels:
+        from repro.kernels import ops as kops
+        Z, S = kops.dist_topk_batched(corpus.coords, corpus.coords[Q_ids], k,
+                                      qmask=(Q_w > 0.0), block_v=block_v,
+                                      block_h=block_h)
+        W = jax.vmap(lambda w, s: w[s])(Q_w, S)
+        return Z, W
+    return phase1_batched(corpus.coords, Q_ids, Q_w, k)
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "use_kernels",
+                                             "block_q", "block_v", "block_h",
+                                             "block_n"))
+def lc_act_scores_batched(corpus: Corpus, Q_ids: Array, Q_w: Array,
+                          iters: int = 1, *, use_kernels: bool = False,
+                          block_q: int = 8, block_v: int = 256,
+                          block_h: int = 256, block_n: int = 256) -> Array:
+    """Batched LC-ACT: (nq, h) query batch -> (nq, n) lower bounds.
+
+    Phase 2/3 run a query-major blocked schedule: each block of
+    ``block_q`` queries gathers its (block_q, n, hmax, k) cost/capacity
+    ladders once and pours (fused Pallas kernel when ``use_kernels``).
+    """
+    k = iters + 1
+    nq = Q_ids.shape[0]
+    x = corpus.w
+    if iters == 0 and not use_kernels:
+        # Zero Phase-2 rounds only ever read the nearest distance, so
+        # Phase 1 is a plain masked min — no ranked registers, no W.
+        nq_, h = Q_ids.shape
+        qc = corpus.coords[Q_ids.reshape(-1)]            # (nq*h, m)
+        D = pairwise_dist(corpus.coords, qc).reshape(corpus.v, nq_, h)
+        D = jnp.where(Q_w[None] > 0.0, D, PAD_DIST)
+        Z0 = jnp.min(D, axis=-1).T                       # (nq, v)
+
+        def blk_min(Zb):                                 # (bq, v)
+            return jnp.sum(x * Zb[:, corpus.ids], axis=-1)
+        return _map_query_blocks(blk_min, (Z0,), nq, block_q)
+    Z, W = _phase1_batched_dispatch(corpus, Q_ids, Q_w, k, use_kernels,
+                                    block_v, block_h)
+    if iters == 0:
+        def blk0(Zb):                                    # (bq, v, 1)
+            return jnp.sum(x * Zb[..., 0][:, corpus.ids], axis=-1)
+        return _map_query_blocks(blk0, (Z,), nq, block_q)
+    W = W[..., :iters]
+    if use_kernels:
+        from repro.kernels import ops as kops
+
+        def blk_k(Zb, Wb):
+            Zg = Zb[:, corpus.ids]                       # (bq, n, hmax, k)
+            Wg = Wb[:, corpus.ids]                       # (bq, n, hmax, iters)
+            return kops.act_phase2_batched(x, Zg, Wg, block_n=block_n,
+                                           block_h=block_h)
+        return _map_query_blocks(blk_k, (Z, W), nq, block_q)
+
+    def blk(Zb, Wb):
+        Zg = Zb[:, corpus.ids]                           # (bq, n, hmax, k)
+        Wg = Wb[:, corpus.ids]                           # (bq, n, hmax, iters)
+        return pour(x, Zg, Wg, iters)                    # (bq, n)
+    return _map_query_blocks(blk, (Z, W), nq, block_q)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernels", "block_q",
+                                             "block_v", "block_h"))
+def lc_rwmd_scores_batched(corpus: Corpus, Q_ids: Array, Q_w: Array, *,
+                           use_kernels: bool = False, block_q: int = 8,
+                           block_v: int = 256, block_h: int = 256) -> Array:
+    """Batched LC-RWMD db -> query (== batched LC-ACT with zero rounds)."""
+    return lc_act_scores_batched(corpus, Q_ids, Q_w, iters=0,
+                                 use_kernels=use_kernels, block_q=block_q,
+                                 block_v=block_v, block_h=block_h)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "block_q"))
+def lc_rwmd_scores_rev_batched(corpus: Corpus, Q_ids: Array, Q_w: Array,
+                               block: int = 256, block_q: int = 8) -> Array:
+    """Batched LC-RWMD query -> db: the distance matrix against the
+    vocabulary is computed once for the WHOLE batch (one (v, nq*h)
+    matmul), then streamed in (row-block, query-block) tiles of masked
+    minima so the (n, hmax, nq, h) gather never materializes."""
+    nq, h = Q_ids.shape
+    qc = corpus.coords[Q_ids.reshape(-1)]                # (nq*h, m)
+    D = pairwise_dist(corpus.coords, qc)                 # (v, nq*h)
+    Dq = jnp.moveaxis(D.reshape(corpus.v, nq, h), 1, 0)  # (nq, v, h)
+    valid = corpus.w > 0.0                               # (n, hmax)
+    big = jnp.asarray(jnp.inf, D.dtype)
+    n = corpus.n
+    pad = (-n) % block
+    ids_b = jnp.pad(corpus.ids, ((0, pad), (0, 0))).reshape(-1, block,
+                                                            corpus.hmax)
+    valid_b = jnp.pad(valid, ((0, pad), (0, 0)),
+                      constant_values=True).reshape(-1, block, corpus.hmax)
+
+    def qblock(Db, Wb):                                  # (bq, v, h), (bq, h)
+        def rblock(args):
+            ids_blk, valid_blk = args
+            Dg = Db[:, ids_blk]                          # (bq, b, hmax, h)
+            Dg = jnp.where(valid_blk[None, ..., None], Dg, big)
+            cmin = jnp.min(Dg, axis=2)                   # (bq, b, h)
+            return jnp.einsum("qbh,qh->qb", cmin, Wb)
+        out = jax.lax.map(rblock, (ids_b, valid_b))      # (nrb, bq, b)
+        return jnp.moveaxis(out, 1, 0).reshape(Db.shape[0], -1)[:, :n]
+    return _map_query_blocks(qblock, (Dq, Q_w), nq, block_q)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernels", "block_q",
+                                             "block_v", "block_h"))
+def lc_omr_scores_batched(corpus: Corpus, Q_ids: Array, Q_w: Array, *,
+                          use_kernels: bool = False, block_q: int = 8,
+                          block_v: int = 256, block_h: int = 256) -> Array:
+    """Batched LC-OMR: shared batched Phase 1 (top-2 per vocabulary row),
+    query-blocked Algorithm-1 reduction."""
+    nq = Q_ids.shape[0]
+    Z, W = _phase1_batched_dispatch(corpus, Q_ids, Q_w, 2, use_kernels,
+                                    block_v, block_h)
+    x = corpus.w
+
+    def blk(Zb, W0b):                                    # (bq, v, 2), (bq, v)
+        Zg = Zb[:, corpus.ids]                           # (bq, n, hmax, 2)
+        W0g = W0b[:, corpus.ids]                         # (bq, n, hmax)
+        overlap = Zg[..., 0] == 0.0
+        rest = x - jnp.minimum(x, W0g)
+        per_entry = jnp.where(overlap, rest * Zg[..., 1], x * Zg[..., 0])
+        return jnp.sum(per_entry, axis=-1)
+    return _map_query_blocks(blk, (Z, W[..., 0]), nq, block_q)
 
 
 def symmetric_scores(asym: Array) -> Array:

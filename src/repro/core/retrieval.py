@@ -7,8 +7,10 @@ is the fraction of retrieved neighbors sharing the query's label.
 The registry is typed: every entry is a :class:`MethodSpec` whose scorer
 shares one uniform signature, so ``search`` / ``all_pairs_scores`` jit
 end-to-end with no per-method special-casing. ``search`` runs one query;
-``all_pairs_scores`` builds the full n x n bound matrix (scanned/jitted)
-and symmetrizes it unless the method is already symmetric.
+``batch_scores`` runs a query batch through the method's multi-query
+engine (Phase 1 amortized across the batch; ``engine="scan"`` falls back
+to the per-query graph); ``all_pairs_scores`` builds the full n x n bound
+matrix and symmetrizes it unless the method is already symmetric.
 
 NOTE (serving callers): prefer ``repro.api.EmdIndex`` — the unified facade
 over this module, the Pallas kernels, and the distributed engine in
@@ -40,7 +42,7 @@ class ScoreFn(Protocol):
     def __call__(self, corpus: lc.Corpus, q_ids: Array, q_w: Array, *,
                  iters: int = 1, use_kernels: bool = False,
                  block_v: int = 256, block_h: int = 256, block_n: int = 256,
-                 rev_block: int = 256) -> Array: ...
+                 rev_block: int = 256, block_q: int = 8) -> Array: ...
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +60,10 @@ class MethodSpec:
     reverse:     registry name of the opposite-direction bound, if one
                  exists (rwmd <-> rwmd_rev); enables the per-query
                  symmetric path ``symmetric_query_scores``.
+    batch_fn:    multi-query scorer with the same uniform signature but
+                 (nq, h) queries -> (nq, n) scores; amortizes Phase 1
+                 across the batch. ``None`` falls back to the scanned
+                 per-query path in ``batch_scores``.
     """
     name: str
     paper_name: str
@@ -66,6 +72,7 @@ class MethodSpec:
     uses_iters: bool = False
     supports_kernels: bool = False
     reverse: str | None = None
+    batch_fn: ScoreFn | None = None
 
 
 METHODS: dict[str, MethodSpec] = {}
@@ -83,6 +90,15 @@ def _register(name: str, *, paper_name: str, symmetric: bool = False,
     return deco
 
 
+def _register_batch(name: str) -> Callable[[ScoreFn], ScoreFn]:
+    """Attach a batched (multi-query) scorer to an already-registered
+    method; the single-query ``fn`` stays the parity oracle."""
+    def deco(fn: ScoreFn) -> ScoreFn:
+        METHODS[name] = dataclasses.replace(METHODS[name], batch_fn=fn)
+        return fn
+    return deco
+
+
 @_register("rwmd", paper_name="LC-RWMD (db -> query)",
            supports_kernels=True, reverse="rwmd_rev")
 def _rwmd(corpus, q_ids, q_w, *, use_kernels=False, block_v=256,
@@ -91,9 +107,24 @@ def _rwmd(corpus, q_ids, q_w, *, use_kernels=False, block_v=256,
                              block_v=block_v, block_h=block_h)
 
 
+@_register_batch("rwmd")
+def _rwmd_batch(corpus, q_ids, q_w, *, use_kernels=False, block_v=256,
+                block_h=256, block_q=8, **_):
+    return lc.lc_rwmd_scores_batched(corpus, q_ids, q_w,
+                                     use_kernels=use_kernels,
+                                     block_q=block_q, block_v=block_v,
+                                     block_h=block_h)
+
+
 @_register("rwmd_rev", paper_name="LC-RWMD (query -> db)", reverse="rwmd")
 def _rwmd_rev(corpus, q_ids, q_w, *, rev_block=256, **_):
     return lc.lc_rwmd_scores_rev(corpus, q_ids, q_w, block=rev_block)
+
+
+@_register_batch("rwmd_rev")
+def _rwmd_rev_batch(corpus, q_ids, q_w, *, rev_block=256, block_q=8, **_):
+    return lc.lc_rwmd_scores_rev_batched(corpus, q_ids, q_w, block=rev_block,
+                                         block_q=block_q)
 
 
 @_register("omr", paper_name="LC-OMR", supports_kernels=True)
@@ -103,6 +134,14 @@ def _omr(corpus, q_ids, q_w, *, use_kernels=False, block_v=256,
                             block_v=block_v, block_h=block_h)
 
 
+@_register_batch("omr")
+def _omr_batch(corpus, q_ids, q_w, *, use_kernels=False, block_v=256,
+               block_h=256, block_q=8, **_):
+    return lc.lc_omr_scores_batched(corpus, q_ids, q_w,
+                                    use_kernels=use_kernels, block_q=block_q,
+                                    block_v=block_v, block_h=block_h)
+
+
 @_register("act", paper_name="LC-ACT-k", uses_iters=True,
            supports_kernels=True)
 def _act(corpus, q_ids, q_w, *, iters=1, use_kernels=False, block_v=256,
@@ -110,6 +149,15 @@ def _act(corpus, q_ids, q_w, *, iters=1, use_kernels=False, block_v=256,
     return lc.lc_act_scores(corpus, q_ids, q_w, iters=iters,
                             use_kernels=use_kernels, block_v=block_v,
                             block_h=block_h, block_n=block_n)
+
+
+@_register_batch("act")
+def _act_batch(corpus, q_ids, q_w, *, iters=1, use_kernels=False,
+               block_v=256, block_h=256, block_n=256, block_q=8, **_):
+    return lc.lc_act_scores_batched(corpus, q_ids, q_w, iters=iters,
+                                    use_kernels=use_kernels, block_q=block_q,
+                                    block_v=block_v, block_h=block_h,
+                                    block_n=block_n)
 
 
 @_register("bow", paper_name="BoW cosine baseline", symmetric=True)
@@ -123,6 +171,18 @@ def _bow(corpus, q_ids, q_w, **_):
     return 1.0 - dots
 
 
+@_register_batch("bow")
+def _bow_batch(corpus, q_ids, q_w, **_):
+    nq = q_ids.shape[0]
+    qv = jnp.zeros((nq, corpus.v), corpus.w.dtype)
+    qv = qv.at[jnp.arange(nq)[:, None], q_ids].add(q_w)
+    qv = qv / jnp.maximum(jnp.linalg.norm(qv, axis=1, keepdims=True), 1e-12)
+    wn = corpus.w / jnp.maximum(
+        jnp.linalg.norm(corpus.w, axis=1, keepdims=True), 1e-12)
+    dots = jnp.einsum("us,qus->qu", wn, qv[:, corpus.ids])
+    return 1.0 - dots
+
+
 @_register("wcd", paper_name="Word Centroid Distance baseline",
            symmetric=True)
 def _wcd(corpus, q_ids, q_w, **_):
@@ -132,8 +192,15 @@ def _wcd(corpus, q_ids, q_w, **_):
     return jnp.linalg.norm(cent - qc[None, :], axis=1)
 
 
+@_register_batch("wcd")
+def _wcd_batch(corpus, q_ids, q_w, **_):
+    qc = jnp.einsum("qh,qhm->qm", q_w, corpus.coords[q_ids])
+    cent = jax.vmap(lambda i, w: w @ corpus.coords[i])(corpus.ids, corpus.w)
+    return jnp.linalg.norm(cent[None, :] - qc[:, None], axis=-1)
+
+
 _STATIC_KW = ("method", "iters", "use_kernels", "block_v", "block_h",
-              "block_n", "rev_block")
+              "block_n", "rev_block", "block_q")
 
 
 @functools.partial(jax.jit,
@@ -142,7 +209,7 @@ def query_scores(corpus: lc.Corpus, q_ids: Array, q_w: Array, *,
                  method: str = "act", symmetric: bool = False,
                  iters: int = 1, use_kernels: bool = False,
                  block_v: int = 256, block_h: int = 256, block_n: int = 256,
-                 rev_block: int = 256) -> Array:
+                 rev_block: int = 256, block_q: int = 8) -> Array:
     """One query against the whole database, jitted end-to-end.
 
     ``symmetric=True`` returns the paper's symmetric measure for a single
@@ -163,18 +230,47 @@ def query_scores(corpus: lc.Corpus, q_ids: Array, q_w: Array, *,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("method", "symmetric") + _STATIC_KW[1:])
+                   static_argnames=("method", "symmetric", "engine")
+                   + _STATIC_KW[1:])
 def batch_scores(corpus: lc.Corpus, q_ids: Array, q_w: Array, *,
                  method: str = "act", symmetric: bool = False,
-                 iters: int = 1, use_kernels: bool = False,
-                 block_v: int = 256, block_h: int = 256, block_n: int = 256,
-                 rev_block: int = 256) -> Array:
+                 engine: str = "batched", iters: int = 1,
+                 use_kernels: bool = False, block_v: int = 256,
+                 block_h: int = 256, block_n: int = 256,
+                 rev_block: int = 256, block_q: int = 8) -> Array:
     """Batch of queries ``(nq, h)`` -> ``(nq, n)`` score matrix.
 
-    Scanned (``lax.map``) rather than vmapped so each query runs the exact
-    single-query compute graph: batched results match a Python loop of
-    ``query_scores`` calls bit-for-bit.
+    ``engine="batched"`` (default) dispatches to the method's multi-query
+    engine: Phase 1 (the vocabulary-vs-query distance work) runs ONCE for
+    the whole batch and Phase 2/3 stream query blocks of ``block_q`` —
+    this is the serving hot path. ``engine="scan"`` is the fallback that
+    runs each query through the exact single-query compute graph via
+    ``lax.map``, matching a Python loop of ``query_scores`` calls
+    bit-for-bit; use it to verify the batched engine or on methods
+    without a registered ``batch_fn``.
     """
+    if engine not in ("batched", "scan"):
+        raise ValueError(f"unknown engine {engine!r}; "
+                         "one of ('batched', 'scan')")
+    spec = METHODS[method]
+    if engine == "batched" and spec.batch_fn is not None:
+        kw = dict(iters=iters, use_kernels=use_kernels, block_v=block_v,
+                  block_h=block_h, block_n=block_n, rev_block=rev_block,
+                  block_q=block_q)
+        fwd = spec.batch_fn(corpus, q_ids, q_w, **kw)
+        if not symmetric or spec.symmetric:
+            return fwd
+        if spec.reverse is None:
+            raise ValueError(
+                f"method {method!r} has no reverse direction registered; "
+                "symmetric scoring needs one (use rwmd/rwmd_rev)")
+        rspec = METHODS[spec.reverse]
+        if rspec.batch_fn is not None:
+            return jnp.maximum(fwd, rspec.batch_fn(corpus, q_ids, q_w, **kw))
+        rev = jax.lax.map(lambda ab: rspec.fn(corpus, ab[0], ab[1], **kw),
+                          (q_ids, q_w))
+        return jnp.maximum(fwd, rev)
+
     def one(ab):
         return query_scores(corpus, ab[0], ab[1], method=method,
                             symmetric=symmetric, iters=iters,
@@ -189,7 +285,7 @@ def batch_scores(corpus: lc.Corpus, q_ids: Array, q_w: Array, *,
 def search(corpus: lc.Corpus, q_ids: Array, q_w: Array, top_l: int,
            method: str = "act", iters: int = 1, *, symmetric: bool = False,
            use_kernels: bool = False, block_v: int = 256, block_h: int = 256,
-           block_n: int = 256, rev_block: int = 256):
+           block_n: int = 256, rev_block: int = 256, block_q: int = 8):
     """Return (scores, indices) of the top-l most similar database rows.
 
     Jitted end-to-end (method dispatch is static), so scoring + top-k
@@ -204,22 +300,26 @@ def search(corpus: lc.Corpus, q_ids: Array, q_w: Array, top_l: int,
     return -neg, idx
 
 
-@functools.partial(jax.jit, static_argnames=_STATIC_KW)
+@functools.partial(jax.jit, static_argnames=_STATIC_KW + ("engine",))
 def all_pairs_scores(corpus: lc.Corpus, method: str = "act",
-                     iters: int = 1, *, use_kernels: bool = False,
+                     iters: int = 1, *, engine: str = "batched",
+                     use_kernels: bool = False,
                      block_v: int = 256, block_h: int = 256,
-                     block_n: int = 256, rev_block: int = 256) -> Array:
+                     block_n: int = 256, rev_block: int = 256,
+                     block_q: int = 8) -> Array:
     """n x n symmetric bound matrix over the corpus (paper's eval mode).
 
     asym[a, b] = directional bound of moving histogram b INTO histogram a
     (query = row a); symmetric = max(asym, asym^T) unless the method's
-    spec declares the measure already symmetric.
+    spec declares the measure already symmetric. ``engine`` selects the
+    batched multi-query engine or the scanned per-query fallback (see
+    ``batch_scores``).
     """
     spec = METHODS[method]
     asym = batch_scores(corpus, corpus.ids, corpus.w, method=method,
-                        iters=iters, use_kernels=use_kernels,
+                        engine=engine, iters=iters, use_kernels=use_kernels,
                         block_v=block_v, block_h=block_h, block_n=block_n,
-                        rev_block=rev_block)
+                        rev_block=rev_block, block_q=block_q)
     if spec.symmetric:
         return asym
     return lc.symmetric_scores(asym)

@@ -10,6 +10,11 @@ per-row transport cost in a single pass: HBM traffic / k vs the paper.
 The pour itself uses the exclusive-prefix formulation (mathematically equal
 to the sequential min/subtract rounds): r_l = clip(x - sum_{u<l} W_u, 0, W_l).
 k is static and small, so the l-loop is unrolled Python.
+
+The grid carries a query-batch dimension as its outermost (parallel) axis:
+the residual-weight blocks of x are shared across queries while each query
+streams its own (cost, capacity) ladders, so a batch of queries pours in
+one kernel launch.
 """
 from __future__ import annotations
 
@@ -21,23 +26,25 @@ from jax.experimental import pallas as pl
 
 
 def _act_phase2_kernel(x_ref, zg_ref, wg_ref, t_ref, *, iters: int):
-    """Grid = (n_blocks, h_blocks); h blocks accumulate into t."""
-    j = pl.program_id(1)
+    """Grid = (nq, n_blocks, h_blocks); the query batch is the outermost
+    (parallel) axis — x blocks are shared across it — and h blocks
+    accumulate into t."""
+    j = pl.program_id(2)
 
     x = x_ref[...].astype(jnp.float32)                       # (bn, bh)
     acc = jnp.zeros_like(x)
     prefix = jnp.zeros_like(x)
     poured = jnp.zeros_like(x)
     for l in range(iters):
-        w_l = wg_ref[..., l].astype(jnp.float32)             # (bn, bh)
-        z_l = zg_ref[..., l].astype(jnp.float32)
+        w_l = wg_ref[0, ..., l].astype(jnp.float32)          # (bn, bh)
+        z_l = zg_ref[0, ..., l].astype(jnp.float32)
         r = jnp.clip(x - prefix, 0.0, w_l)
         acc = acc + r * z_l
         poured = poured + r
         prefix = prefix + w_l
     remainder = jnp.maximum(x - poured, 0.0)
-    acc = acc + remainder * zg_ref[..., iters].astype(jnp.float32)
-    partial = jnp.sum(acc, axis=1, keepdims=True)            # (bn, 1)
+    acc = acc + remainder * zg_ref[0, ..., iters].astype(jnp.float32)
+    partial = jnp.sum(acc, axis=1, keepdims=True)[None]      # (1, bn, 1)
 
     @pl.when(j == 0)
     def _init():
@@ -53,30 +60,33 @@ def _act_phase2_kernel(x_ref, zg_ref, wg_ref, t_ref, *, iters: int):
 def act_phase2_pallas(x: jax.Array, zg: jax.Array, wg: jax.Array, *,
                       block_n: int = 256, block_h: int = 256,
                       interpret: bool = False) -> jax.Array:
-    """Fused Phase-2 pour + Phase-3 dump.
+    """Fused Phase-2 pour + Phase-3 dump over a query batch.
 
     Args:
-      x:  (n, hmax) residual database weights (padding slots are 0).
-      zg: (n, hmax, iters+1) ascending per-entry transport-cost ladder.
-      wg: (n, hmax, iters) per-entry capacity ladder (query weights).
-    Returns t: (n, 1) transport-cost lower bounds.
+      x:  (n, hmax) residual database weights, shared by all queries
+          (padding slots are 0).
+      zg: (nq, n, hmax, iters+1) per-query ascending transport-cost ladder.
+      wg: (nq, n, hmax, iters) per-query capacity ladder (query weights).
+    Returns t: (nq, n, 1) transport-cost lower bounds.
     Caller guarantees n % block_n == 0 and hmax % block_h == 0 (see ops.py).
     """
     n, hmax = x.shape
-    iters = wg.shape[-1]
-    assert zg.shape == (n, hmax, iters + 1), (zg.shape, x.shape, iters)
+    nq, iters = wg.shape[0], wg.shape[-1]
+    assert zg.shape == (nq, n, hmax, iters + 1), (zg.shape, x.shape, iters)
     assert n % block_n == 0 and hmax % block_h == 0, (n, hmax, block_n, block_h)
-    grid = (n // block_n, hmax // block_h)
+    grid = (nq, n // block_n, hmax // block_h)
     kernel = functools.partial(_act_phase2_kernel, iters=iters)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_n, block_h), lambda i, j: (i, j)),
-            pl.BlockSpec((block_n, block_h, iters + 1), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((block_n, block_h, iters), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((block_n, block_h), lambda q, i, j: (i, j)),
+            pl.BlockSpec((1, block_n, block_h, iters + 1),
+                         lambda q, i, j: (q, i, j, 0)),
+            pl.BlockSpec((1, block_n, block_h, iters),
+                         lambda q, i, j: (q, i, j, 0)),
         ],
-        out_specs=pl.BlockSpec((block_n, 1), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        out_specs=pl.BlockSpec((1, block_n, 1), lambda q, i, j: (q, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nq, n, 1), jnp.float32),
         interpret=interpret,
     )(x, zg, wg)

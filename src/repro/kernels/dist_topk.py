@@ -10,6 +10,10 @@ output refs — D never leaves VMEM. Output is O(v*k) instead of O(v*h).
 k is small (<= 16 in the paper), so selection is a k-round masked row-min
 network on the VPU rather than a sort: each round extracts the current row
 minimum and masks it out with a one-hot built from broadcasted iota.
+
+The grid carries a query-batch dimension as its outermost (parallel) axis:
+a batch of nq queries runs as one kernel launch with coords tiles shared
+across queries, so multi-query serving needs no host-side looping.
 """
 from __future__ import annotations
 
@@ -39,11 +43,13 @@ def _rowmin_extract(d, col_ids):
 
 def _dist_topk_kernel(v_ref, q_ref, qmask_ref, z_ref, s_ref, *, k: int,
                       block_h: int):
-    """Grid = (v_blocks, h_blocks); h is the sequential merge axis."""
-    j = pl.program_id(1)
+    """Grid = (nq, v_blocks, h_blocks); the query batch is the outermost
+    (parallel) axis, h the innermost sequential merge axis. Each (q, i)
+    output block carries its running (Z, S) across the h sweep."""
+    j = pl.program_id(2)
 
     vt = v_ref[...].astype(jnp.float32)                           # (bv, m)
-    qt = q_ref[...].astype(jnp.float32)                           # (bh, m)
+    qt = q_ref[0].astype(jnp.float32)                             # (bh, m)
     v2 = jnp.sum(vt * vt, axis=1, keepdims=True)                  # (bv, 1)
     q2 = jnp.sum(qt * qt, axis=1, keepdims=True).T                # (1, bh)
     d = v2 + q2 - 2.0 * jax.lax.dot_general(
@@ -54,7 +60,7 @@ def _dist_topk_kernel(v_ref, q_ref, qmask_ref, z_ref, s_ref, *, k: int,
     d = jnp.where(d < 1e-6 * (v2 + q2), 0.0, d)
     d = jnp.sqrt(d)
     # Invalid columns (padding / zero-weight query bins) never win.
-    d = jnp.where(qmask_ref[...] > 0, d, BIG)                     # (1, bh) bcast
+    d = jnp.where(qmask_ref[0] > 0, d, BIG)                       # (1, bh) bcast
 
     bv = d.shape[0]
     col0 = j * block_h
@@ -71,14 +77,14 @@ def _dist_topk_kernel(v_ref, q_ref, qmask_ref, z_ref, s_ref, *, k: int,
 
     @pl.when(j == 0)
     def _init():
-        z_ref[...] = z_tile
-        s_ref[...] = s_tile
+        z_ref[...] = z_tile[None]
+        s_ref[...] = s_tile[None]
 
     @pl.when(j > 0)
     def _merge():
         # Merge running (k) with tile (k): k extraction rounds over 2k cands.
-        zc = jnp.concatenate([z_ref[...], z_tile], axis=1)        # (bv, 2k)
-        sc = jnp.concatenate([s_ref[...], s_tile], axis=1)
+        zc = jnp.concatenate([z_ref[0], z_tile], axis=1)          # (bv, 2k)
+        sc = jnp.concatenate([s_ref[0], s_tile], axis=1)
         out_z, out_s = [], []
         work = zc
         for _ in range(k):
@@ -94,8 +100,8 @@ def _dist_topk_kernel(v_ref, q_ref, qmask_ref, z_ref, s_ref, *, k: int,
             work = jnp.where(pos == win_pos, BIG, work)
             out_z.append(mv)
             out_s.append(mi)
-        z_ref[...] = jnp.concatenate(out_z, axis=1)
-        s_ref[...] = jnp.concatenate(out_s, axis=1)
+        z_ref[...] = jnp.concatenate(out_z, axis=1)[None]
+        s_ref[...] = jnp.concatenate(out_s, axis=1)[None]
 
 
 @functools.partial(jax.jit,
@@ -103,37 +109,37 @@ def _dist_topk_kernel(v_ref, q_ref, qmask_ref, z_ref, s_ref, *, k: int,
 def dist_topk_pallas(coords: jax.Array, qc: jax.Array, qmask: jax.Array,
                      k: int, *, block_v: int = 256, block_h: int = 256,
                      interpret: bool = False):
-    """Fused Euclidean distance + row-top-k.
+    """Fused Euclidean distance + row-top-k over a query batch.
 
     Args:
-      coords: (v, m) vocabulary embedding vectors.
-      qc:     (h, m) query-bin embedding vectors.
-      qmask:  (1, h) 1.0 for valid query bins, 0.0 for padding.
+      coords: (v, m) vocabulary embedding vectors, shared by all queries.
+      qc:     (nq, h, m) query-bin embedding vectors.
+      qmask:  (nq, 1, h) 1.0 for valid query bins, 0.0 for padding.
       k:      number of smallest distances to keep per vocabulary row.
     Returns:
-      Z: (v, k) ascending distances; S: (v, k) int32 query-bin indices.
+      Z: (nq, v, k) ascending distances; S: (nq, v, k) int32 bin indices.
     Caller guarantees v % block_v == 0 and h % block_h == 0 (see ops.py).
     """
     v, m = coords.shape
-    h = qc.shape[0]
+    nq, h, _ = qc.shape
     assert v % block_v == 0 and h % block_h == 0, (v, h, block_v, block_h)
-    grid = (v // block_v, h // block_h)
+    grid = (nq, v // block_v, h // block_h)
     kernel = functools.partial(_dist_topk_kernel, k=k, block_h=block_h)
     z, s = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_v, m), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_h, m), lambda i, j: (j, 0)),
-            pl.BlockSpec((1, block_h), lambda i, j: (0, j)),
+            pl.BlockSpec((block_v, m), lambda q, i, j: (i, 0)),
+            pl.BlockSpec((1, block_h, m), lambda q, i, j: (q, j, 0)),
+            pl.BlockSpec((1, 1, block_h), lambda q, i, j: (q, 0, j)),
         ],
         out_specs=[
-            pl.BlockSpec((block_v, k), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_v, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_v, k), lambda q, i, j: (q, i, 0)),
+            pl.BlockSpec((1, block_v, k), lambda q, i, j: (q, i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((v, k), jnp.float32),
-            jax.ShapeDtypeStruct((v, k), jnp.int32),
+            jax.ShapeDtypeStruct((nq, v, k), jnp.float32),
+            jax.ShapeDtypeStruct((nq, v, k), jnp.int32),
         ],
         interpret=interpret,
     )(coords, qc, qmask)

@@ -24,42 +24,71 @@ def _round_up(x: int, b: int) -> int:
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block_v", "block_h"))
+def dist_topk_batched(coords: jax.Array, qcs: jax.Array, k: int, *,
+                      qmask: jax.Array | None = None,
+                      block_v: int = 256, block_h: int = 256):
+    """Fused distance + row-top-k for a query batch in one kernel launch.
+
+    coords (v, m), qcs (nq, h, m) -> Z, S (nq, v, k).
+    ``qmask``: optional (nq, h) validity mask (1 = real query bin);
+    padding columns added here for blocking are always masked out.
+    """
+    v, m = coords.shape
+    nq, h, _ = qcs.shape
+    block_v = min(block_v, _round_up(v, 8))
+    block_h = min(block_h, _round_up(h, 8))
+    vp = _round_up(v, block_v)
+    hp = _round_up(h, block_h)
+    mask = (jnp.ones((nq, h), jnp.float32) if qmask is None
+            else qmask.astype(jnp.float32))
+    mask = jnp.pad(mask, ((0, 0), (0, hp - h))).reshape(nq, 1, hp)
+    coords_p = jnp.pad(coords, ((0, vp - v), (0, 0)))
+    qcs_p = jnp.pad(qcs, ((0, 0), (0, hp - h), (0, 0)))
+    z, s = dist_topk_pallas(coords_p, qcs_p, mask, k, block_v=block_v,
+                            block_h=block_h, interpret=_interpret_default())
+    return z[:, :v], s[:, :v]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_v", "block_h"))
 def dist_topk(coords: jax.Array, qc: jax.Array, k: int, *,
               qmask: jax.Array | None = None,
               block_v: int = 256, block_h: int = 256):
     """Fused distance + row-top-k. coords (v, m), qc (h, m) -> Z, S (v, k).
 
-    ``qmask``: optional (h,) validity mask (1 = real query bin); padding
-    columns added here for blocking are always masked out.
+    Single-query view of ``dist_topk_batched`` (query-batch grid of 1).
+    ``qmask``: optional (h,) validity mask (1 = real query bin).
     """
-    v, m = coords.shape
-    h = qc.shape[0]
-    block_v = min(block_v, _round_up(v, 8))
-    block_h = min(block_h, _round_up(h, 8))
-    vp = _round_up(v, block_v)
-    hp = _round_up(h, block_h)
-    mask = jnp.ones((h,), jnp.float32) if qmask is None else qmask.astype(jnp.float32)
-    mask = jnp.pad(mask, (0, hp - h)).reshape(1, hp)
-    coords_p = jnp.pad(coords, ((0, vp - v), (0, 0)))
-    qc_p = jnp.pad(qc, ((0, hp - h), (0, 0)))
-    z, s = dist_topk_pallas(coords_p, qc_p, mask, k, block_v=block_v,
-                            block_h=block_h, interpret=_interpret_default())
-    return z[:v], s[:v]
+    z, s = dist_topk_batched(coords, qc[None], k,
+                             qmask=None if qmask is None else qmask[None],
+                             block_v=block_v, block_h=block_h)
+    return z[0], s[0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_h"))
+def act_phase2_batched(x: jax.Array, zg: jax.Array, wg: jax.Array, *,
+                       block_n: int = 256, block_h: int = 256) -> jax.Array:
+    """Fused Phase-2/3 pour for a query batch in one kernel launch.
+
+    x (n, hmax) shared residual weights; zg (nq, n, hmax, k) and
+    wg (nq, n, hmax, k-1) per-query ladders -> t (nq, n). Padding
+    rows/slots must carry zero weight (they do, by the Corpus
+    construction), so block padding contributes exactly 0 cost."""
+    n, hmax = x.shape
+    block_n = min(block_n, _round_up(n, 8))
+    block_h = min(block_h, _round_up(hmax, 8))
+    np_, hp = _round_up(n, block_n), _round_up(hmax, block_h)
+    pad2 = ((0, np_ - n), (0, hp - hmax))
+    pad4 = ((0, 0),) + pad2 + ((0, 0),)
+    t = act_phase2_pallas(jnp.pad(x, pad2), jnp.pad(zg, pad4),
+                          jnp.pad(wg, pad4), block_n=block_n,
+                          block_h=block_h, interpret=_interpret_default())
+    return t[:, :n, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "block_h"))
 def act_phase2(x: jax.Array, zg: jax.Array, wg: jax.Array, *,
                block_n: int = 256, block_h: int = 256) -> jax.Array:
     """Fused Phase-2/3 pour. x (n, hmax), zg (n, hmax, k), wg (n, hmax, k-1)
-    -> t (n,). Padding rows/slots must carry zero weight (they do, by the
-    Corpus construction), so block padding contributes exactly 0 cost."""
-    n, hmax = x.shape
-    block_n = min(block_n, _round_up(n, 8))
-    block_h = min(block_h, _round_up(hmax, 8))
-    np_, hp = _round_up(n, block_n), _round_up(hmax, block_h)
-    pad2 = ((0, np_ - n), (0, hp - hmax))
-    pad3 = pad2 + ((0, 0),)
-    t = act_phase2_pallas(jnp.pad(x, pad2), jnp.pad(zg, pad3),
-                          jnp.pad(wg, pad3), block_n=block_n,
-                          block_h=block_h, interpret=_interpret_default())
-    return t[:n, 0]
+    -> t (n,). Single-query view of ``act_phase2_batched``."""
+    return act_phase2_batched(x, zg[None], wg[None], block_n=block_n,
+                              block_h=block_h)[0]

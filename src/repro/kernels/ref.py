@@ -17,6 +17,14 @@ def dist_topk_ref(coords: jax.Array, qc: jax.Array, qmask: jax.Array, k: int):
     return -neg, s
 
 
+def dist_topk_batched_ref(coords: jax.Array, qcs: jax.Array,
+                          qmask: jax.Array, k: int):
+    """Per-query loop of ``dist_topk_ref``: the (nq, v, k) oracle for the
+    query-batched kernel grid."""
+    return jax.vmap(lambda qc, qm: dist_topk_ref(coords, qc, qm, k))(
+        qcs, qmask)
+
+
 def act_phase2_ref(x: jax.Array, zg: jax.Array, wg: jax.Array) -> jax.Array:
     """Sequential-rounds reference for ``act_phase2`` — implements the
     paper's eqs. (6)-(9) literally: k-1 min/subtract rounds then the dump."""
@@ -29,3 +37,10 @@ def act_phase2_ref(x: jax.Array, zg: jax.Array, wg: jax.Array) -> jax.Array:
         t = t + jnp.sum(y * zg[..., l], axis=-1)             # eq. (8)
     t = t + jnp.sum(x * zg[..., iters], axis=-1)             # eq. (9)
     return t[..., None]
+
+
+def act_phase2_batched_ref(x: jax.Array, zg: jax.Array,
+                           wg: jax.Array) -> jax.Array:
+    """Per-query loop of ``act_phase2_ref`` over shared x: the (nq, n)
+    oracle for the query-batched pour grid."""
+    return jax.vmap(lambda z, w: act_phase2_ref(x, z, w)[:, 0])(zg, wg)

@@ -57,18 +57,23 @@ def test_cross_backend_all_pairs_parity(corpus_labels):
     ("rwmd", 0, lc.lc_rwmd_scores),
 ])
 def test_batched_scores_bit_for_bit(corpus_labels, method, iters, single_fn):
-    """(nq, h) through EmdIndex.scores == a Python loop of single-query
-    engine calls, bit-for-bit, including padded query slots."""
+    """(nq, h) through EmdIndex.scores with ``batch_engine="scan"`` == a
+    Python loop of single-query engine calls, bit-for-bit, including
+    padded query slots; the default batched engine is allclose."""
     corpus, _ = corpus_labels
     nq = 7
     q_ids, q_w = corpus.ids[:nq], corpus.w[:nq]
     assert bool((np.asarray(q_w) == 0.0).any()), "want padded query slots"
-    index = EmdIndex.build(corpus, EngineConfig(method=method, iters=iters))
-    batched = np.asarray(index.scores(q_ids, q_w))
-    assert batched.shape == (nq, corpus.n)
+    index = EmdIndex.build(corpus, EngineConfig(method=method, iters=iters,
+                                                batch_engine="scan"))
+    scanned = np.asarray(index.scores(q_ids, q_w))
+    assert scanned.shape == (nq, corpus.n)
     looped = np.stack([np.asarray(single_fn(corpus, q_ids[u], q_w[u]))
                        for u in range(nq)])
-    np.testing.assert_array_equal(batched, looped)
+    np.testing.assert_array_equal(scanned, looped)
+    batched = np.asarray(index.with_config(batch_engine="batched")
+                         .scores(q_ids, q_w))
+    np.testing.assert_allclose(batched, looped, rtol=1e-5, atol=1e-6)
 
 
 def test_single_and_batch_shapes_uniform(corpus_labels):

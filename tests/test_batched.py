@@ -1,0 +1,151 @@
+"""Batched multi-query engine vs the per-query scan path.
+
+The batched engine amortizes Phase 1 across the query batch and streams
+Phase 2 in query blocks; every registered method must reproduce the
+scanned (``lax.map`` of single-query graphs) scores.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import EmdIndex, EngineConfig
+from repro.core import lc, retrieval
+from repro.data.synth import make_text_like
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_text_like(n_docs=13, n_classes=4, vocab=96, m=8, doc_len=30,
+                          hmax=16, seed=3)
+
+
+def _assert_close(a, b):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("method", sorted(retrieval.METHODS))
+def test_batched_matches_scan(corpus, method):
+    c, _ = corpus
+    nq = 5
+    got = retrieval.batch_scores(c, c.ids[:nq], c.w[:nq], method=method,
+                                 engine="batched", iters=2, block_q=2)
+    want = retrieval.batch_scores(c, c.ids[:nq], c.w[:nq], method=method,
+                                  engine="scan", iters=2)
+    assert got.shape == (nq, c.n)
+    _assert_close(got, want)
+
+
+@pytest.mark.parametrize("method", [m for m, s in retrieval.METHODS.items()
+                                    if s.supports_kernels])
+def test_batched_matches_scan_kernels(corpus, method):
+    c, _ = corpus
+    nq = 5
+    kw = dict(iters=2, use_kernels=True, block_v=32, block_h=8)
+    got = retrieval.batch_scores(c, c.ids[:nq], c.w[:nq], method=method,
+                                 engine="batched", block_q=2, **kw)
+    want = retrieval.batch_scores(c, c.ids[:nq], c.w[:nq], method=method,
+                                  engine="scan", **kw)
+    _assert_close(got, want)
+
+
+def test_batched_matches_scan_symmetric(corpus):
+    c, _ = corpus
+    nq = 6
+    got = retrieval.batch_scores(c, c.ids[:nq], c.w[:nq], method="rwmd",
+                                 engine="batched", symmetric=True, block_q=4)
+    want = retrieval.batch_scores(c, c.ids[:nq], c.w[:nq], method="rwmd",
+                                  engine="scan", symmetric=True)
+    _assert_close(got, want)
+
+
+def test_batched_matches_python_loop(corpus):
+    """The scan path is the bit-for-bit oracle; the batched path must also
+    match a plain Python loop of single-query calls within tolerance."""
+    c, _ = corpus
+    nq = 4
+    got = retrieval.batch_scores(c, c.ids[:nq], c.w[:nq], method="act",
+                                 engine="batched", iters=3, block_q=3)
+    for u in range(nq):
+        want = retrieval.query_scores(c, c.ids[u], c.w[u], method="act",
+                                      iters=3)
+        _assert_close(got[u], want)
+
+
+@pytest.mark.parametrize("block_q", [1, 3, 8, 16])
+def test_batched_query_block_padding(corpus, block_q):
+    """nq not a multiple of block_q: padding queries must not leak."""
+    c, _ = corpus
+    nq = 5
+    got = retrieval.batch_scores(c, c.ids[:nq], c.w[:nq], method="act",
+                                 engine="batched", iters=1, block_q=block_q)
+    want = retrieval.batch_scores(c, c.ids[:nq], c.w[:nq], method="act",
+                                  engine="scan", iters=1)
+    assert got.shape == (nq, c.n)
+    _assert_close(got, want)
+
+
+def test_all_pairs_batched_matches_scan(corpus):
+    c, _ = corpus
+    got = retrieval.all_pairs_scores(c, method="omr", engine="batched",
+                                     block_q=4)
+    want = retrieval.all_pairs_scores(c, method="omr", engine="scan")
+    _assert_close(got, want)
+
+
+def test_batch_scores_rejects_unknown_engine(corpus):
+    c, _ = corpus
+    with pytest.raises(ValueError, match="unknown engine"):
+        retrieval.batch_scores(c, c.ids[:2], c.w[:2], engine="nope")
+
+
+def test_emdindex_batch_engine_parity(corpus):
+    """EngineConfig.batch_engine switches the EmdIndex serving path."""
+    c, _ = corpus
+    nq = 5
+    fast = EmdIndex.build(c, EngineConfig(method="act", iters=2,
+                                          batch_engine="batched", block_q=2))
+    slow = fast.with_config(batch_engine="scan")
+    _assert_close(fast.scores(c.ids[:nq], c.w[:nq]),
+                  slow.scores(c.ids[:nq], c.w[:nq]))
+    # single-query scoring is engine-independent
+    _assert_close(fast.scores(c.ids[0], c.w[0]),
+                  slow.scores(c.ids[0], c.w[0]))
+
+
+def test_emdindex_rejects_bad_batch_engine():
+    with pytest.raises(ValueError, match="batch_engine"):
+        EngineConfig(batch_engine="vmap")
+
+
+# ---------------------------------------------------------------- top-k
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("chunk", [512, 8, 3])
+@pytest.mark.parametrize("shape", [(40, 17), (3, 9, 21), (64, 5)])
+def test_streaming_topk_matches_smallest_k(seed, shape, chunk):
+    """Single-pass streaming selection == k-rescan smallest_k, including
+    under heavy ties (values quantized to one decimal): ties resolve to
+    the lowest column index in both. chunk < h exercises the streamed
+    tile-merge path (chunk=512 is the single-tile degenerate case)."""
+    r = np.random.default_rng(seed)
+    k = int(r.integers(1, min(9, shape[-1]) + 1))
+    d = jnp.asarray(np.round(r.normal(size=shape), 1), jnp.float32)
+    z1, s1 = lc.smallest_k(d, k)
+    z2, s2 = lc.streaming_smallest_k(d, k, chunk=chunk)
+    np.testing.assert_array_equal(np.asarray(z1), np.asarray(z2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_streaming_topk_handles_pad_dist_columns():
+    """PAD_DIST (masked query bin) columns never displace real bins, and
+    the degenerate exhausted-row behavior (re-picking the lowest masked
+    column once only PAD_DIST values remain) matches smallest_k exactly."""
+    d = jnp.asarray([[1.0, lc.PAD_DIST, lc.PAD_DIST, 0.5]], jnp.float32)
+    for chunk in (512, 2):
+        z, s = lc.streaming_smallest_k(d, 3, chunk=chunk)
+        zr, sr = lc.smallest_k(d, 3)
+        np.testing.assert_array_equal(np.asarray(z), np.asarray(zr))
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(sr))
+        np.testing.assert_allclose(np.asarray(z[0]), [0.5, 1.0, lc.PAD_DIST])
+        np.testing.assert_array_equal(np.asarray(s[0][:2]), [3, 0])

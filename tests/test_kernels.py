@@ -58,6 +58,43 @@ def test_act_phase2_conserves_mass_cost_bound(rng):
     assert (np.asarray(t) >= 0).all()
 
 
+@pytest.mark.parametrize("nq,v,h,m,k", [
+    (1, 64, 32, 8, 4), (3, 100, 50, 16, 4), (5, 70, 33, 3, 2),
+])
+def test_dist_topk_batched_matches_ref(nq, v, h, m, k, rng):
+    coords = jnp.asarray(rng.normal(size=(v, m)), jnp.float32)
+    qcs = jnp.asarray(rng.normal(size=(nq, h, m)), jnp.float32)
+    qmask = jnp.asarray(rng.uniform(size=(nq, h)) > 0.2, jnp.float32)
+    qmask = qmask.at[:, 0].set(1.0)
+    z, s = ops.dist_topk_batched(coords, qcs, k, qmask=qmask, block_v=32,
+                                 block_h=16)
+    zr, sr = ref.dist_topk_batched_ref(coords, qcs, qmask, k)
+    assert z.shape == (nq, v, k)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(zr), rtol=1e-5,
+                               atol=1e-5)
+    mismatch = np.asarray(s) != np.asarray(sr)
+    if mismatch.any():                       # ties may reorder indices
+        assert np.allclose(np.asarray(z)[mismatch],
+                           np.asarray(zr)[mismatch], atol=1e-5)
+
+
+@pytest.mark.parametrize("nq,n,hmax,iters", [
+    (1, 10, 7, 1), (4, 33, 17, 3), (6, 16, 9, 7),
+])
+def test_act_phase2_batched_matches_ref(nq, n, hmax, iters, rng):
+    x = jnp.asarray(rng.uniform(size=(n, hmax)) *
+                    (rng.uniform(size=(n, hmax)) > 0.3), jnp.float32)
+    zg = jnp.asarray(np.sort(rng.uniform(size=(nq, n, hmax, iters + 1)), -1),
+                     jnp.float32)
+    wg = jnp.asarray(rng.uniform(size=(nq, n, hmax, iters)) * 0.3,
+                     jnp.float32)
+    t = ops.act_phase2_batched(x, zg, wg, block_n=16, block_h=8)
+    tr = ref.act_phase2_batched_ref(x, zg, wg)
+    assert t.shape == (nq, n)
+    np.testing.assert_allclose(np.asarray(t), np.asarray(tr), rtol=1e-5,
+                               atol=1e-6)
+
+
 def test_dist_topk_sorted_ascending(rng):
     coords = jnp.asarray(rng.normal(size=(64, 5)), jnp.float32)
     qc = jnp.asarray(rng.normal(size=(40, 5)), jnp.float32)

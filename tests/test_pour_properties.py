@@ -8,7 +8,7 @@ import pytest
 pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.lc import pour, smallest_k
+from repro.core.lc import pour, smallest_k, streaming_smallest_k
 from repro.kernels.ref import act_phase2_ref
 
 settings.register_profile("ci2", deadline=None, max_examples=30)
@@ -44,6 +44,21 @@ def test_smallest_k_properties(rows, h, seed):
     neg, sr = jax.lax.top_k(-d, int(k))
     np.testing.assert_allclose(np.asarray(z), -np.asarray(neg), rtol=1e-6)
     np.testing.assert_array_equal(np.asarray(s), np.asarray(sr))
+
+
+@given(st.integers(1, 20), st.integers(1, 24), st.integers(1, 24),
+       st.integers(0, 2**31 - 1))
+def test_streaming_topk_equals_smallest_k(rows, h, chunk, seed):
+    """The single-pass streaming selection == the k-rescan smallest_k for
+    every chunking, including heavy ties (quantized values): ties resolve
+    to the lowest column index in both."""
+    r = np.random.default_rng(seed)
+    k = int(min(r.integers(1, 9), h))
+    d = jnp.asarray(np.round(r.normal(size=(rows, h)), 1), jnp.float32)
+    z1, s1 = smallest_k(d, k)
+    z2, s2 = streaming_smallest_k(d, k, chunk=int(chunk))
+    np.testing.assert_array_equal(np.asarray(z1), np.asarray(z2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
 
 
 @given(st.integers(2, 10), st.integers(0, 2**31 - 1))
