@@ -25,12 +25,17 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit, text_corpus
+from benchmarks.common import emit, text_corpus, timeit
 from repro.api import EmdIndex, EngineConfig
 
 #: (method, iters) cases: the fast relaxation, the overlap fix, the
 #: tight bound.
 CASES = (("rwmd", 0), ("omr", 0), ("act", 3))
+
+#: (method, iters) cases for the distributed-step smoke entry (the
+#: method-generic mesh pipeline; single-host mesh here, so this tracks
+#: step-latency drift rather than scaling).
+DIST_CASES = (("rwmd", 0), ("act", 3))
 
 
 def _sizes(smoke: bool) -> dict:
@@ -93,6 +98,25 @@ def run() -> None:
                  f"batched/scan={speedup:.2f}x")
             report["speedup_batched_over_scan"][f"{method}.nq{nq}"] = round(
                 speedup, 2)
+
+    # Distributed-step smoke: the same batched pipeline traced through the
+    # mesh-sharded step (EmdIndex builds a single-device mesh when none is
+    # passed). Guards the serving path the host-mesh CI job parity-tests.
+    nq_d = max(nqs)
+    q_ids, q_w = corpus.ids[:nq_d], corpus.w[:nq_d]
+    report["distributed_step"] = {}
+    for method, iters in DIST_CASES:
+        dist = EmdIndex.build(corpus, EngineConfig(
+            method=method, iters=iters, backend="distributed",
+            pad_multiple=64))
+        us = timeit(lambda: dist.scores(q_ids, q_w), n_iter=reps)
+        qps = nq_d / (us / 1e6)
+        emit(f"bench_batch.{method}.nq{nq_d}.distributed", us,
+             f"qps={qps:.1f}")
+        report["entries"].append(dict(
+            method=method, iters=iters, nq=nq_d, engine="distributed",
+            us_per_call=round(us, 1), queries_per_sec=round(qps, 1)))
+        report["distributed_step"][f"{method}.nq{nq_d}"] = round(qps, 1)
 
     path = os.environ.get("BENCH_BATCH_JSON", "BENCH_batch.json")
     with open(path, "w") as f:

@@ -14,8 +14,11 @@ from repro.core.retrieval import METHODS
 #: Execution engines EmdIndex can place a method on.
 BACKENDS = ("reference", "pallas", "distributed")
 
-#: Methods the distributed phase1+pour step can express (LC-ACT family).
-DISTRIBUTABLE_METHODS = ("act", "rwmd")
+#: Methods servable on ``backend="distributed"`` — since the mesh step is
+#: derived from the registry (every method's batched pipeline runs on the
+#: mesh), this is ALL of them. Kept as a public name for callers that
+#: feature-gate on it.
+DISTRIBUTABLE_METHODS = tuple(sorted(METHODS))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,16 +31,21 @@ class EngineConfig:
     backend:      ``reference`` (pjit-able jnp), ``pallas`` (fused TPU
                   kernels; methods without kernel support fall back to
                   reference compute), or ``distributed`` (mesh-sharded
-                  multi-query step from ``launch/search.py``).
-    symmetric:    score single queries with the paper's symmetric measure
+                  method-generic multi-query step from
+                  ``launch/search.py`` — every registered method and all
+                  batch knobs apply there too).
+    symmetric:    score queries with the paper's symmetric measure
                   (max of the two directional bounds; needs a method with
-                  a registered reverse, i.e. rwmd).
+                  a registered reverse, i.e. rwmd). Valid on every
+                  backend, including distributed.
     top_l:        default neighbor count for ``EmdIndex.search``.
     batch_engine: multi-query dispatch for ``EmdIndex.scores`` batches:
                   ``batched`` (default) amortizes Phase 1 across the
-                  query batch; ``scan`` replays the exact single-query
-                  graph per query via ``lax.map`` — bit-for-bit equal to
-                  a loop of single-query calls, for verification.
+                  query batch (on ``backend="distributed"`` this is the
+                  mesh pipeline, ``engine="dist"``); ``scan`` replays the
+                  exact single-query graph per query via ``lax.map`` —
+                  bit-for-bit equal to a loop of single-query calls, for
+                  verification.
     block_v/block_h/block_n: Pallas kernel tile sizes (vocabulary rows,
                   histogram slots, database rows).
     block_q:      query-block size of the batched engine's Phase-2
@@ -81,14 +89,6 @@ class EngineConfig:
             raise ValueError(
                 f"method {self.method!r} has no reverse direction; "
                 "symmetric=True needs one (use method='rwmd')")
-        if self.backend == "distributed":
-            if self.method not in DISTRIBUTABLE_METHODS:
-                raise ValueError(
-                    f"backend='distributed' supports {DISTRIBUTABLE_METHODS}"
-                    f", got method={self.method!r}")
-            if self.symmetric:
-                raise ValueError("symmetric scoring is not implemented on "
-                                 "the distributed backend")
 
     @property
     def spec(self):
@@ -110,4 +110,16 @@ class EngineConfig:
             block_v=self.block_v, block_h=self.block_h,
             block_n=self.block_n, rev_block=self.rev_block,
             block_q=self.block_q,
+        )
+
+    def dist_step_kwargs(self) -> dict:
+        """Static kwargs for ``launch.search.jit_scores_step`` — the same
+        method + batch knobs as the single-host engines, plus the
+        symmetric flag and the mesh engine selector (``batch_engine``
+        "batched" traces the mesh pipeline, "scan" the per-query
+        verification graphs)."""
+        return dict(
+            self.score_kwargs(),
+            symmetric=self.symmetric,
+            engine=("dist" if self.batch_engine == "batched" else "scan"),
         )

@@ -84,9 +84,12 @@ class EmdIndex:
         workload = EMDWorkload(name="emd-index", n_db=corpus.n,
                                vocab=corpus.v, dim=corpus.m,
                                hmax=corpus.hmax,
-                               iters=config.effective_iters, queries=0)
-        step = dsearch.jit_scores_step(workload, mesh)
-        in_sh, _ = dsearch.scores_shardings(mesh, workload)
+                               iters=config.effective_iters, queries=0,
+                               method=config.method)
+        step = dsearch.jit_scores_step(workload, mesh,
+                                       **config.dist_step_kwargs())
+        in_sh, _ = dsearch.scores_shardings(mesh, workload,
+                                            method=config.method)
         padded = Corpus(ids=jax.device_put(padded.ids, in_sh[0]),
                         w=jax.device_put(padded.w, in_sh[1]),
                         coords=jax.device_put(padded.coords, in_sh[2]))
@@ -161,7 +164,14 @@ class EmdIndex:
         """n x n symmetric score matrix over the corpus (the paper's
         evaluation mode; feed to ``retrieval.precision_at_l``)."""
         if self.config.backend == "distributed":
+            # NOTE: with config.symmetric the baked-in step already maxes
+            # both directions per pair, so the transpose-max below merely
+            # re-symmetrizes float noise — directional scoring would halve
+            # the Phase-2 work but needs a second jitted step; all_pairs
+            # is the (cold) evaluation path, so compile cost wins.
             asym = self.scores(self.corpus.ids, self.corpus.w)
+            if self.config.spec.symmetric:
+                return asym
             return lc.symmetric_scores(asym)
         return retrieval.all_pairs_scores(self.corpus,
                                           engine=self.config.batch_engine,

@@ -12,6 +12,7 @@ class EMDWorkload:
     hmax: int            # padded histogram size
     iters: int           # ACT Phase-2 iterations
     queries: int         # query batch scored together
+    method: str = "act"  # retrieval.METHODS registry key scored on the mesh
 
 
 CONFIG = EMDWorkload(name="emd-20news", n_db=18_828, vocab=69_682,

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.geometry import pairwise_dist
+from repro.sharding import annotate
 
 Array = jax.Array
 
@@ -183,24 +184,94 @@ def phase1(coords: Array, q_ids: Array, q_w: Array, k: int):
     return Z, W
 
 
-def phase1_batched(coords: Array, Q_ids: Array, Q_w: Array, k: int):
-    """Batched Phase 1: one fused distance matmul for the WHOLE query batch.
+#: Dedup the Phase-1 column stack only when it exceeds the vocabulary by
+#: this factor. Unique-bin stacking trades the stacked matmul's FLOPs
+#: (cut by the dedup ratio) for a sort + an extra (v, nq*h) gather, so it
+#: pays off on matmul-bound hardware (TPU MXU) at high duplication —
+#: corpus-as-queries all-pairs batches — but NOT on small serving batches
+#: (and on gather-bound CPU it is roughly a wash even at 16x; see
+#: BENCH_batch.json notes).
+DEDUP_STACK_RATIO = 4
 
-    All nq query histograms' bins are stacked into a single (v, nq*h)
-    distance computation — one MXU call instead of nq — then the
-    single-pass top-k runs per query on the reshaped (v, nq, h) view.
-    Returns query-major Z, W of shape (nq, v, k).
+
+def stack_query_bins(coords: Array, Q_ids: Array):
+    """Phase-1 column stacking with duplicate-bin dedup.
+
+    Stacks every query histogram's bins into one (cols, m) coordinate
+    matrix for the single Phase-1 matmul. When the stack far exceeds the
+    vocabulary (corpus-as-queries all-pairs batches:
+    nq*h >= DEDUP_STACK_RATIO * v), the same vocabulary id appears in
+    many histograms and re-embedding it per slot wastes Phase-1 FLOPs —
+    so the distinct ids are computed once (``jnp.unique`` with static
+    size v, the hard upper bound) and a (nq*h,) inverse map re-expands
+    the deduped columns after the matmul. Returns (qc, inv) where
+    ``inv`` is None on the no-dedup path.
+    """
+    nq, h = Q_ids.shape
+    flat = Q_ids.reshape(-1)
+    v = coords.shape[0]
+    if nq * h < DEDUP_STACK_RATIO * v:
+        return coords[flat], None
+    uniq, inv = jnp.unique(flat, size=v, fill_value=0, return_inverse=True)
+    return coords[uniq], inv.reshape(-1)
+
+
+def phase1_stacked_dist(coords: Array, Q_ids: Array, Q_w: Array) -> Array:
+    """Stacked Phase-1 distance tensor for the WHOLE query batch: one
+    (v, nq*h) matmul (one MXU call instead of nq), reshaped query-major to
+    (v, nq, h). Padding query slots (weight 0) are masked to PAD_DIST so
+    they are never selected as a nearest destination (finite, so 0-mass
+    remainders still cost 0). Mesh-aware: the tensor is pinned vocabulary-
+    over-"model" / queries-over-DP (``annotate.emd_stacked_dist``; no-op
+    outside a mesh), so the same code serves the single-host batched
+    engines and the distributed step.
     """
     nq, h = Q_ids.shape
     v = coords.shape[0]
-    qc = coords[Q_ids.reshape(-1)]                       # (nq*h, m)
-    D = pairwise_dist(coords, qc).reshape(v, nq, h)      # one (v, nq*h) matmul
-    D = jnp.where(Q_w[None] > 0.0, D, PAD_DIST)
+    qc, inv = stack_query_bins(coords, Q_ids)
+    D = pairwise_dist(coords, qc)                        # one stacked matmul
+    if inv is not None:
+        D = D[:, inv]                                    # re-expand dedup
+    D = annotate.emd_stacked_dist(D.reshape(v, nq, h))
+    return jnp.where(Q_w[None] > 0.0, D, PAD_DIST)
+
+
+def phase1_batched(coords: Array, Q_ids: Array, Q_w: Array, k: int):
+    """Batched Phase 1: stacked distance tensor + single-pass top-k.
+
+    The per-query top-k runs on the (v, nq, h) view of the one stacked
+    matmul. Returns the query-major handoff ladders Z, W of shape
+    (nq, v, k), pinned to their Phase-2 layout (queries on their DP
+    shards, ladders replicated — the all-gather over "model").
+    """
+    D = phase1_stacked_dist(coords, Q_ids, Q_w)
     Z, S = streaming_smallest_k(D, k)                    # (v, nq, k)
-    Zq = jnp.moveaxis(Z, 1, 0)                           # (nq, v, k)
+    Zq = annotate.emd_ladder(jnp.moveaxis(Z, 1, 0))      # (nq, v, k)
     Sq = jnp.moveaxis(S, 1, 0)
-    W = jax.vmap(lambda w, s: w[s])(Q_w, Sq)             # (nq, v, k)
+    W = annotate.emd_ladder(jax.vmap(lambda w, s: w[s])(Q_w, Sq))
     return Zq, W
+
+
+def _min_handoff(D: Array) -> Array:
+    """(nq, v) masked-min handoff from the stacked (v, nq, h) Phase-1
+    tensor, on the Phase-2 layout (single derivation point, shared by the
+    directional and symmetric engines so the annotation cannot diverge)."""
+    return annotate.emd_ladder(jnp.min(D, axis=-1).T)
+
+
+def _rev_handoff(D: Array) -> Array:
+    """(nq, v, h) query-major reverse-direction handoff from the stacked
+    (v, nq, h) Phase-1 tensor, on the Phase-2 layout (single derivation
+    point — see :func:`_min_handoff`)."""
+    return annotate.emd_ladder(jnp.moveaxis(D, 1, 0))
+
+
+def phase1_min_batched(coords: Array, Q_ids: Array, Q_w: Array) -> Array:
+    """Masked-min Phase-1 fast path (LC-RWMD / zero Phase-2 rounds): only
+    the nearest distance is ever read, so ranked (value, index) registers
+    and the W capacities are skipped entirely — one stacked matmul, one
+    row-min. Returns the (nq, v) handoff on the Phase-2 layout."""
+    return _min_handoff(phase1_stacked_dist(coords, Q_ids, Q_w))
 
 
 def pour(x: Array, Zg: Array, Wg: Array, iters: int) -> Array:
@@ -282,7 +353,10 @@ def lc_rwmd_scores_rev(corpus: Corpus, q_ids: Array, q_w: Array,
     qc = corpus.coords[q_ids]                            # (h, m)
     D = pairwise_dist(corpus.coords, qc)                 # (v, h)
     valid = corpus.w > 0.0                               # (n, hmax)
-    big = jnp.asarray(jnp.inf, D.dtype)
+    # PAD_DIST, not inf, matching the batched rev engines: an all-padding
+    # db row then scores huge-but-finite instead of NaN (inf * a weight-0
+    # query bin), so the scan oracle agrees with them on padded corpora.
+    big = jnp.asarray(PAD_DIST, D.dtype)
 
     def one_block(ids_blk, valid_blk):
         Dg = D[ids_blk]                                  # (b, hmax, h)
@@ -325,10 +399,20 @@ def lc_omr_scores(corpus: Corpus, q_ids: Array, q_w: Array, *,
 
 
 # --------------------------------------------------------------------------
-# Batched multi-query engines: the query batch is a first-class axis.
-# Phase 1 runs ONCE for the whole batch (one stacked (v, nq*h) matmul +
-# one single-pass top-k); Phase 2/3 stream query blocks so the
-# (nq, n, hmax, k) gather tensor is never materialized.
+# Batched multi-query pipeline: the query batch is a first-class axis.
+#
+# The pipeline is three composable stages with EXPLICIT handoff arrays, so
+# the single-host engines below and the distributed step in
+# ``launch/search.py`` run the SAME code (the stages carry their own
+# ``sharding.annotate`` constraints, which no-op outside a mesh):
+#
+#   stage 1  phase1_stacked_dist / phase1_batched / phase1_min_batched
+#            -> handoff: (v, nq, h) D, (nq, v, k) Z/W, or (nq, v) Z0
+#   stage 2  pour_blocked / pour_min_blocked / omr_reduce_blocked /
+#            rev_min_blocked — query-blocked Phase 2/3 consumers of the
+#            handoff; the (nq, n, hmax, k) gather tensor never
+#            materializes.
+#   stage 3  (callers) ranking / symmetrization on the (nq, n) scores.
 # --------------------------------------------------------------------------
 
 
@@ -354,49 +438,38 @@ def _phase1_batched_dispatch(corpus: Corpus, Q_ids: Array, Q_w: Array,
                              k: int, use_kernels: bool, block_v: int,
                              block_h: int):
     """Batched Phase 1 via the fused Pallas kernel or the jnp reference.
-    Returns query-major Z, W of shape (nq, v, k)."""
+    Returns query-major Z, W of shape (nq, v, k) on the handoff layout."""
     if use_kernels:
         from repro.kernels import ops as kops
         Z, S = kops.dist_topk_batched(corpus.coords, corpus.coords[Q_ids], k,
                                       qmask=(Q_w > 0.0), block_v=block_v,
                                       block_h=block_h)
         W = jax.vmap(lambda w, s: w[s])(Q_w, S)
-        return Z, W
+        return annotate.emd_ladder(Z), annotate.emd_ladder(W)
     return phase1_batched(corpus.coords, Q_ids, Q_w, k)
 
 
-@functools.partial(jax.jit, static_argnames=("iters", "use_kernels",
-                                             "block_q", "block_v", "block_h",
-                                             "block_n"))
-def lc_act_scores_batched(corpus: Corpus, Q_ids: Array, Q_w: Array,
-                          iters: int = 1, *, use_kernels: bool = False,
-                          block_q: int = 8, block_v: int = 256,
-                          block_h: int = 256, block_n: int = 256) -> Array:
-    """Batched LC-ACT: (nq, h) query batch -> (nq, n) lower bounds.
+def pour_min_blocked(corpus: Corpus, Z0: Array, block_q: int) -> Array:
+    """Zero-round Phase 2 on the masked-min handoff: each block of
+    ``block_q`` queries gathers its (bq, n, hmax) nearest-distance slice
+    once and reduces. Z0: (nq, v) -> (nq, n) scores."""
+    def blk(Zb):                                         # (bq, v)
+        return jnp.sum(corpus.w * Zb[:, corpus.ids], axis=-1)
+    return _map_query_blocks(blk, (Z0,), Z0.shape[0], block_q)
 
-    Phase 2/3 run a query-major blocked schedule: each block of
-    ``block_q`` queries gathers its (block_q, n, hmax, k) cost/capacity
-    ladders once and pours (fused Pallas kernel when ``use_kernels``).
-    """
-    k = iters + 1
-    nq = Q_ids.shape[0]
+
+def pour_blocked(corpus: Corpus, Z: Array, W: Array, iters: int,
+                 block_q: int, *, use_kernels: bool = False,
+                 block_n: int = 256, block_h: int = 256) -> Array:
+    """Query-blocked Phase 2/3 pour: (nq, v, k) handoff ladders ->
+    (nq, n) lower bounds. Each block of ``block_q`` queries gathers its
+    (bq, n, hmax, k) cost/capacity ladders once and pours (fused Pallas
+    kernel when ``use_kernels``); ``iters=0`` degenerates to the
+    nearest-cost dump of Phase 3."""
+    nq = Z.shape[0]
     x = corpus.w
-    if iters == 0 and not use_kernels:
-        # Zero Phase-2 rounds only ever read the nearest distance, so
-        # Phase 1 is a plain masked min — no ranked registers, no W.
-        nq_, h = Q_ids.shape
-        qc = corpus.coords[Q_ids.reshape(-1)]            # (nq*h, m)
-        D = pairwise_dist(corpus.coords, qc).reshape(corpus.v, nq_, h)
-        D = jnp.where(Q_w[None] > 0.0, D, PAD_DIST)
-        Z0 = jnp.min(D, axis=-1).T                       # (nq, v)
-
-        def blk_min(Zb):                                 # (bq, v)
-            return jnp.sum(x * Zb[:, corpus.ids], axis=-1)
-        return _map_query_blocks(blk_min, (Z0,), nq, block_q)
-    Z, W = _phase1_batched_dispatch(corpus, Q_ids, Q_w, k, use_kernels,
-                                    block_v, block_h)
     if iters == 0:
-        def blk0(Zb):                                    # (bq, v, 1)
+        def blk0(Zb):                                    # (bq, v, k)
             return jnp.sum(x * Zb[..., 0][:, corpus.ids], axis=-1)
         return _map_query_blocks(blk0, (Z,), nq, block_q)
     W = W[..., :iters]
@@ -417,30 +490,33 @@ def lc_act_scores_batched(corpus: Corpus, Q_ids: Array, Q_w: Array,
     return _map_query_blocks(blk, (Z, W), nq, block_q)
 
 
-@functools.partial(jax.jit, static_argnames=("use_kernels", "block_q",
-                                             "block_v", "block_h"))
-def lc_rwmd_scores_batched(corpus: Corpus, Q_ids: Array, Q_w: Array, *,
-                           use_kernels: bool = False, block_q: int = 8,
-                           block_v: int = 256, block_h: int = 256) -> Array:
-    """Batched LC-RWMD db -> query (== batched LC-ACT with zero rounds)."""
-    return lc_act_scores_batched(corpus, Q_ids, Q_w, iters=0,
-                                 use_kernels=use_kernels, block_q=block_q,
-                                 block_v=block_v, block_h=block_h)
+def omr_reduce_blocked(corpus: Corpus, Z: Array, W0: Array,
+                       block_q: int) -> Array:
+    """Query-blocked Algorithm-1 reduction on the top-2 handoff:
+    Z (nq, v, 2), W0 (nq, v) -> (nq, n) LC-OMR bounds."""
+    x = corpus.w
+
+    def blk(Zb, W0b):                                    # (bq, v, 2), (bq, v)
+        Zg = Zb[:, corpus.ids]                           # (bq, n, hmax, 2)
+        W0g = W0b[:, corpus.ids]                         # (bq, n, hmax)
+        overlap = Zg[..., 0] == 0.0
+        rest = x - jnp.minimum(x, W0g)
+        per_entry = jnp.where(overlap, rest * Zg[..., 1], x * Zg[..., 0])
+        return jnp.sum(per_entry, axis=-1)
+    return _map_query_blocks(blk, (Z, W0), Z.shape[0], block_q)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "block_q"))
-def lc_rwmd_scores_rev_batched(corpus: Corpus, Q_ids: Array, Q_w: Array,
-                               block: int = 256, block_q: int = 8) -> Array:
-    """Batched LC-RWMD query -> db: the distance matrix against the
-    vocabulary is computed once for the WHOLE batch (one (v, nq*h)
-    matmul), then streamed in (row-block, query-block) tiles of masked
-    minima so the (n, hmax, nq, h) gather never materializes."""
-    nq, h = Q_ids.shape
-    qc = corpus.coords[Q_ids.reshape(-1)]                # (nq*h, m)
-    D = pairwise_dist(corpus.coords, qc)                 # (v, nq*h)
-    Dq = jnp.moveaxis(D.reshape(corpus.v, nq, h), 1, 0)  # (nq, v, h)
+def rev_min_blocked(corpus: Corpus, Dq: Array, Q_w: Array, block: int,
+                    block_q: int) -> Array:
+    """Reverse-direction masked (min,+) reduction on the query-major
+    distance handoff Dq (nq, v, h): for db row u and query bin j,
+    c[u, j] = min over valid slots s of Dq[:, ids[u, s], j], streamed in
+    (row-block, query-block) tiles so the (nq, n, hmax, h) gather never
+    materializes. Invalid slots mask to PAD_DIST (finite — all-padding
+    rows score huge instead of NaN when a padded query bin's weight-0
+    product would otherwise hit inf * 0)."""
     valid = corpus.w > 0.0                               # (n, hmax)
-    big = jnp.asarray(jnp.inf, D.dtype)
+    big = jnp.asarray(PAD_DIST, Dq.dtype)
     n = corpus.n
     pad = (-n) % block
     ids_b = jnp.pad(corpus.ids, ((0, pad), (0, 0))).reshape(-1, block,
@@ -457,7 +533,92 @@ def lc_rwmd_scores_rev_batched(corpus: Corpus, Q_ids: Array, Q_w: Array,
             return jnp.einsum("qbh,qh->qb", cmin, Wb)
         out = jax.lax.map(rblock, (ids_b, valid_b))      # (nrb, bq, b)
         return jnp.moveaxis(out, 1, 0).reshape(Db.shape[0], -1)[:, :n]
-    return _map_query_blocks(qblock, (Dq, Q_w), nq, block_q)
+    return _map_query_blocks(qblock, (Dq, Q_w), Dq.shape[0], block_q)
+
+
+def rev_min_full(corpus: Corpus, Dq: Array, Q_w: Array,
+                 block_q: int) -> Array:
+    """Mesh variant of :func:`rev_min_blocked`: no row-blocking ``lax.map``
+    (XLA SPMD cannot iterate a scan over the "model"-sharded row axis
+    without gathering it), so the (bq, n, hmax, h) gather stays on the
+    model shards and memory is bounded by the query blocks alone."""
+    valid = corpus.w > 0.0
+    big = jnp.asarray(PAD_DIST, Dq.dtype)
+
+    def qblock(Db, Wb):                                  # (bq, v, h), (bq, h)
+        Dg = jnp.where(valid[None, ..., None], Db[:, corpus.ids], big)
+        cmin = jnp.min(Dg, axis=2)                       # (bq, n, h)
+        return jnp.einsum("qnh,qh->qn", cmin, Wb)
+    return _map_query_blocks(qblock, (Dq, Q_w), Dq.shape[0], block_q)
+
+
+# ------------------------------------------------------- batched engines
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "use_kernels",
+                                             "block_q", "block_v", "block_h",
+                                             "block_n"))
+def lc_act_scores_batched(corpus: Corpus, Q_ids: Array, Q_w: Array,
+                          iters: int = 1, *, use_kernels: bool = False,
+                          block_q: int = 8, block_v: int = 256,
+                          block_h: int = 256, block_n: int = 256) -> Array:
+    """Batched LC-ACT: (nq, h) query batch -> (nq, n) lower bounds
+    (stage-1 ranked Phase 1 composed with the query-blocked pour)."""
+    if iters == 0 and not use_kernels:
+        Z0 = phase1_min_batched(corpus.coords, Q_ids, Q_w)
+        return pour_min_blocked(corpus, Z0, block_q)
+    Z, W = _phase1_batched_dispatch(corpus, Q_ids, Q_w, iters + 1,
+                                    use_kernels, block_v, block_h)
+    return pour_blocked(corpus, Z, W, iters, block_q,
+                        use_kernels=use_kernels, block_n=block_n,
+                        block_h=block_h)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernels", "block_q",
+                                             "block_v", "block_h"))
+def lc_rwmd_scores_batched(corpus: Corpus, Q_ids: Array, Q_w: Array, *,
+                           use_kernels: bool = False, block_q: int = 8,
+                           block_v: int = 256, block_h: int = 256) -> Array:
+    """Batched LC-RWMD db -> query (== batched LC-ACT with zero rounds)."""
+    return lc_act_scores_batched(corpus, Q_ids, Q_w, iters=0,
+                                 use_kernels=use_kernels, block_q=block_q,
+                                 block_v=block_v, block_h=block_h)
+
+
+def _rows_model_sharded() -> bool:
+    """True when the ambient mesh actually splits database rows over
+    "model" — the precondition for :func:`rev_min_full`'s memory bound.
+    On a model-size-1 mesh (or outside any mesh / on jax without an
+    ambient-mesh API) the full-row gather would sit on ONE device, so
+    callers must keep the row-blocked schedule instead."""
+    mesh = annotate.current_mesh()
+    return mesh is not None and mesh.shape.get("model", 1) > 1
+
+
+@functools.partial(jax.jit, static_argnames=("block", "block_q"))
+def lc_rwmd_scores_rev_batched(corpus: Corpus, Q_ids: Array, Q_w: Array,
+                               block: int = 256, block_q: int = 8) -> Array:
+    """Batched LC-RWMD query -> db: one stacked distance tensor for the
+    WHOLE batch, streamed through the (row-block, query-block) masked
+    (min,+) reduction."""
+    Dq = _rev_handoff(phase1_stacked_dist(corpus.coords, Q_ids, Q_w))
+    return rev_min_blocked(corpus, Dq, Q_w, block, block_q)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "block_q"))
+def lc_rwmd_scores_rev_dist(corpus: Corpus, Q_ids: Array, Q_w: Array, *,
+                            block: int = 256, block_q: int = 8) -> Array:
+    """Mesh-sharded batched LC-RWMD query -> db: same stacked Phase 1, but
+    when database rows are genuinely split over "model" the reduction
+    keeps them on their shards (:func:`rev_min_full`) instead of scanning
+    row blocks — the row scan would force XLA to gather the sharded rows
+    onto every device. Without real model sharding (single-device default
+    mesh) the full-row gather has nothing bounding it, so the row-blocked
+    schedule is kept."""
+    Dq = _rev_handoff(phase1_stacked_dist(corpus.coords, Q_ids, Q_w))
+    if _rows_model_sharded():
+        return rev_min_full(corpus, Dq, Q_w, block_q)
+    return rev_min_blocked(corpus, Dq, Q_w, block, block_q)
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernels", "block_q",
@@ -467,19 +628,31 @@ def lc_omr_scores_batched(corpus: Corpus, Q_ids: Array, Q_w: Array, *,
                           block_v: int = 256, block_h: int = 256) -> Array:
     """Batched LC-OMR: shared batched Phase 1 (top-2 per vocabulary row),
     query-blocked Algorithm-1 reduction."""
-    nq = Q_ids.shape[0]
     Z, W = _phase1_batched_dispatch(corpus, Q_ids, Q_w, 2, use_kernels,
                                     block_v, block_h)
-    x = corpus.w
+    return omr_reduce_blocked(corpus, Z, W[..., 0], block_q)
 
-    def blk(Zb, W0b):                                    # (bq, v, 2), (bq, v)
-        Zg = Zb[:, corpus.ids]                           # (bq, n, hmax, 2)
-        W0g = W0b[:, corpus.ids]                         # (bq, n, hmax)
-        overlap = Zg[..., 0] == 0.0
-        rest = x - jnp.minimum(x, W0g)
-        per_entry = jnp.where(overlap, rest * Zg[..., 1], x * Zg[..., 0])
-        return jnp.sum(per_entry, axis=-1)
-    return _map_query_blocks(blk, (Z, W[..., 0]), nq, block_q)
+
+@functools.partial(jax.jit, static_argnames=("block", "block_q",
+                                             "full_rows"))
+def lc_rwmd_symmetric_scores_batched(corpus: Corpus, Q_ids: Array,
+                                     Q_w: Array, *, block: int = 256,
+                                     block_q: int = 8,
+                                     full_rows: bool = False) -> Array:
+    """Symmetric batched LC-RWMD: max of the two directional bounds
+    sharing ONE stacked Phase-1 distance tensor — the forward masked-min
+    row and the reverse (min,+) reduction both read the same (v, nq, h) D
+    (previously each direction recomputed the (v, nq*h) matmul).
+    ``full_rows`` requests the mesh-friendly reverse reduction (honored
+    only when rows are really model-sharded; see
+    :func:`_rows_model_sharded`)."""
+    D = phase1_stacked_dist(corpus.coords, Q_ids, Q_w)
+    fwd = pour_min_blocked(corpus, _min_handoff(D), block_q)
+    Dq = _rev_handoff(D)                                 # (nq, v, h)
+    rev = (rev_min_full(corpus, Dq, Q_w, block_q)
+           if full_rows and _rows_model_sharded()
+           else rev_min_blocked(corpus, Dq, Q_w, block, block_q))
+    return jnp.maximum(fwd, rev)
 
 
 def symmetric_scores(asym: Array) -> Array:

@@ -64,6 +64,23 @@ class MethodSpec:
                  (nq, h) queries -> (nq, n) scores; amortizes Phase 1
                  across the batch. ``None`` falls back to the scanned
                  per-query path in ``batch_scores``.
+    dist_fn:     mesh-specialized multi-query scorer for the distributed
+                 step (``engine="dist"``). Most methods distribute via
+                 their ``batch_fn`` unchanged — the lc pipeline stages
+                 carry their own ``sharding.annotate`` constraints — so
+                 ``None`` means "use batch_fn". Register one only when
+                 the single-host schedule fights the partitioner (e.g.
+                 rwmd_rev's row-block scan would gather the
+                 model-sharded rows).
+    symmetric_batch_fn: multi-query scorer for the SYMMETRIC measure
+                 (max of both directions) that shares intermediate work
+                 between the two — rwmd/rwmd_rev share one stacked
+                 Phase-1 distance tensor. ``None`` falls back to two
+                 directional calls.
+    dist_out:    PartitionSpec-shaped hint for the (nq, n) score matrix
+                 the distributed step emits; ``"data"`` resolves to the
+                 mesh's DP axes. Default: queries on their data shards,
+                 database columns on the model shards that scored them.
     """
     name: str
     paper_name: str
@@ -73,6 +90,9 @@ class MethodSpec:
     supports_kernels: bool = False
     reverse: str | None = None
     batch_fn: ScoreFn | None = None
+    dist_fn: ScoreFn | None = None
+    symmetric_batch_fn: ScoreFn | None = None
+    dist_out: tuple = ("data", "model")
 
 
 METHODS: dict[str, MethodSpec] = {}
@@ -95,6 +115,25 @@ def _register_batch(name: str) -> Callable[[ScoreFn], ScoreFn]:
     method; the single-query ``fn`` stays the parity oracle."""
     def deco(fn: ScoreFn) -> ScoreFn:
         METHODS[name] = dataclasses.replace(METHODS[name], batch_fn=fn)
+        return fn
+    return deco
+
+
+def _register_dist(name: str) -> Callable[[ScoreFn], ScoreFn]:
+    """Attach a mesh-specialized scorer (``engine="dist"`` override)."""
+    def deco(fn: ScoreFn) -> ScoreFn:
+        METHODS[name] = dataclasses.replace(METHODS[name], dist_fn=fn)
+        return fn
+    return deco
+
+
+def _register_symmetric_batch(*names: str) -> Callable[[ScoreFn], ScoreFn]:
+    """Attach a shared-work symmetric multi-query scorer to a
+    reverse-linked method pair (both directions symmetrize identically)."""
+    def deco(fn: ScoreFn) -> ScoreFn:
+        for name in names:
+            METHODS[name] = dataclasses.replace(METHODS[name],
+                                                symmetric_batch_fn=fn)
         return fn
     return deco
 
@@ -125,6 +164,23 @@ def _rwmd_rev(corpus, q_ids, q_w, *, rev_block=256, **_):
 def _rwmd_rev_batch(corpus, q_ids, q_w, *, rev_block=256, block_q=8, **_):
     return lc.lc_rwmd_scores_rev_batched(corpus, q_ids, q_w, block=rev_block,
                                          block_q=block_q)
+
+
+@_register_dist("rwmd_rev")
+def _rwmd_rev_dist(corpus, q_ids, q_w, *, rev_block=256, block_q=8, **_):
+    return lc.lc_rwmd_scores_rev_dist(corpus, q_ids, q_w, block=rev_block,
+                                      block_q=block_q)
+
+
+@_register_symmetric_batch("rwmd", "rwmd_rev")
+def _rwmd_symmetric_batch(corpus, q_ids, q_w, *, rev_block=256, block_q=8,
+                          dist=False, **_):
+    # ``dist`` is passed by batch_scores(engine="dist") only: it selects
+    # the mesh-friendly full-row reverse reduction.
+    return lc.lc_rwmd_symmetric_scores_batched(corpus, q_ids, q_w,
+                                               block=rev_block,
+                                               block_q=block_q,
+                                               full_rows=dist)
 
 
 @_register("omr", paper_name="LC-OMR", supports_kernels=True)
@@ -243,33 +299,48 @@ def batch_scores(corpus: lc.Corpus, q_ids: Array, q_w: Array, *,
     ``engine="batched"`` (default) dispatches to the method's multi-query
     engine: Phase 1 (the vocabulary-vs-query distance work) runs ONCE for
     the whole batch and Phase 2/3 stream query blocks of ``block_q`` —
-    this is the serving hot path. ``engine="scan"`` is the fallback that
-    runs each query through the exact single-query compute graph via
-    ``lax.map``, matching a Python loop of ``query_scores`` calls
-    bit-for-bit; use it to verify the batched engine or on methods
+    this is the serving hot path. ``engine="dist"`` is the same pipeline
+    with mesh-specialized overrides where registered (``spec.dist_fn``);
+    it is what the distributed step in ``launch/search.py`` traces — the
+    pipeline stages carry their own sharding constraints, so on a single
+    host it scores identically to ``batched``. ``engine="scan"`` is the
+    fallback that runs each query through the exact single-query compute
+    graph via ``lax.map``, matching a Python loop of ``query_scores``
+    calls bit-for-bit; use it to verify the batched engine or on methods
     without a registered ``batch_fn``.
     """
-    if engine not in ("batched", "scan"):
+    if engine not in ("batched", "scan", "dist"):
         raise ValueError(f"unknown engine {engine!r}; "
-                         "one of ('batched', 'scan')")
+                         "one of ('batched', 'scan', 'dist')")
     spec = METHODS[method]
-    if engine == "batched" and spec.batch_fn is not None:
+    if engine != "scan" and spec.batch_fn is not None:
+        def pick(s):
+            return (s.dist_fn or s.batch_fn) if engine == "dist" \
+                else s.batch_fn
         kw = dict(iters=iters, use_kernels=use_kernels, block_v=block_v,
                   block_h=block_h, block_n=block_n, rev_block=rev_block,
                   block_q=block_q)
-        fwd = spec.batch_fn(corpus, q_ids, q_w, **kw)
-        if not symmetric or spec.symmetric:
-            return fwd
-        if spec.reverse is None:
-            raise ValueError(
-                f"method {method!r} has no reverse direction registered; "
-                "symmetric scoring needs one (use rwmd/rwmd_rev)")
-        rspec = METHODS[spec.reverse]
-        if rspec.batch_fn is not None:
-            return jnp.maximum(fwd, rspec.batch_fn(corpus, q_ids, q_w, **kw))
-        rev = jax.lax.map(lambda ab: rspec.fn(corpus, ab[0], ab[1], **kw),
-                          (q_ids, q_w))
-        return jnp.maximum(fwd, rev)
+        if symmetric and not spec.symmetric:
+            if spec.reverse is None:
+                raise ValueError(
+                    f"method {method!r} has no reverse direction "
+                    "registered; symmetric scoring needs one (use "
+                    "rwmd/rwmd_rev)")
+            if spec.symmetric_batch_fn is not None and not use_kernels:
+                # Shared-work symmetric engine: both directions read one
+                # stacked Phase-1 distance tensor (kernel Phase 1 has no
+                # shared form — fall through to two directional calls).
+                return spec.symmetric_batch_fn(corpus, q_ids, q_w,
+                                               dist=(engine == "dist"), **kw)
+            fwd = pick(spec)(corpus, q_ids, q_w, **kw)
+            rspec = METHODS[spec.reverse]
+            if rspec.batch_fn is not None:
+                return jnp.maximum(fwd, pick(rspec)(corpus, q_ids, q_w,
+                                                    **kw))
+            rev = jax.lax.map(lambda ab: rspec.fn(corpus, ab[0], ab[1],
+                                                  **kw), (q_ids, q_w))
+            return jnp.maximum(fwd, rev)
+        return pick(spec)(corpus, q_ids, q_w, **kw)
 
     def one(ab):
         return query_scores(corpus, ab[0], ab[1], method=method,

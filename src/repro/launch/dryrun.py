@@ -27,7 +27,6 @@ from repro.analysis.jaxpr_cost import cost_of
 from repro.configs import ARCH_IDS, EMD_IDS, get_config
 from repro.launch import steps as St
 from repro.launch.mesh import make_production_mesh
-from repro.launch.search import jit_search_step, make_search_step, search_input_specs
 from repro.models.config import SHAPES, cells_for
 
 # --- TPU v5e hardware constants (roofline denominators) ---
@@ -63,10 +62,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
     with jax.set_mesh(mesh):       # ambient mesh: activation annotations
         if arch in EMD_IDS:
-            jitted = jit_search_step(cfg, mesh)
-            args = search_input_specs(cfg)
+            jitted = St.jit_emd_search_step(cfg, mesh)
+            args = St.emd_search_input_specs(cfg)
             lowered = jitted.lower(*args)
-            jcost = cost_of(make_search_step(cfg.iters, 16), *args)
+            jcost = cost_of(St.make_emd_search_step(cfg, 16), *args)
             # LC-ACT "model flops": the algorithm's own matmul term
             # (Phase-1 vhm per query) — everything else is intended overhead.
             mf = 2.0 * cfg.queries * cfg.vocab * cfg.hmax * cfg.dim

@@ -1,19 +1,41 @@
-"""Distributed LC-ACT similarity search (the paper's workload, scaled out).
+"""Distributed EMD similarity search (the paper's workload, scaled out).
 
 One scoring step: a batch of queries against a vocabulary-backed histogram
-database. Serving callers should reach this through
-``repro.api.EmdIndex`` (``backend="distributed"``), which builds the mesh,
-shardings, and jitted step from this module internally.
+database, for ANY method in the ``retrieval.METHODS`` registry — the step
+is derived from the registry (``MethodSpec.dist_fn`` falling back to the
+method's ``batch_fn``), not hard-coded, so every method the single-host
+batched engine serves also runs on the mesh. Serving callers should reach
+this through ``repro.api.EmdIndex`` (``backend="distributed"``), which
+builds the mesh, shardings, and jitted step from this module internally.
+
+This module contains NO scoring math of its own: it wraps the raw sharded
+arrays back into a :class:`~repro.core.lc.Corpus` and traces
+``retrieval.batch_scores`` — the same batched pipeline
+(``core/lc`` stage functions) that single-host callers run. The pipeline
+stages carry their own ``sharding.annotate`` constraints, which are what
+shape the mesh program:
 
 Sharding (DESIGN.md section 2):
-  * Phase 1 — queries over ``data``, vocabulary rows over ``model``:
-    the v x h distance matmul is TP-sharded; the per-row top-k is local.
-  * handoff — the tiny (v, k) ladders are all-gathered over ``model``
-    (v*k floats, ~2 MB at 20News scale).
+  * Phase 1 — queries over ``data``, vocabulary rows over ``model``: the
+    stacked (v, nq*h) distance matmul is sharded both ways
+    (``annotate.emd_stacked_dist``); the per-row top-k / masked min is
+    local (``lc.streaming_smallest_k`` is built from min/where/iota so
+    the SPMD partitioner shards it — ``lax.top_k`` would not partition
+    and forces a full all-gather of D).
+  * handoff — the query-major (nq, v, k) cost/capacity ladders (or the
+    (nq, v) masked-min row) are all-gathered over ``model``
+    (``annotate.emd_ladder``; v*k floats, ~2 MB at 20News scale).
+    Pinning this OUTPUT layout stops XLA hoisting the resharding above
+    the top-k, which would all-gather the full (v, nq, h) distance
+    tensor instead — 36 GB/device at 20News scale.
   * Phase 2/3 — database rows over ``model``, queries over ``data``: the
-    pour is embarrassingly parallel over the (query, row) grid; the final
-    score matrix lands P(data, model).
-  * top-l — per-shard top-l then a single small gather.
+    query-blocked pour (``lc.pour_blocked`` and friends, ``block_q``
+    queries gathered per tile) is embarrassingly parallel over the
+    (query, row) grid; the score matrix lands P(data, model) (per-method
+    override via ``MethodSpec.dist_out``).
+  * top-l — pad rows masked to ``lc.PAD_DIST`` first (zero-weight pad
+    rows otherwise score 0 for the LC methods — the best possible
+    score), then per-shard top-l and a single small gather.
 """
 from __future__ import annotations
 
@@ -21,7 +43,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import lc
+from repro.core import lc, retrieval
 from repro.launch.mesh import data_axes
 
 
@@ -36,45 +58,49 @@ def _dp(mesh):
     return axes if len(axes) > 1 else axes[0]
 
 
-def make_scores_step(iters: int):
+def workload_method(workload) -> str:
+    """The registry method a workload scores with (``"act"`` when it
+    declares none) — the single place the default lives."""
+    return getattr(workload, "method", "act") or "act"
+
+
+def make_scores_step(iters: int = 1, *, method: str = "act",
+                     symmetric: bool = False, engine: str = "dist",
+                     use_kernels: bool = False, block_q: int = 8,
+                     block_v: int = 256, block_h: int = 256,
+                     block_n: int = 256, rev_block: int = 256):
     """Returns scores_step(corpus_ids, corpus_w, coords, q_ids, q_w)
-    -> full (nq, n) LC-ACT score matrix."""
-    from repro.sharding import annotate
-    k = iters + 1
+    -> full (nq, n) score matrix for ``method``.
 
+    The step is the registry-dispatched batched pipeline
+    (``retrieval.batch_scores``): ``engine="dist"`` (default) runs each
+    method's mesh-specialized scorer where one is registered and its
+    plain batched scorer otherwise; ``engine="scan"`` replays the exact
+    single-query graphs (verification). All the batch knobs of the
+    single-host engine apply unchanged.
+    """
     def scores_step(corpus_ids, corpus_w, coords, q_ids, q_w):
-        def p1(qi, qw):
-            return lc.phase1(coords, qi, qw, k)       # Z, W: (v, k)
-
-        Z, W = jax.vmap(p1)(q_ids, q_w)               # (nq, v, k)
-        # Pin the top-k OUTPUT layout: queries stay on their data shards,
-        # the (v, k) ladders replicated. Without this, XLA hoists the
-        # resharding above the top-k and all-gathers the full (nq, v, h)
-        # distance tensor — 36 GB/device at 20News scale (EXPERIMENTS.md
-        # section Perf, emd-20news iteration 1).
-        Z = annotate.constrain(Z, ("pod", "data"), None, None)
-        W = annotate.constrain(W, ("pod", "data"), None, None)
-
-        def pour_one(Zq, Wq):
-            Zg = Zq[corpus_ids]                       # (n, hmax, k)
-            if iters == 0:
-                return jnp.sum(corpus_w * Zg[..., 0], axis=-1)
-            Wg = Wq[corpus_ids][..., :iters]
-            return lc.pour(corpus_w, Zg, Wg, iters)
-
-        return jax.vmap(pour_one)(Z, W)               # (nq, n)
+        corpus = lc.Corpus(ids=corpus_ids, w=corpus_w, coords=coords)
+        return retrieval.batch_scores(
+            corpus, q_ids, q_w, method=method, symmetric=symmetric,
+            engine=engine, iters=iters, use_kernels=use_kernels,
+            block_v=block_v, block_h=block_h, block_n=block_n,
+            rev_block=rev_block, block_q=block_q)
 
     return scores_step
 
 
-def make_search_step(iters: int, top_l: int, n_valid: int | None = None):
+def make_search_step(iters: int = 1, top_l: int = 16,
+                     n_valid: int | None = None, **score_kw):
     """Returns search_step(corpus_ids, corpus_w, coords, q_ids, q_w)
     -> (top-l scores, top-l indices), each (nq, top_l).
 
-    ``n_valid``: number of real (non-padding) database rows. Zero-weight
-    pad rows score 0 — the best possible score — so they must be masked
-    out before top-l, not after. ``None`` = no padding."""
-    scores_step = make_scores_step(iters)
+    ``n_valid``: number of real (non-padding) database rows. Pad rows
+    score 0 for the LC methods — the best possible score — so they must
+    be masked out before top-l, not after (and for the baselines their
+    scores are simply meaningless). ``None`` = no padding. Remaining
+    kwargs go to :func:`make_scores_step`."""
+    scores_step = make_scores_step(iters, **score_kw)
 
     def search_step(corpus_ids, corpus_w, coords, q_ids, q_w):
         scores = scores_step(corpus_ids, corpus_w, coords, q_ids, q_w)
@@ -103,13 +129,17 @@ def search_shardings(mesh, workload):
     return in_sh, out_sh
 
 
-def scores_shardings(mesh, workload):
+def scores_shardings(mesh, workload, method: str | None = None):
     """(in_shardings, out_sharding) for scores_step on ``mesh``: the full
-    (nq, n) matrix lands P(data, model) — queries on their data shards,
-    database columns on the model shards that poured them."""
+    (nq, n) matrix lands on the method's ``MethodSpec.dist_out`` layout —
+    by default P(data, model), queries on their data shards, database
+    columns on the model shards that scored them."""
     dp = _dp(mesh)
+    method = workload_method(workload) if method is None else method
+    spec = retrieval.METHODS[method]
+    out = tuple(dp if ax == "data" else ax for ax in spec.dist_out)
     in_sh, _ = search_shardings(mesh, workload)
-    return in_sh, NamedSharding(mesh, P(dp, "model"))
+    return in_sh, NamedSharding(mesh, P(*out))
 
 
 def search_input_specs(workload,
@@ -131,19 +161,25 @@ def search_input_specs(workload,
 
 
 def jit_search_step(workload, mesh, top_l: int = 16, iters: int | None = None,
-                    n_valid: int | None = None):
+                    n_valid: int | None = None, *, method: str | None = None,
+                    **score_kw):
     """``n_valid`` defaults to the workload's real row count so top-l never
-    returns the zero-scoring pad rows added by ``search_input_specs``."""
+    returns the zero-scoring pad rows added by ``search_input_specs``;
+    ``method`` defaults to the workload's (``act`` when it has none)."""
     iters = workload.iters if iters is None else iters
     n_valid = workload.n_db if n_valid is None else n_valid
-    step = make_search_step(iters, top_l, n_valid=n_valid)
+    method = workload_method(workload) if method is None else method
+    step = make_search_step(iters, top_l, n_valid=n_valid, method=method,
+                            **score_kw)
     in_sh, out_sh = search_shardings(mesh, workload)
     return jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
 
 
-def jit_scores_step(workload, mesh, iters: int | None = None):
+def jit_scores_step(workload, mesh, iters: int | None = None, *,
+                    method: str | None = None, **score_kw):
     """Jitted full-score-matrix step on ``mesh`` (``repro.api`` backend)."""
     iters = workload.iters if iters is None else iters
-    step = make_scores_step(iters)
-    in_sh, out_sh = scores_shardings(mesh, workload)
+    method = workload_method(workload) if method is None else method
+    step = make_scores_step(iters, method=method, **score_kw)
+    in_sh, out_sh = scores_shardings(mesh, workload, method=method)
     return jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)

@@ -121,6 +121,32 @@ def make_decode_step(cfg: ModelConfig):
 
 
 # ----------------------------------------------------------------------------
+# EMD search steps (the paper's retrieval workload) — delegated to
+# ``launch/search.py`` so drivers (dryrun, serve) consume ONE steps surface
+# for every cell type, model or EMD. The method is workload-driven:
+# ``EMDWorkload.method`` picks any ``retrieval.METHODS`` registry entry.
+# ----------------------------------------------------------------------------
+
+def make_emd_search_step(workload, top_l: int = 16, **score_kw):
+    """Unjitted method-generic search step for ``workload`` (cost model /
+    single-device use; ``jit_emd_search_step`` adds mesh shardings)."""
+    from repro.launch import search as Sx
+    return Sx.make_search_step(workload.iters, top_l,
+                               method=Sx.workload_method(workload),
+                               **score_kw)
+
+
+def emd_search_input_specs(workload, **kw):
+    from repro.launch import search as Sx
+    return Sx.search_input_specs(workload, **kw)
+
+
+def jit_emd_search_step(workload, mesh, **kw):
+    from repro.launch import search as Sx
+    return Sx.jit_search_step(workload, mesh, **kw)
+
+
+# ----------------------------------------------------------------------------
 # jit wrapping with shardings for a given mesh
 # ----------------------------------------------------------------------------
 

@@ -43,6 +43,14 @@ def _mesh():
     return m
 
 
+def current_mesh():
+    """The ambient abstract mesh (set by the driver via ``jax.set_mesh``),
+    or ``None`` outside any mesh / on jax without an ambient-mesh API.
+    Public surface for callers that pick schedules by mesh shape (e.g.
+    ``core.lc``'s reverse-RWMD reduction)."""
+    return _mesh()
+
+
 def _dp_axes(mesh) -> tuple[str, ...]:
     names = (("pod", "data", "model") if _MODE.get() == "fsdp"
              else ("pod", "data"))
@@ -115,3 +123,30 @@ def logits(x):
         return x
     v_ax = None if _MODE.get() == "fsdp" else "model"
     return constrain(x, _dp_axes(mesh), None, v_ax)
+
+
+def emd_stacked_dist(D):
+    """(v, nq, h) stacked Phase-1 distance tensor of the batched LC
+    pipeline: vocabulary rows over "model" (the matmul is TP-sharded),
+    queries over DP, histogram slots replicated. Pinning this layout keeps
+    the one big Phase-1 product sharded both ways; the per-row top-k /
+    min that follows is local."""
+    mesh = _mesh()
+    if mesh is None:
+        return D
+    return constrain(D, "model", _dp_axes(mesh), None)
+
+
+def emd_ladder(x):
+    """Phase-1 -> Phase-2 handoff arrays, query-major — the (nq, v, k)
+    cost/capacity ladders, the (nq, v) masked-min row, or the (nq, v, h)
+    reverse-direction slice: queries stay on their DP shards, everything
+    else replicated. This IS the ladder all-gather over "model": without
+    pinning the OUTPUT layout here, XLA hoists the resharding above the
+    top-k and all-gathers the full (v, nq, h) distance tensor instead —
+    36 GB/device at 20News scale (EXPERIMENTS.md section Perf, emd-20news
+    iteration 1)."""
+    mesh = _mesh()
+    if mesh is None:
+        return x
+    return constrain(x, _dp_axes(mesh), *([None] * (x.ndim - 1)))

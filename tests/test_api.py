@@ -160,18 +160,75 @@ def test_engine_config_validation():
         EngineConfig(backend="gpu")
     with pytest.raises(ValueError, match="iters"):
         EngineConfig(iters=-1)
-    with pytest.raises(ValueError, match="distributed"):
-        EngineConfig(method="omr", backend="distributed")
     with pytest.raises(ValueError, match="reverse"):
         EngineConfig(method="act", symmetric=True)
-    with pytest.raises(ValueError, match="symmetric"):
-        EngineConfig(method="rwmd", symmetric=True, backend="distributed")
+    # the mesh step is registry-derived: every method (and the symmetric
+    # measure) is a valid distributed config now
+    for method in METHODS:
+        assert EngineConfig(method=method,
+                            backend="distributed").method == method
+    assert EngineConfig(method="rwmd", symmetric=True,
+                        backend="distributed").symmetric
     assert isinstance(EngineConfig(), EngineConfig)
     # frozen + hashable (usable as a jit-cache key)
     cfg = EngineConfig()
     with pytest.raises(dataclasses.FrozenInstanceError):
         cfg.iters = 3
     assert hash(cfg) == hash(EngineConfig())
+
+
+def test_distributable_methods_covers_registry():
+    from repro.api import DISTRIBUTABLE_METHODS
+    assert tuple(sorted(METHODS)) == DISTRIBUTABLE_METHODS
+
+
+def test_scores_shardings_honor_dist_out(monkeypatch):
+    """MethodSpec.dist_out drives the distributed step's output layout:
+    "data" resolves to the mesh's DP axes, other entries pass through."""
+    from jax.sharding import PartitionSpec as P
+    from repro.launch import search as dsearch
+    from repro.launch.mesh import make_test_mesh
+    mesh = make_test_mesh(1, 1)
+    _, out = dsearch.scores_shardings(mesh, None, method="act")
+    assert out.spec == P("data", "model")
+    hinted = dataclasses.replace(METHODS["wcd"], dist_out=("data", None))
+    monkeypatch.setitem(retrieval.METHODS, "wcd_hinted", hinted)
+    _, out = dsearch.scores_shardings(mesh, None, method="wcd_hinted")
+    assert out.spec == P("data", None)
+
+
+@pytest.mark.parametrize("method", sorted(METHODS))
+def test_every_method_distributed_parity_single_device(corpus_labels,
+                                                       method):
+    """Acceptance: EmdIndex(backend="distributed") serves EVERY registered
+    method, scoring within tolerance of the single-host batched engine —
+    here on the default single-device mesh (the multi-device version runs
+    in tests/test_distributed.py), with pad rows present and a block_q
+    that does not divide the query count."""
+    corpus, _ = corpus_labels
+    nq = 5
+    cfg = EngineConfig(method=method, iters=2, backend="distributed",
+                       pad_multiple=16, block_q=3)
+    dst = EmdIndex.build(corpus, cfg)
+    assert dst._padded_corpus.n > corpus.n          # pad rows in play
+    ref = EmdIndex.build(corpus, dataclasses.replace(cfg,
+                                                     backend="reference"))
+    s_dst = np.asarray(dst.scores(corpus.ids[:nq], corpus.w[:nq]))
+    s_ref = np.asarray(ref.scores(corpus.ids[:nq], corpus.w[:nq]))
+    np.testing.assert_allclose(s_dst, s_ref, rtol=1e-5, atol=1e-6)
+
+
+def test_symmetric_distributed_matches_reference(corpus_labels):
+    """The paper's symmetric measure now runs on the mesh path too."""
+    corpus, _ = corpus_labels
+    cfg = EngineConfig(method="rwmd", symmetric=True, backend="distributed",
+                       pad_multiple=16)
+    got = np.asarray(EmdIndex.build(corpus, cfg)
+                     .scores(corpus.ids[:4], corpus.w[:4]))
+    want = np.asarray(EmdIndex.build(
+        corpus, dataclasses.replace(cfg, backend="reference"))
+        .scores(corpus.ids[:4], corpus.w[:4]))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
 
 
 def test_distributed_pad_rows_masked_in_search(corpus_labels):

@@ -2,14 +2,17 @@
 
 The batched engine amortizes Phase 1 across the query batch and streams
 Phase 2 in query blocks; every registered method must reproduce the
-scanned (``lax.map`` of single-query graphs) scores.
+scanned (``lax.map`` of single-query graphs) scores. The same pipeline
+stages back the mesh step (``engine="dist"``), tested here on one host.
 """
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.api import EmdIndex, EngineConfig
 from repro.core import lc, retrieval
+from repro.core.geometry import pairwise_dist
 from repro.data.synth import make_text_like
 
 
@@ -90,6 +93,77 @@ def test_all_pairs_batched_matches_scan(corpus):
     got = retrieval.all_pairs_scores(c, method="omr", engine="batched",
                                      block_q=4)
     want = retrieval.all_pairs_scores(c, method="omr", engine="scan")
+    _assert_close(got, want)
+
+
+@pytest.mark.parametrize("method", sorted(retrieval.METHODS))
+def test_dist_engine_matches_batched_single_host(corpus, method):
+    """``engine="dist"`` — the graph the mesh step traces — scores like
+    the plain batched engine on a single host (the sharding constraints
+    no-op and the mesh-specialized overrides are schedule changes only)."""
+    c, _ = corpus
+    nq = 5
+    got = retrieval.batch_scores(c, c.ids[:nq], c.w[:nq], method=method,
+                                 engine="dist", iters=2, block_q=2)
+    want = retrieval.batch_scores(c, c.ids[:nq], c.w[:nq], method=method,
+                                  engine="batched", iters=2, block_q=2)
+    _assert_close(got, want)
+
+
+def test_dist_engine_symmetric(corpus):
+    c, _ = corpus
+    got = retrieval.batch_scores(c, c.ids[:4], c.w[:4], method="rwmd",
+                                 engine="dist", symmetric=True, block_q=3)
+    want = retrieval.batch_scores(c, c.ids[:4], c.w[:4], method="rwmd",
+                                  engine="scan", symmetric=True)
+    _assert_close(got, want)
+
+
+def test_symmetric_batched_shares_one_distance_matmul(corpus):
+    """The symmetric rwmd engine computes the stacked (v, nq*h) distance
+    tensor ONCE and shares it between the two directions (separate
+    directional calls each carry their own Phase-1 matmul)."""
+    c, _ = corpus
+    qi, qw = c.ids[:4], c.w[:4]
+    count = lambda f: str(jax.make_jaxpr(f)(qi, qw)).count("dot_general")
+    n_sym = count(lambda i, w: lc.lc_rwmd_symmetric_scores_batched(c, i, w))
+    n_fwd = count(lambda i, w: lc.lc_rwmd_scores_batched(c, i, w))
+    n_rev = count(lambda i, w: lc.lc_rwmd_scores_rev_batched(c, i, w))
+    assert n_sym < n_fwd + n_rev
+
+
+def test_stack_query_bins_dedup():
+    """Corpus-as-queries stacks (nq*h >= DEDUP_STACK_RATIO * v) dedup
+    repeated vocabulary ids before the Phase-1 matmul; the re-expanded
+    distance tensor matches the naive per-slot stacking."""
+    rng = np.random.default_rng(0)
+    coords = jnp.asarray(rng.normal(size=(8, 3)), jnp.float32)
+    Q_ids = jnp.asarray(rng.integers(0, 8, size=(8, 5)), jnp.int32)
+    Q_w = jnp.asarray(rng.uniform(0.1, 1.0, size=(8, 5)), jnp.float32)
+    qc, inv = lc.stack_query_bins(coords, Q_ids)        # 40 slots >= 4*8
+    assert inv is not None and qc.shape == (8, 3)
+    D = lc.phase1_stacked_dist(coords, Q_ids, Q_w)
+    naive = pairwise_dist(coords,
+                          coords[Q_ids.reshape(-1)]).reshape(8, 8, 5)
+    np.testing.assert_allclose(np.asarray(D), np.asarray(naive),
+                               rtol=1e-6, atol=1e-7)
+    # small serving batches skip the dedup sort entirely
+    _, inv_small = lc.stack_query_bins(coords, Q_ids[:1])
+    assert inv_small is None
+
+
+@pytest.mark.parametrize("method", ["rwmd", "act", "omr", "rwmd_rev"])
+def test_all_pairs_parity_under_dedup(method):
+    """All-pairs corpus-as-queries on a small vocabulary crosses the
+    dedup gate; the batched engine must still match the scanned
+    per-query oracle."""
+    c, _ = make_text_like(n_docs=12, n_classes=3, vocab=40, m=6,
+                          doc_len=30, hmax=16, seed=7)
+    assert c.n * c.hmax >= lc.DEDUP_STACK_RATIO * c.v
+    got = retrieval.all_pairs_scores(c, method=method, engine="batched",
+                                     iters=2, block_q=5)
+    want = retrieval.all_pairs_scores(c, method=method, engine="scan",
+                                      iters=2)
     _assert_close(got, want)
 
 

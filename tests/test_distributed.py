@@ -7,8 +7,17 @@ import sys
 
 import pytest
 
+# Every subprocess gets exactly the 8-device host mesh these tests are
+# written for (matching the CI job step's XLA_FLAGS): any inherited
+# device-count flag is replaced, other exported XLA_FLAGS content (dump
+# dirs etc.) is preserved, so local runs are self-sufficient regardless
+# of the environment.
+_XLA_FLAGS = " ".join(
+    f for f in os.environ.get("XLA_FLAGS", "").split()
+    if not f.startswith("--xla_force_host_platform_device_count"))
 _ENV = dict(os.environ,
-            XLA_FLAGS="--xla_force_host_platform_device_count=8",
+            XLA_FLAGS=(_XLA_FLAGS
+                       + " --xla_force_host_platform_device_count=8").strip(),
             PYTHONPATH="src")
 
 
@@ -149,6 +158,104 @@ for u in range(8):
 print("SEARCH OK")
 """)
     assert "SEARCH OK" in out
+
+
+@pytest.mark.slow
+def test_distributed_every_method_matches_batched():
+    """Acceptance: EVERY method in retrieval.METHODS scores identically
+    (within tolerance) on backend="distributed" over an 8-device (4, 2)
+    mesh vs the single-host batched engine — including pad rows
+    (pad_multiple pads 24 -> 32) and a block_q that divides neither the
+    query count nor the per-shard count. Also covers the symmetric
+    measure on the mesh."""
+    out = _run("""
+import dataclasses, jax, numpy as np
+from repro.api import EmdIndex, EngineConfig
+from repro.core.retrieval import METHODS
+from repro.data.synth import make_text_like
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+corpus, _ = make_text_like(n_docs=24, vocab=64, m=8, doc_len=10, hmax=16)
+q_ids, q_w = corpus.ids[:5], corpus.w[:5]       # odd nq: padded to the mesh
+assert bool((np.asarray(q_w) == 0.0).any())     # query-side padding in play
+for method in sorted(METHODS):
+    cfg = EngineConfig(method=method, iters=2, backend="distributed",
+                       pad_multiple=16, block_q=3)
+    dst = EmdIndex.build(corpus, cfg, mesh=mesh)
+    assert dst._padded_corpus.n == 32 > corpus.n
+    ref = EmdIndex.build(corpus, dataclasses.replace(cfg,
+                                                     backend="reference"))
+    np.testing.assert_allclose(np.asarray(dst.scores(q_ids, q_w)),
+                               np.asarray(ref.scores(q_ids, q_w)),
+                               rtol=1e-5, atol=1e-6, err_msg=method)
+    _, idx = dst.search(q_ids, q_w, top_l=8)
+    assert int(np.asarray(idx).max()) < corpus.n, method   # pads masked
+    print("METHOD OK", method)
+sym = EngineConfig(method="rwmd", symmetric=True, backend="distributed",
+                   pad_multiple=16, block_q=3)
+d = EmdIndex.build(corpus, sym, mesh=mesh)
+r = EmdIndex.build(corpus, dataclasses.replace(sym, backend="reference"))
+np.testing.assert_allclose(np.asarray(d.scores(q_ids, q_w)),
+                           np.asarray(r.scores(q_ids, q_w)),
+                           rtol=1e-5, atol=1e-6)
+print("ALL METHODS OK")
+""")
+    assert "ALL METHODS OK" in out
+    for method in ("act", "bow", "omr", "rwmd", "rwmd_rev", "wcd"):
+        assert f"METHOD OK {method}" in out
+
+
+@pytest.mark.slow
+def test_distributed_all_pairs_dedup_matches_reference():
+    """Corpus-as-queries all-pairs on a small vocabulary crosses the
+    unique-bin dedup gate INSIDE the SPMD step (jnp.unique + inverse
+    gather over DP-sharded query ids) — parity vs the single-host
+    engine, which crosses the same gate."""
+    out = _run("""
+import dataclasses, jax, numpy as np
+from repro.api import EmdIndex, EngineConfig
+from repro.core import lc
+from repro.data.synth import make_text_like
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+corpus, _ = make_text_like(n_docs=24, n_classes=4, vocab=40, m=6,
+                           doc_len=30, hmax=16)
+assert corpus.n * corpus.hmax >= lc.DEDUP_STACK_RATIO * corpus.v
+cfg = EngineConfig(method="rwmd", iters=0, backend="distributed",
+                   pad_multiple=8, block_q=5)
+dst = EmdIndex.build(corpus, cfg, mesh=mesh)
+ref = EmdIndex.build(corpus, dataclasses.replace(cfg, backend="reference"))
+np.testing.assert_allclose(np.asarray(dst.all_pairs()),
+                           np.asarray(ref.all_pairs()),
+                           rtol=1e-5, atol=1e-6)
+print("DEDUP SPMD OK")
+""")
+    assert "DEDUP SPMD OK" in out
+
+
+@pytest.mark.slow
+def test_distributed_scan_engine_matches_batched_step():
+    """batch_engine="scan" on the mesh replays the per-query graphs — the
+    verification escape hatch exists on the distributed backend too."""
+    out = _run("""
+import dataclasses, jax, numpy as np
+from repro.api import EmdIndex, EngineConfig
+from repro.data.synth import make_text_like
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+corpus, _ = make_text_like(n_docs=16, vocab=64, m=8, doc_len=24, hmax=16)
+cfg = EngineConfig(method="act", iters=2, backend="distributed",
+                   pad_multiple=8)
+fast = EmdIndex.build(corpus, cfg, mesh=mesh)
+slow = EmdIndex.build(corpus, dataclasses.replace(cfg, batch_engine="scan"),
+                      mesh=mesh)
+q_ids, q_w = corpus.ids[:4], corpus.w[:4]
+np.testing.assert_allclose(np.asarray(fast.scores(q_ids, q_w)),
+                           np.asarray(slow.scores(q_ids, q_w)),
+                           rtol=1e-5, atol=1e-6)
+print("SCAN STEP OK")
+""")
+    assert "SCAN STEP OK" in out
 
 
 @pytest.mark.slow
