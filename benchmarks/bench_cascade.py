@@ -1,0 +1,147 @@
+"""Cascaded prune-and-rescore throughput and recall vs full-corpus ACT.
+
+The acceptance workload of the cascade subsystem: the ``wcd -> rwmd ->
+act`` ladder at rescore budgets {1%, 5%, 20%} of n against full-corpus
+LC-ACT scoring of the same query batch. For each budget it reports
+
+* recall@l of the cascade's top-l vs the full ACT top-l,
+* end-to-end queries/sec (PAIRED interleaved timing vs full scoring, as
+  in ``bench_batch``), and
+* the rows-scored ladder — the cascade's pruned stages together read
+  strictly fewer candidate rows than the n the full scorer reads.
+
+Results append to the CSV stream and land in ``BENCH_cascade.json``
+(repo root, override with BENCH_CASCADE_JSON) with a distributed-step
+entry (the mesh cascade step with its shard-blocked top-budget, on a
+single-device mesh here) carrying the same recall + queries/sec fields.
+``BENCH_SMOKE=1`` shrinks everything to CI smoke sizes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, text_corpus, timeit
+from repro import cascade
+from repro.api import EmdIndex, EngineConfig
+from repro.cascade import CascadeSpec, CascadeStage
+
+#: Rescore budgets as fractions of n (the acceptance grid).
+BUDGETS = (0.01, 0.05, 0.20)
+
+#: ACT Phase-2 rounds of both the full-corpus baseline and the rescorer.
+ACT_ITERS = 3
+
+
+def _spec(pct: float) -> CascadeSpec:
+    """The acceptance cascade at rescore budget ``pct``: wcd prefetch
+    keeping 8x the final budget (capped at the full corpus), rwmd prune
+    to ``pct``, ACT rescore. The 8x headroom is what the centroid
+    heuristic needs to hold >= 0.95 of the true ACT neighbors (rwmd is a
+    near-perfect ACT proxy at these budgets; wcd is the lossy stage)."""
+    return CascadeSpec(stages=(CascadeStage("wcd", min(8 * pct, 1.0)),
+                               CascadeStage("rwmd", pct)),
+                       rescorer="act", rescorer_iters=ACT_ITERS)
+
+
+def _sizes(smoke: bool) -> dict:
+    if smoke:
+        return dict(n_docs=64, n_classes=4, vocab=192, m=16, doc_len=24,
+                    hmax=16, nq=8, top_l=4, reps=3)
+    return dict(n_docs=1024, n_classes=8, vocab=512, m=16, doc_len=20,
+                hmax=16, nq=64, top_l=16, reps=7)
+
+
+def _paired(fn_a, fn_b, reps: int):
+    """Interleaved timing after joint warmup (see bench_batch)."""
+    jax.block_until_ready(fn_a())
+    jax.block_until_ready(fn_b())
+    ta, tb, ratios = [], [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a())
+        a = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b())
+        b = (time.perf_counter() - t0) * 1e6
+        ta.append(a)
+        tb.append(b)
+        ratios.append(a / b)
+    return (float(np.median(ta)), float(np.median(tb)),
+            float(np.median(ratios)))
+
+
+def run() -> None:
+    smoke = os.environ.get("BENCH_SMOKE", "0") not in ("0", "")
+    sz = _sizes(smoke)
+    nq, top_l, reps = sz.pop("nq"), sz.pop("top_l"), sz.pop("reps")
+    corpus, _ = text_corpus(**sz, seed=11)
+    q_ids, q_w = corpus.ids[:nq], corpus.w[:nq]
+    n = corpus.n
+    report = {"bench": "bench_cascade", "smoke": smoke,
+              "sizes": dict(sz, nq=nq, top_l=top_l),
+              "backend": jax.default_backend(),
+              "full_rows_per_query": n, "entries": []}
+
+    full = EmdIndex.build(corpus, EngineConfig(method="act",
+                                               iters=ACT_ITERS,
+                                               top_l=top_l))
+    _, full_idx = full.search(q_ids, q_w)
+
+    for pct in BUDGETS:
+        spec = _spec(pct)
+        casc = EmdIndex.build(corpus, EngineConfig(
+            method="act", iters=ACT_ITERS, top_l=top_l, cascade=spec))
+        _, idx = casc.search(q_ids, q_w)
+        recall = cascade.topk_recall(idx, full_idx)
+        us_full, us_casc, speedup = _paired(
+            lambda: full.search(q_ids, q_w),
+            lambda: casc.search(q_ids, q_w), reps)
+        rows = cascade.stage_rows(spec, n, top_l)
+        cand_rows = sum(v for k, v in rows.items()
+                        if not k.startswith("stage1"))
+        qps_casc = nq / (us_casc / 1e6)
+        qps_full = nq / (us_full / 1e6)
+        emit(f"bench_cascade.act.b{int(100 * pct)}pct", us_casc,
+             f"recall@{top_l}={recall:.3f} qps={qps_casc:.1f} "
+             f"full_qps={qps_full:.1f} speedup={speedup:.2f}x")
+        report["entries"].append(dict(
+            budget_pct=pct, spec=spec.describe(),
+            admissible=spec.admissible,
+            recall_at_l=round(recall, 4), top_l=top_l,
+            queries_per_sec=round(qps_casc, 1),
+            full_queries_per_sec=round(qps_full, 1),
+            speedup_over_full=round(speedup, 2),
+            rows_scored=rows, candidate_rows_per_query=cand_rows,
+            scores_fewer_candidate_rows=bool(cand_rows < n)))
+
+    # Distributed cascade step (single-device mesh: step-latency drift +
+    # recall through the shard-blocked top-budget path the host-mesh CI
+    # job parity-tests).
+    pct = 0.05
+    dist = EmdIndex.build(corpus, EngineConfig(
+        method="act", iters=ACT_ITERS, top_l=top_l, cascade=_spec(pct),
+        backend="distributed", pad_multiple=64))
+    _, idx_d = dist.search(q_ids, q_w)
+    recall_d = cascade.topk_recall(idx_d, full_idx)
+    us = timeit(lambda: dist.search(q_ids, q_w), n_iter=reps)
+    qps_d = nq / (us / 1e6)
+    emit(f"bench_cascade.act.b{int(100 * pct)}pct.distributed", us,
+         f"recall@{top_l}={recall_d:.3f} qps={qps_d:.1f}")
+    report["distributed_step"] = dict(
+        budget_pct=pct, spec=_spec(pct).describe(),
+        recall_at_l=round(recall_d, 4), top_l=top_l,
+        queries_per_sec=round(qps_d, 1))
+
+    path = os.environ.get("BENCH_CASCADE_JSON", "BENCH_cascade.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    run()

@@ -7,6 +7,7 @@
   table3_complexity  Tables 2/3 empirical linear-scaling check
   kernels_bench      DESIGN 2   kernel traffic/fusion model
   bench_batch        serving    batched vs scanned queries/sec (+ JSON)
+  bench_cascade      serving    cascaded prune-and-rescore recall/qps (+ JSON)
 
 Each prints ``name,us_per_call,derived`` CSV rows. All retrieval-bench
 entry points score through the unified ``repro.api.EmdIndex`` serving API
@@ -27,11 +28,11 @@ def main() -> None:
                     help="substring filter on benchmark module names")
     args = ap.parse_args()
 
-    from benchmarks import (bench_batch, fig8_tradeoff, kernels_bench,
-                            sinkhorn_compare, table3_complexity, table5_mnist,
-                            table6_dense)
+    from benchmarks import (bench_batch, bench_cascade, fig8_tradeoff,
+                            kernels_bench, sinkhorn_compare,
+                            table3_complexity, table5_mnist, table6_dense)
     mods = [table6_dense, table5_mnist, fig8_tradeoff, sinkhorn_compare,
-            table3_complexity, kernels_bench, bench_batch]
+            table3_complexity, kernels_bench, bench_batch, bench_cascade]
     print("name,us_per_call,derived")
     failures = 0
     for mod in mods:

@@ -13,7 +13,9 @@ Configured by the frozen :class:`EngineConfig`; methods are typed
 """
 from repro.api.config import BACKENDS, DISTRIBUTABLE_METHODS, EngineConfig
 from repro.api.index import EmdIndex
+from repro.cascade import CASCADES, CascadeSpec, CascadeStage
 from repro.core.retrieval import METHODS, MethodSpec
 
-__all__ = ["BACKENDS", "DISTRIBUTABLE_METHODS", "EngineConfig", "EmdIndex",
+__all__ = ["BACKENDS", "CASCADES", "CascadeSpec", "CascadeStage",
+           "DISTRIBUTABLE_METHODS", "EngineConfig", "EmdIndex",
            "METHODS", "MethodSpec"]

@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.cascade.spec import CascadeSpec, resolve_spec
 from repro.core.retrieval import METHODS
 
 #: Execution engines EmdIndex can place a method on.
@@ -53,6 +54,16 @@ class EngineConfig:
     rev_block:    row-block size of the streamed reverse-RWMD scorer.
     pad_multiple: distributed backend pads database rows to a multiple of
                   this so the corpus shards on any mesh (was a magic 512).
+    cascade:      prune-and-rescore ladder for ``EmdIndex.search``: a
+                  ``repro.cascade.CascadeSpec`` or a preset name from
+                  ``repro.cascade.CASCADES`` (``"fast"``, ``"chain"``,
+                  ``"tight"``, ``"exact"``). ``None`` (default) searches
+                  by full-corpus scoring with ``method``. With a cascade,
+                  ``method``/``iters`` still drive ``scores``/
+                  ``all_pairs``; ``search`` runs the ladder (on the
+                  distributed backend the mesh cascade step is built at
+                  ``EmdIndex.build``, so the rescorer must be jittable —
+                  no host-side exact ``emd`` there).
     """
     method: str = "act"
     iters: int = 1
@@ -66,6 +77,7 @@ class EngineConfig:
     block_q: int = 8
     rev_block: int = 256
     pad_multiple: int = 512
+    cascade: CascadeSpec | str | None = None
 
     def __post_init__(self) -> None:
         if self.method not in METHODS:
@@ -89,11 +101,30 @@ class EngineConfig:
             raise ValueError(
                 f"method {self.method!r} has no reverse direction; "
                 "symmetric=True needs one (use method='rwmd')")
+        if self.cascade is not None:
+            if self.symmetric:
+                raise ValueError(
+                    "cascade search scores directionally; symmetric=True "
+                    "is not supported with a cascade")
+            cspec = resolve_spec(self.cascade)   # raises on unknown preset
+            if self.backend == "distributed":
+                from repro.cascade import rescore
+                if not rescore.resolve(cspec.rescorer).jittable:
+                    raise ValueError(
+                        f"cascade rescorer {cspec.rescorer!r} runs on the "
+                        "host; the distributed backend needs a jittable "
+                        "rescorer (act/ict/sinkhorn/...)")
 
     @property
     def spec(self):
         """The typed :class:`~repro.core.retrieval.MethodSpec` entry."""
         return METHODS[self.method]
+
+    @property
+    def cascade_spec(self) -> CascadeSpec | None:
+        """The resolved :class:`~repro.cascade.CascadeSpec` (preset names
+        looked up in ``repro.cascade.CASCADES``), or ``None``."""
+        return None if self.cascade is None else resolve_spec(self.cascade)
 
     @property
     def effective_iters(self) -> int:
@@ -122,4 +153,25 @@ class EngineConfig:
             self.score_kwargs(),
             symmetric=self.symmetric,
             engine=("dist" if self.batch_engine == "batched" else "scan"),
+        )
+
+    def cascade_knobs(self) -> dict:
+        """The batch knobs a cascade accepts: ``score_kwargs`` minus the
+        method selection (the cascade spec carries its own stage methods
+        and iters). Single place the cascade kwarg contract lives.
+        ``use_kernels`` is keyed off the backend alone — NOT off
+        ``config.method``'s kernel support, which the cascade never
+        runs; methods without kernels simply ignore the flag."""
+        kw = self.score_kwargs()
+        kw.pop("method")
+        kw.pop("iters")
+        kw["use_kernels"] = self.backend == "pallas"
+        return kw
+
+    def cascade_step_kwargs(self) -> dict:
+        """Static kwargs for ``launch.search.jit_cascade_search_step``."""
+        return dict(
+            self.cascade_knobs(),
+            engine=("dist" if self.batch_engine == "batched" else "scan"),
+            pad_multiple=self.pad_multiple,
         )

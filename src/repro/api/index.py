@@ -51,6 +51,7 @@ class EmdIndex:
     _mesh: Any = None
     _scores_step: Any = None
     _padded_corpus: Corpus | None = None
+    _cascade_step: Any = None
 
     def __repr__(self) -> str:
         mesh = "" if self._mesh is None else f", mesh={dict(self._mesh.shape)}"
@@ -88,13 +89,19 @@ class EmdIndex:
                                method=config.method)
         step = dsearch.jit_scores_step(workload, mesh,
                                        **config.dist_step_kwargs())
+        cascade_step = None
+        if config.cascade is not None:
+            cascade_step = dsearch.jit_cascade_search_step(
+                workload, mesh, config.cascade_spec, top_l=config.top_l,
+                **config.cascade_step_kwargs())
         in_sh, _ = dsearch.scores_shardings(mesh, workload,
                                             method=config.method)
         padded = Corpus(ids=jax.device_put(padded.ids, in_sh[0]),
                         w=jax.device_put(padded.w, in_sh[1]),
                         coords=jax.device_put(padded.coords, in_sh[2]))
         return cls(corpus=corpus, config=config, _mesh=mesh,
-                   _scores_step=step, _padded_corpus=padded)
+                   _scores_step=step, _padded_corpus=padded,
+                   _cascade_step=cascade_step)
 
     # --------------------------------------------------------- properties
     @property
@@ -112,13 +119,11 @@ class EmdIndex:
         return self._mesh
 
     # ------------------------------------------------------------ scoring
-    def scores(self, q_ids: Array, q_w: Array) -> Array:
-        """Directional bound of every database row vs the query/queries.
-
-        Accepts a single query ``(h,)`` -> ``(n,)`` or a batch
-        ``(nq, h)`` -> ``(nq, n)``, uniformly across backends. Lower =
-        more similar.
-        """
+    @staticmethod
+    def _check_queries(q_ids: Array, q_w: Array) -> tuple[Array, Array,
+                                                          bool]:
+        """Validate and normalize query input to a ``(nq, h)`` batch;
+        returns (ids, w, was_single)."""
         q_ids = jnp.asarray(q_ids)
         q_w = jnp.asarray(q_w)
         if q_ids.ndim not in (1, 2) or q_ids.shape != q_w.shape:
@@ -126,21 +131,36 @@ class EmdIndex:
                 f"expected matching (h,) or (nq, h) queries, got "
                 f"ids {q_ids.shape} / w {q_w.shape}")
         single = q_ids.ndim == 1
+        return ((q_ids[None], q_w[None], True) if single
+                else (q_ids, q_w, False))
+
+    def _run_dist_step(self, step, qi: Array, qw: Array):
+        """Run a jitted mesh step on a query batch padded to the data-axis
+        size (so any nq shards); returns the outputs with pad-query rows
+        still attached — callers slice ``[:nq]``."""
+        from repro.launch.mesh import data_axes
+        nq = qi.shape[0]
+        dp = int(np.prod([self._mesh.shape[a]
+                          for a in data_axes(self._mesh)]))
+        qi = _pad_rows(qi, -(-nq // dp) * dp)
+        qw = _pad_rows(qw, -(-nq // dp) * dp)
+        p = self._padded_corpus
+        with _mesh_context(self._mesh):
+            return step(p.ids, p.w, p.coords, qi, qw)
+
+    def scores(self, q_ids: Array, q_w: Array) -> Array:
+        """Directional bound of every database row vs the query/queries.
+
+        Accepts a single query ``(h,)`` -> ``(n,)`` or a batch
+        ``(nq, h)`` -> ``(nq, n)``, uniformly across backends. Lower =
+        more similar.
+        """
+        qi, qw, single = self._check_queries(q_ids, q_w)
         if self.config.backend == "distributed":
-            qi = q_ids[None] if single else q_ids
-            qw = q_w[None] if single else q_w
-            nq = qi.shape[0]
-            # Pad the query batch to the data-axis size so any nq shards.
-            from repro.launch.mesh import data_axes
-            dp = int(np.prod([self._mesh.shape[a]
-                              for a in data_axes(self._mesh)]))
-            qi = _pad_rows(qi, -(-nq // dp) * dp)
-            qw = _pad_rows(qw, -(-nq // dp) * dp)
-            p = self._padded_corpus
-            with _mesh_context(self._mesh):
-                s = self._scores_step(p.ids, p.w, p.coords, qi, qw)
-            s = s[:nq, :self.n]            # drop pad queries and pad rows
+            s = self._run_dist_step(self._scores_step, qi, qw)
+            s = s[:qi.shape[0], :self.n]   # drop pad queries and pad rows
             return s[0] if single else s
+        q_ids, q_w = (qi[0], qw[0]) if single else (qi, qw)
         kw = self.config.score_kwargs()
         if single:
             return retrieval.query_scores(self.corpus, q_ids, q_w,
@@ -150,15 +170,60 @@ class EmdIndex:
                                       symmetric=self.config.symmetric,
                                       engine=self.config.batch_engine, **kw)
 
-    def search(self, q_ids: Array, q_w: Array,
-               top_l: int | None = None) -> tuple[Array, Array]:
+    def search(self, q_ids: Array, q_w: Array, top_l: int | None = None, *,
+               cascade=None) -> tuple[Array, Array]:
         """(scores, indices) of the top-l most similar database rows,
         ascending; ``(top_l,)`` each for a single query, ``(nq, top_l)``
-        for a batch. ``top_l`` defaults to ``config.top_l``."""
+        for a batch. ``top_l`` defaults to ``config.top_l``.
+
+        ``cascade`` (a ``repro.cascade`` CascadeSpec or preset name,
+        defaulting to ``config.cascade``) routes the search through the
+        prune-and-rescore ladder instead of full-corpus scoring: scores
+        come from the cascade's rescorer, candidates only from rows that
+        survived every pruning stage. On ``backend="distributed"`` the
+        mesh cascade step is baked at build time from the config, so the
+        spec and ``top_l`` cannot be changed per call there.
+        """
         top_l = self.config.top_l if top_l is None else top_l
-        s = self.scores(q_ids, q_w)
-        neg, idx = jax.lax.top_k(-s, top_l)
-        return -neg, idx
+        cascade = self.config.cascade if cascade is None else cascade
+        if cascade is None:
+            s = self.scores(q_ids, q_w)
+            neg, idx = jax.lax.top_k(-s, top_l)
+            return -neg, idx
+        return self._cascade(q_ids, q_w, top_l, cascade)
+
+    def _cascade(self, q_ids: Array, q_w: Array, top_l: int,
+                 cascade) -> tuple[Array, Array]:
+        from repro import cascade as cascade_mod
+
+        if self.config.symmetric:
+            raise ValueError(
+                "cascade search scores directionally; this index is "
+                "configured symmetric=True (same rule EngineConfig "
+                "enforces for cascade-in-config)")
+        spec = cascade_mod.resolve_spec(cascade)
+        qi, qw, single = self._check_queries(q_ids, q_w)
+        if self.config.backend == "distributed":
+            if spec != self.config.cascade_spec:
+                raise ValueError(
+                    "the distributed cascade step is baked at build time; "
+                    "rebuild with EngineConfig(cascade=...) to change the "
+                    "spec")
+            if top_l != self.config.top_l:
+                raise ValueError(
+                    "the distributed cascade step is jitted for "
+                    f"top_l={self.config.top_l}; rebuild with "
+                    "EngineConfig(top_l=...) to change it")
+            nq = qi.shape[0]
+            scores, idx = self._run_dist_step(self._cascade_step, qi, qw)
+            scores, idx = scores[:nq], idx[:nq]
+        else:
+            res = cascade_mod.cascade_search(
+                self.corpus, qi, qw, spec, top_l,
+                engine=self.config.batch_engine,
+                **self.config.cascade_knobs())
+            scores, idx = res.scores, res.indices
+        return (scores[0], idx[0]) if single else (scores, idx)
 
     def all_pairs(self) -> Array:
         """n x n symmetric score matrix over the corpus (the paper's
@@ -178,12 +243,37 @@ class EmdIndex:
                                           **self.config.score_kwargs())
 
     # ---------------------------------------------------------- plumbing
-    def precision_at_l(self, labels, top_l: int | None = None) -> float:
-        """Corpus-as-queries precision@top-l (paper Section 6)."""
+    def precision_at_l(self, labels, top_l: int | None = None, *,
+                       scores: Array | None = None) -> float:
+        """Corpus-as-queries precision@top-l (paper Section 6).
+
+        ``scores``: precomputed n x n score matrix (e.g. a cached
+        ``all_pairs()`` shared across several top-l evaluations, or an
+        externally-computed exact matrix); defaults to scoring the corpus
+        with this index's configuration.
+        """
         top_l = self.config.top_l if top_l is None else top_l
-        return retrieval.precision_at_l(self.all_pairs(),
+        scores = self.all_pairs() if scores is None else jnp.asarray(scores)
+        return retrieval.precision_at_l(scores,
                                         jnp.asarray(np.asarray(labels)),
                                         top_l)
+
+    def recall_at_l(self, other_scores: Array,
+                    top_l: int | None = None, *,
+                    scores: Array | None = None) -> float:
+        """Agreement with a reference ranking: the fraction of
+        ``other_scores``' top-l neighbors (per corpus row, self excluded)
+        that this index's scoring also retrieves — e.g. cascade-vs-exact
+        or LC-bound-vs-EMD agreement, measurable straight from the API.
+
+        ``other_scores``: the reference n x n matrix (exact EMD, a full
+        ACT run, ...). ``scores``: this index's precomputed matrix;
+        defaults to ``all_pairs()``.
+        """
+        top_l = self.config.top_l if top_l is None else top_l
+        scores = self.all_pairs() if scores is None else jnp.asarray(scores)
+        return retrieval.recall_at_l(scores, jnp.asarray(other_scores),
+                                     top_l, exclude_self=True)
 
     def with_config(self, **changes) -> "EmdIndex":
         """Rebuild this index with ``dataclasses.replace``d config."""

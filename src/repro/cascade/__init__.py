@@ -1,0 +1,32 @@
+"""Cascaded prune-and-rescore search (the Theorem-2 serving pattern).
+
+The paper's bound hierarchy RWMD <= OMR <= ACT-k <= ICT <= EMD exists so
+cheap lower bounds can prune candidates before expensive measures run.
+This package makes that a first-class subsystem:
+
+* :class:`CascadeSpec` / :class:`CascadeStage` — typed ``(method,
+  budget)`` ladders with STATIC admissibility validation (every stage a
+  provable lower bound of the rescorer => exact top-l when budgets cover
+  the true neighbors' stage ranks; otherwise recall is measured).
+* :func:`cascade_search` — the driver: full-corpus stage 1 through the
+  batched registry engines, gather-compacted later stages
+  (``retrieval.cand_scores``), rescoring by any registry method or the
+  cascade-only ``sinkhorn`` / exact ``emd`` rescorers.
+* ``CASCADES`` — named presets (``EngineConfig.cascade`` accepts these).
+
+Serving callers reach this through ``repro.api.EmdIndex``
+(``EngineConfig(cascade=...)`` or ``index.search(..., cascade=...)``);
+the distributed step in ``launch/search.py`` runs the same driver with a
+shard-blocked top-budget.
+"""
+from repro.cascade.rescore import RESCORERS, Rescorer
+from repro.cascade.search import (CascadeResult, cascade_search, stage_rows,
+                                  topk_recall, topk_smallest)
+from repro.cascade.spec import (CASCADES, CascadeSpec, CascadeStage,
+                                is_lower_bound, resolve_spec)
+
+__all__ = [
+    "CASCADES", "CascadeResult", "CascadeSpec", "CascadeStage",
+    "RESCORERS", "Rescorer", "cascade_search", "is_lower_bound",
+    "resolve_spec", "stage_rows", "topk_recall", "topk_smallest",
+]

@@ -1,0 +1,130 @@
+"""Cascade rescorers: the measures that score the final survivor set.
+
+Any ``retrieval.METHODS`` entry with a candidate-compacted scorer
+(``MethodSpec.cand_fn``) can rescore — ``act`` and ``ict`` are the usual
+choices. This module adds the two measures that live OUTSIDE the method
+registry because they cannot serve full corpora:
+
+* ``sinkhorn`` — Cuturi's entropic OT cost (``core/sinkhorn``), vmapped
+  per (query, candidate) pair. Jittable. NOT treated as admissible-above
+  the Theorem-2 stages: the fixed-iteration, mass-renormalized plan is
+  not exactly feasible, so its cost can dip below true EMD — cascades
+  ending here report measured recall (see ``spec._AT_LEAST_EMD``).
+* ``emd``      — the exact transportation LP (``core/emd``), one HiGHS
+  solve per pair on the host. The ground truth; NOT jittable, so a
+  cascade ending in ``emd`` runs its pruning stages on device and
+  rescoring on the host (and is rejected by the mesh step).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lc
+from repro.core.geometry import pairwise_dist
+from repro.core.retrieval import METHODS
+from repro.core.sinkhorn import sinkhorn_cost
+
+Array = jax.Array
+
+#: Sinkhorn rescoring knobs (the paper's lambda; fewer iterations than the
+#: oracle default — rescoring runs per surviving pair, and 100 rounds is
+#: converged at histogram sizes the cascade rescores).
+SINKHORN_LAM = 20.0
+SINKHORN_ITERS = 100
+
+
+@dataclasses.dataclass(frozen=True)
+class Rescorer:
+    """One final-stage scorer. Exactly one of ``fn`` (jittable
+    candidate scorer, cascade stays one jitted program) or ``host_fn``
+    (numpy rescoring of device-pruned candidates) is set."""
+    name: str
+    fn: Callable | None = None
+    host_fn: Callable | None = None
+
+    @property
+    def jittable(self) -> bool:
+        return self.fn is not None
+
+
+def sinkhorn_cand(corpus: lc.Corpus, Q_ids: Array, Q_w: Array,
+                  cand: Array, *, block_q: int = 8, **_) -> Array:
+    """Entropic-OT cost per (query, candidate) pair: (nq, b) scores.
+
+    One stacked Phase-1-style distance matmul feeds every pair's
+    (hmax, h) cost matrix. Costs stay UNMASKED (no ``lc.PAD_DIST``):
+    Sinkhorn's log-domain scaling handles zero-mass padding bins by
+    itself (their plan mass is ~1e-35), while a 1e30 cost would blow up
+    the dual updates — ``eps * C`` must stay in float range.
+    """
+    nq, h = Q_ids.shape
+    qc = corpus.coords[Q_ids.reshape(-1)]                # (nq*h, m)
+    Dq = jnp.moveaxis(
+        pairwise_dist(corpus.coords, qc).reshape(corpus.v, nq, h), 1, 0)
+
+    def blk(Db, Wb, cb):                     # (bq, v, h), (bq, h), (bq, b)
+        C = lc.gather_per_query(Db, corpus.ids[cb])
+        x = corpus.w[cb]                     # (bq, b, hmax)
+        pair = lambda p, q, c: sinkhorn_cost(p, q, c, lam=SINKHORN_LAM,
+                                             n_iters=SINKHORN_ITERS)
+        return jax.vmap(jax.vmap(pair, in_axes=(0, None, 0)))(x, Wb, C)
+    return lc._map_query_blocks(blk, (Dq, Q_w, cand), Q_ids.shape[0],
+                                block_q)
+
+
+def emd_cand_host(corpus: lc.Corpus, Q_ids, Q_w, cand, **_) -> np.ndarray:
+    """Exact EMD per (query, candidate) pair, solved on the host:
+    (nq, b) float64 scores. Zero-weight (padding) bins are stripped per
+    pair before the LP; an all-padding row scores 0 against everything
+    (it carries no mass) — callers never rank such rows highly because
+    pad rows are excluded from candidacy upstream."""
+    from repro.core.emd import emd_exact
+    ids = np.asarray(corpus.ids)
+    w = np.asarray(corpus.w)
+    Q_ids = np.asarray(Q_ids)
+    Q_w = np.asarray(Q_w)
+    cand = np.asarray(cand)
+    nq, b = cand.shape
+    out = np.zeros((nq, b))
+    for u in range(nq):
+        vq = Q_w[u] > 0.0
+        if not vq.any():
+            continue                                    # padding query
+        qc = corpus.coords[np.asarray(Q_ids[u][vq])]
+        D = np.asarray(pairwise_dist(corpus.coords, qc))  # (v, h_valid)
+        for j in range(b):
+            r = cand[u, j]
+            vr = w[r] > 0.0
+            if not vr.any():
+                continue
+            C = D[ids[r][vr]]
+            out[u, j] = emd_exact(w[r][vr], Q_w[u][vq], C)
+    return out
+
+
+RESCORERS: dict[str, Rescorer] = {
+    "sinkhorn": Rescorer("sinkhorn", fn=sinkhorn_cand),
+    "emd": Rescorer("emd", host_fn=emd_cand_host),
+}
+
+
+def names() -> tuple[str, ...]:
+    """Every valid rescorer: registry methods with a candidate scorer
+    plus the cascade-only measures above."""
+    return tuple(sorted([m for m, s in METHODS.items()
+                         if s.cand_fn is not None] + list(RESCORERS)))
+
+
+def resolve(name: str) -> Rescorer:
+    """Rescorer for ``name``; registry methods wrap their ``cand_fn``."""
+    if name in RESCORERS:
+        return RESCORERS[name]
+    spec = METHODS.get(name)
+    if spec is not None and spec.cand_fn is not None:
+        return Rescorer(name, fn=spec.cand_fn)
+    raise ValueError(f"unknown rescorer {name!r}; one of {sorted(names())}")

@@ -1,0 +1,183 @@
+"""The cascade driver: prune with cheap bounds, rescore the survivors.
+
+One search is a ladder of ``(method, budget)`` stages (``CascadeSpec``):
+stage 1 scores the FULL corpus through the registry's batched multi-query
+engine and keeps its ``budget`` best rows per query; every later stage
+scores only the surviving candidate set through the method's
+candidate-compacted engine (``retrieval.cand_scores`` — Phase 1 unchanged,
+Phase 2/3 gather-compacted to a ``(nq, budget)`` sub-corpus); the final
+rescorer ranks the last survivors and the top-l comes from ITS scores,
+mapped back to global row ids.
+
+The whole ladder jits into one program when the rescorer is jittable
+(every registry method, ``sinkhorn``); the exact-``emd`` rescorer prunes
+on device and rescores on the host. ``topk_blocks`` selects the
+shard-blocked top-budget used by the distributed step: per-block local
+top-k (each block = one model shard's columns) followed by a ladder merge
+of the small winner tensors — the full (nq, n) score matrix is never
+gathered across the mesh. Tie-breaking caveat: the merged selection
+resolves equal scores by (block, local rank) rather than the plain
+``lax.top_k`` global-lowest-index rule, so exactly-tied boundary rows may
+swap between equally-valid candidate sets.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cascade import rescore
+from repro.cascade.spec import CascadeSpec, resolve_spec
+from repro.core import lc, retrieval
+from repro.sharding import annotate
+
+Array = jax.Array
+
+_KNOBS = ("use_kernels", "block_v", "block_h", "block_n", "rev_block",
+          "block_q")
+
+
+class CascadeResult(NamedTuple):
+    """Top-l outcome of one cascaded search (ascending rescorer scores and
+    the matching global database row ids, (nq, top_l) each)."""
+    scores: Array
+    indices: Array
+
+
+def topk_smallest(scores: Array, k: int, blocks: int = 1):
+    """(values, indices) of the k smallest entries per row, ascending.
+
+    ``blocks > 1`` runs the shard-blocked schedule (the distributed
+    step's ladder merge): per-block local top-k, then one merge over the
+    ``blocks * min(k, n/blocks)`` winners. Exact for any block count —
+    a block can hold at most min(k, n/blocks) of the true top-k — and
+    falls back to plain ``lax.top_k`` when n does not split evenly.
+    """
+    n = scores.shape[-1]
+    if blocks > 1 and n % blocks == 0:
+        per = n // blocks
+        kb = min(k, per)
+        s = annotate.emd_shard_topk(
+            scores.reshape(scores.shape[:-1] + (blocks, per)))
+        negv, li = jax.lax.top_k(-s, kb)             # shard-local top-k
+        gi = li + (jnp.arange(blocks, dtype=jnp.int32) * per)[:, None]
+        negv = annotate.emd_ladder(
+            negv.reshape(scores.shape[:-1] + (blocks * kb,)))
+        gi = annotate.emd_ladder(
+            gi.reshape(scores.shape[:-1] + (blocks * kb,)))
+        neg, pos = jax.lax.top_k(negv, k)            # ladder merge
+        return -neg, jnp.take_along_axis(gi, pos, axis=-1)
+    neg, idx = jax.lax.top_k(-scores, k)
+    return -neg, idx
+
+
+def stage_rows(spec: CascadeSpec, n: int, top_l: int) -> dict[str, int]:
+    """Rows scored per query by each stage of ``spec`` on an ``n``-row
+    corpus: stage 1 reads the full corpus, later stages and the rescorer
+    read the previous stage's survivors (the budget ladder)."""
+    budgets = spec.resolve_budgets(n, top_l)
+    rows, prev = {}, n
+    for i, s in enumerate(spec.stages):
+        rows[f"stage{i + 1}.{s.method}"] = prev
+        prev = budgets[i]
+    rows[f"rescore.{spec.rescorer}"] = prev
+    return rows
+
+
+def _prune(corpus: lc.Corpus, Q_ids: Array, Q_w: Array, spec: CascadeSpec,
+           budgets: tuple[int, ...], *, n_valid, topk_blocks, engine,
+           **knobs) -> Array:
+    """Run the pruning ladder; returns the (nq, budgets[-1]) global row
+    ids surviving every stage (traced under jit by the callers)."""
+    first = spec.stages[0]
+    s = retrieval.batch_scores(corpus, Q_ids, Q_w, method=first.method,
+                               iters=first.iters, engine=engine, **knobs)
+    _, cand = topk_smallest(lc.mask_pad_rows(s, n_valid), budgets[0],
+                            topk_blocks)
+    for stage, b in zip(spec.stages[1:], budgets[1:]):
+        sc = retrieval.cand_scores(corpus, Q_ids, Q_w, cand,
+                                   method=stage.method, iters=stage.iters,
+                                   **knobs)
+        _, pos = topk_smallest(sc, b)
+        cand = jnp.take_along_axis(cand, pos, axis=1)
+    return cand
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "top_l", "n_valid",
+                                             "topk_blocks", "engine")
+                   + _KNOBS)
+def _cascade_device(corpus: lc.Corpus, Q_ids: Array, Q_w: Array,
+                    spec: CascadeSpec, top_l: int, *, n_valid=None,
+                    topk_blocks: int = 1, engine: str = "batched",
+                    **knobs) -> CascadeResult:
+    """Whole ladder + jittable rescorer as ONE jitted program."""
+    n = n_valid if n_valid is not None else corpus.n
+    budgets = spec.resolve_budgets(n, top_l)
+    cand = _prune(corpus, Q_ids, Q_w, spec, budgets, n_valid=n_valid,
+                  topk_blocks=topk_blocks, engine=engine, **knobs)
+    fn = rescore.resolve(spec.rescorer).fn
+    rescored = fn(corpus, Q_ids, Q_w, cand, iters=spec.rescorer_iters,
+                  **knobs)
+    vals, pos = topk_smallest(rescored, top_l)
+    return CascadeResult(vals, jnp.take_along_axis(cand, pos, axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "top_l", "n_valid",
+                                             "topk_blocks", "engine")
+                   + _KNOBS)
+def _prune_jit(corpus, Q_ids, Q_w, spec, top_l, *, n_valid=None,
+               topk_blocks=1, engine="batched", **knobs) -> Array:
+    n = n_valid if n_valid is not None else corpus.n
+    budgets = spec.resolve_budgets(n, top_l)
+    return _prune(corpus, Q_ids, Q_w, spec, budgets, n_valid=n_valid,
+                  topk_blocks=topk_blocks, engine=engine, **knobs)
+
+
+def cascade_search(corpus: lc.Corpus, Q_ids: Array, Q_w: Array,
+                   spec: CascadeSpec | str, top_l: int, *,
+                   n_valid: int | None = None, topk_blocks: int = 1,
+                   engine: str = "batched", use_kernels: bool = False,
+                   block_v: int = 256, block_h: int = 256,
+                   block_n: int = 256, rev_block: int = 256,
+                   block_q: int = 8) -> CascadeResult:
+    """Cascaded top-l search of a ``(nq, h)`` query batch.
+
+    ``spec`` is a :class:`~repro.cascade.spec.CascadeSpec` or a preset
+    name from :data:`~repro.cascade.spec.CASCADES`. ``n_valid`` masks
+    zero-weight pad rows beyond it out of candidacy (the distributed
+    step's padded corpora); ``topk_blocks`` picks the shard-blocked
+    stage-1 top-budget (the mesh step passes its model-axis size). The
+    remaining knobs mirror ``retrieval.batch_scores``; ``use_kernels``
+    applies to the full-corpus stage-1 scoring (candidate stages run the
+    reference gather-compacted engines).
+    """
+    spec = resolve_spec(spec)
+    knobs = dict(engine=engine, use_kernels=use_kernels, block_v=block_v,
+                 block_h=block_h, block_n=block_n, rev_block=rev_block,
+                 block_q=block_q)
+    if rescore.resolve(spec.rescorer).jittable:
+        return _cascade_device(corpus, Q_ids, Q_w, spec, top_l,
+                               n_valid=n_valid, topk_blocks=topk_blocks,
+                               **knobs)
+    # Host rescorer (exact emd): device pruning, numpy rescoring.
+    cand = np.asarray(_prune_jit(corpus, Q_ids, Q_w, spec, top_l,
+                                 n_valid=n_valid, topk_blocks=topk_blocks,
+                                 **knobs))
+    rescored = rescore.resolve(spec.rescorer).host_fn(corpus, Q_ids, Q_w,
+                                                      cand)
+    pos = np.argsort(rescored, axis=1, kind="stable")[:, :top_l]
+    return CascadeResult(
+        jnp.asarray(np.take_along_axis(rescored, pos, axis=1),
+                    jnp.float32),
+        jnp.asarray(np.take_along_axis(cand, pos, axis=1), jnp.int32))
+
+
+def topk_recall(indices, ref_indices) -> float:
+    """Fraction of the reference top-l retrieved by ``indices``, averaged
+    over queries — the cascade-vs-full agreement number reported by
+    ``benchmarks/bench_cascade.py`` (1.0 for an admissible cascade with
+    sufficient budgets). Delegates to :func:`retrieval.topl_overlap`."""
+    return retrieval.topl_overlap(indices, ref_indices)

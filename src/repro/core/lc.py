@@ -77,6 +77,20 @@ class Corpus:
 PAD_DIST = 1e30
 
 
+def mask_pad_rows(scores: Array, n_valid: int | None) -> Array:
+    """Push score columns of pad rows (index >= ``n_valid``) to PAD_DIST.
+
+    Zero-weight pad rows score 0 for the LC methods — the best possible
+    score — so every top-k consumer (distributed search, cascade
+    top-budget) must mask them FIRST. The single home of that invariant.
+    """
+    if n_valid is None or n_valid >= scores.shape[-1]:
+        return scores
+    col = jax.lax.broadcasted_iota(jnp.int32, scores.shape, scores.ndim - 1)
+    return jnp.where(col < n_valid, scores,
+                     jnp.asarray(PAD_DIST, scores.dtype))
+
+
 _INT_MAX = jnp.int32(2**31 - 1)
 
 
@@ -659,3 +673,219 @@ def symmetric_scores(asym: Array) -> Array:
     """Corpus-vs-corpus symmetrization: asym[a, b] = cost(move b into a);
     the paper's symmetric measure is max(asym, asym.T)."""
     return jnp.maximum(asym, asym.T)
+
+
+# --------------------------------------------------------------------------
+# LC-ICT: the paper's tightest linear-complexity bound (Algorithm 2), as a
+# batch engine. ICT pours each database entry's mass through the FULL
+# cost-sorted ladder of query bins (not a truncated top-k), so Phase 2 is a
+# per-entry sort over h instead of the k-register selection — O(n h log h)
+# on top of the shared Phase-1 distance work. It exists here primarily as a
+# cascade rescorer: too expensive for full-corpus serving, ideal on a
+# pruned candidate set.
+# --------------------------------------------------------------------------
+
+
+def ict_pour(x: Array, cap: Array, C: Array) -> Array:
+    """Full-ladder greedy pour (Algorithm 2) over padded entries.
+
+    x:   (..., hmax) residual database weights.
+    cap: (..., hmax, h) per-edge capacities (query weights; 0 at padded
+         query bins).
+    C:   (..., hmax, h) transport costs (PAD_DIST at padded query bins, so
+         they sort last and their zero capacity absorbs nothing).
+    Returns (...,) transport-cost bounds.
+
+    L1-normalized histograms leave no remainder; any float residue is
+    dumped at the max FINITE cost — never at PAD_DIST, where a ~1e-7
+    cumsum residue would explode to ~1e23 (the reason this does not reuse
+    ``relaxations.ict_dir``'s last-slot dump on padded layouts).
+    """
+    order = jnp.argsort(C, axis=-1)
+    cost_sorted = jnp.take_along_axis(C, order, axis=-1)
+    cap_sorted = jnp.take_along_axis(cap, order, axis=-1)
+    prefix = jnp.cumsum(cap_sorted, axis=-1) - cap_sorted  # exclusive prefix
+    r = jnp.clip(x[..., None] - prefix, 0.0, cap_sorted)
+    poured = jnp.sum(r * cost_sorted, axis=-1)
+    remainder = jnp.maximum(x - jnp.sum(r, axis=-1), 0.0)
+    dump = jnp.max(jnp.where(C < PAD_DIST, C, 0.0), axis=-1)
+    return jnp.sum(poured + remainder * dump, axis=-1)
+
+
+def _ict_caps(Q_w: Array, shape) -> Array:
+    """Broadcast (…, h) query weights to the (…, hmax, h) per-edge
+    capacity tensor of :func:`ict_pour`."""
+    return jnp.broadcast_to(Q_w[..., None, :], shape)
+
+
+@jax.jit
+def lc_ict_scores(corpus: Corpus, q_ids: Array, q_w: Array) -> Array:
+    """LC-ICT: Algorithm 2 batched over the corpus — lower bounds on
+    EMD(x_u, q) for all n database rows, O(vhm + n hmax h log h)."""
+    qc = corpus.coords[q_ids]                            # (h, m)
+    D = pairwise_dist(corpus.coords, qc)                 # (v, h)
+    D = jnp.where(q_w[None, :] > 0.0, D, PAD_DIST)
+    C = D[corpus.ids]                                    # (n, hmax, h)
+    return ict_pour(corpus.w, _ict_caps(q_w, C.shape), C)
+
+
+def ict_reduce_blocked(corpus: Corpus, Dq: Array, Q_w: Array,
+                       block_q: int) -> Array:
+    """Query-blocked Algorithm-2 reduction on the query-major distance
+    handoff Dq (nq, v, h) -> (nq, n) LC-ICT bounds. Each block of
+    ``block_q`` queries gathers its (bq, n, hmax, h) cost tensor once and
+    pours through the full sorted ladder."""
+    def blk(Db, Wb):                                     # (bq, v, h), (bq, h)
+        C = Db[:, corpus.ids]                            # (bq, n, hmax, h)
+        cap = _ict_caps(Wb[:, None, :], C.shape)
+        return ict_pour(corpus.w, cap, C)
+    return _map_query_blocks(blk, (Dq, Q_w), Dq.shape[0], block_q)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q",))
+def lc_ict_scores_batched(corpus: Corpus, Q_ids: Array, Q_w: Array, *,
+                          block_q: int = 8) -> Array:
+    """Batched LC-ICT: one stacked Phase-1 distance tensor for the whole
+    query batch, query-blocked full-ladder pour."""
+    Dq = _rev_handoff(phase1_stacked_dist(corpus.coords, Q_ids, Q_w))
+    return ict_reduce_blocked(corpus, Dq, Q_w, block_q)
+
+
+# --------------------------------------------------------------------------
+# Candidate-compacted Phase 2/3: the cascade's gather-compaction layer.
+#
+# A prune-and-rescore cascade (``repro.cascade``) scores stage s+1 only on
+# the (nq, b) candidate rows that survived stage s. Phase 1 is UNCHANGED —
+# the vocabulary-vs-query work never depends on which database rows are
+# scored — so candidate compaction is purely a Phase-2/3 concern: the same
+# blocked consumers as above, but gathering each query's own (b, hmax)
+# sub-corpus (``corpus.ids[cand[u]]`` — Corpus row-slicing with the padded
+# layout preserved, no re-bucketing needed) instead of all n rows. Per
+# (query, row) the reduction order matches the full-corpus consumers, so
+# scores agree bitwise with the full engines at the candidate rows.
+# --------------------------------------------------------------------------
+
+
+def gather_per_query(A: Array, idx: Array) -> Array:
+    """Per-query gather: A (bq, v, ...) indexed on axis 1 by each query's
+    own idx (bq, b, hmax) -> (bq, b, hmax, ...)."""
+    return jax.vmap(lambda a, i: a[i])(A, idx)
+
+
+def pour_min_cand_blocked(corpus: Corpus, Z0: Array, cand: Array,
+                          block_q: int) -> Array:
+    """Candidate-compacted zero-round pour: Z0 (nq, v), cand (nq, b)
+    -> (nq, b) scores at the candidate rows."""
+    def blk(Zb, cb):                                     # (bq, v), (bq, b)
+        Zg = gather_per_query(Zb, corpus.ids[cb])       # (bq, b, hmax)
+        return jnp.sum(corpus.w[cb] * Zg, axis=-1)
+    return _map_query_blocks(blk, (Z0, cand), Z0.shape[0], block_q)
+
+
+def pour_cand_blocked(corpus: Corpus, Z: Array, W: Array, cand: Array,
+                      iters: int, block_q: int) -> Array:
+    """Candidate-compacted Phase 2/3 pour: (nq, v, k) handoff ladders +
+    (nq, b) candidate rows -> (nq, b) lower bounds."""
+    nq = Z.shape[0]
+    if iters == 0:
+        return pour_min_cand_blocked(corpus, Z[..., 0], cand, block_q)
+    W = W[..., :iters]
+
+    def blk(Zb, Wb, cb):
+        ids_g = corpus.ids[cb]                           # (bq, b, hmax)
+        Zg = gather_per_query(Zb, ids_g)                # (bq, b, hmax, k)
+        Wg = gather_per_query(Wb, ids_g)                # (bq, b, hmax, iters)
+        return pour(corpus.w[cb], Zg, Wg, iters)         # (bq, b)
+    return _map_query_blocks(blk, (Z, W, cand), nq, block_q)
+
+
+def omr_reduce_cand_blocked(corpus: Corpus, Z: Array, W0: Array,
+                            cand: Array, block_q: int) -> Array:
+    """Candidate-compacted Algorithm-1 reduction: Z (nq, v, 2), W0 (nq, v),
+    cand (nq, b) -> (nq, b) LC-OMR bounds."""
+    def blk(Zb, W0b, cb):
+        ids_g = corpus.ids[cb]
+        x = corpus.w[cb]                                 # (bq, b, hmax)
+        Zg = gather_per_query(Zb, ids_g)                # (bq, b, hmax, 2)
+        W0g = gather_per_query(W0b, ids_g)              # (bq, b, hmax)
+        overlap = Zg[..., 0] == 0.0
+        rest = x - jnp.minimum(x, W0g)
+        per_entry = jnp.where(overlap, rest * Zg[..., 1], x * Zg[..., 0])
+        return jnp.sum(per_entry, axis=-1)
+    return _map_query_blocks(blk, (Z, W0, cand), Z.shape[0], block_q)
+
+
+def rev_min_cand_blocked(corpus: Corpus, Dq: Array, Q_w: Array,
+                         cand: Array, block_q: int) -> Array:
+    """Candidate-compacted reverse masked (min,+) reduction: Dq (nq, v, h),
+    cand (nq, b) -> (nq, b) reverse-RWMD bounds."""
+    big = jnp.asarray(PAD_DIST, Dq.dtype)
+
+    def blk(Db, Wb, cb):                                 # (bq, v, h), (bq, h)
+        ids_g = corpus.ids[cb]                           # (bq, b, hmax)
+        valid = corpus.w[cb] > 0.0
+        Dg = gather_per_query(Db, ids_g)                # (bq, b, hmax, h)
+        Dg = jnp.where(valid[..., None], Dg, big)
+        cmin = jnp.min(Dg, axis=2)                       # (bq, b, h)
+        return jnp.einsum("qbh,qh->qb", cmin, Wb)
+    return _map_query_blocks(blk, (Dq, Q_w, cand), Dq.shape[0], block_q)
+
+
+def ict_reduce_cand_blocked(corpus: Corpus, Dq: Array, Q_w: Array,
+                            cand: Array, block_q: int) -> Array:
+    """Candidate-compacted Algorithm-2 reduction: Dq (nq, v, h),
+    cand (nq, b) -> (nq, b) LC-ICT bounds."""
+    def blk(Db, Wb, cb):
+        ids_g = corpus.ids[cb]
+        C = gather_per_query(Db, ids_g)                 # (bq, b, hmax, h)
+        cap = _ict_caps(Wb[:, None, :], C.shape)
+        return ict_pour(corpus.w[cb], cap, C)
+    return _map_query_blocks(blk, (Dq, Q_w, cand), Dq.shape[0], block_q)
+
+
+# ------------------------------------------- candidate-compacted engines
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "block_q"))
+def lc_act_scores_cand(corpus: Corpus, Q_ids: Array, Q_w: Array,
+                       cand: Array, iters: int = 1, *,
+                       block_q: int = 8) -> Array:
+    """Candidate-compacted batched LC-ACT: (nq, h) queries scored against
+    each query's own (b,) candidate rows -> (nq, b)."""
+    if iters == 0:
+        Z0 = phase1_min_batched(corpus.coords, Q_ids, Q_w)
+        return pour_min_cand_blocked(corpus, Z0, cand, block_q)
+    Z, W = phase1_batched(corpus.coords, Q_ids, Q_w, iters + 1)
+    return pour_cand_blocked(corpus, Z, W, cand, iters, block_q)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q",))
+def lc_rwmd_scores_cand(corpus: Corpus, Q_ids: Array, Q_w: Array,
+                        cand: Array, *, block_q: int = 8) -> Array:
+    """Candidate-compacted batched LC-RWMD db -> query."""
+    return lc_act_scores_cand(corpus, Q_ids, Q_w, cand, iters=0,
+                              block_q=block_q)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q",))
+def lc_rwmd_scores_rev_cand(corpus: Corpus, Q_ids: Array, Q_w: Array,
+                            cand: Array, *, block_q: int = 8) -> Array:
+    """Candidate-compacted batched LC-RWMD query -> db."""
+    Dq = _rev_handoff(phase1_stacked_dist(corpus.coords, Q_ids, Q_w))
+    return rev_min_cand_blocked(corpus, Dq, Q_w, cand, block_q)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q",))
+def lc_omr_scores_cand(corpus: Corpus, Q_ids: Array, Q_w: Array,
+                       cand: Array, *, block_q: int = 8) -> Array:
+    """Candidate-compacted batched LC-OMR."""
+    Z, W = phase1_batched(corpus.coords, Q_ids, Q_w, 2)
+    return omr_reduce_cand_blocked(corpus, Z, W[..., 0], cand, block_q)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q",))
+def lc_ict_scores_cand(corpus: Corpus, Q_ids: Array, Q_w: Array,
+                       cand: Array, *, block_q: int = 8) -> Array:
+    """Candidate-compacted batched LC-ICT (the cascade's tight rescorer)."""
+    Dq = _rev_handoff(phase1_stacked_dist(corpus.coords, Q_ids, Q_w))
+    return ict_reduce_cand_blocked(corpus, Dq, Q_w, cand, block_q)

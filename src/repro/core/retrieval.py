@@ -81,6 +81,12 @@ class MethodSpec:
                  the distributed step emits; ``"data"`` resolves to the
                  mesh's DP axes. Default: queries on their data shards,
                  database columns on the model shards that scored them.
+    cand_fn:     candidate-compacted multi-query scorer for the cascade
+                 subsystem (``repro.cascade``): same uniform signature
+                 plus a ``cand`` (nq, b) array of per-query candidate row
+                 ids, returning (nq, b) scores at those rows only (Phase 1
+                 unchanged, Phase 2/3 gather-compacted). ``None`` means
+                 the method cannot serve as a cascade stage or rescorer.
     """
     name: str
     paper_name: str
@@ -93,6 +99,7 @@ class MethodSpec:
     dist_fn: ScoreFn | None = None
     symmetric_batch_fn: ScoreFn | None = None
     dist_out: tuple = ("data", "model")
+    cand_fn: Callable | None = None
 
 
 METHODS: dict[str, MethodSpec] = {}
@@ -123,6 +130,14 @@ def _register_dist(name: str) -> Callable[[ScoreFn], ScoreFn]:
     """Attach a mesh-specialized scorer (``engine="dist"`` override)."""
     def deco(fn: ScoreFn) -> ScoreFn:
         METHODS[name] = dataclasses.replace(METHODS[name], dist_fn=fn)
+        return fn
+    return deco
+
+
+def _register_cand(name: str) -> Callable[[Callable], Callable]:
+    """Attach a candidate-compacted scorer (cascade stages/rescoring)."""
+    def deco(fn: Callable) -> Callable:
+        METHODS[name] = dataclasses.replace(METHODS[name], cand_fn=fn)
         return fn
     return deco
 
@@ -172,6 +187,17 @@ def _rwmd_rev_dist(corpus, q_ids, q_w, *, rev_block=256, block_q=8, **_):
                                       block_q=block_q)
 
 
+@_register_cand("rwmd")
+def _rwmd_cand(corpus, q_ids, q_w, cand, *, block_q=8, **_):
+    return lc.lc_rwmd_scores_cand(corpus, q_ids, q_w, cand, block_q=block_q)
+
+
+@_register_cand("rwmd_rev")
+def _rwmd_rev_cand(corpus, q_ids, q_w, cand, *, block_q=8, **_):
+    return lc.lc_rwmd_scores_rev_cand(corpus, q_ids, q_w, cand,
+                                      block_q=block_q)
+
+
 @_register_symmetric_batch("rwmd", "rwmd_rev")
 def _rwmd_symmetric_batch(corpus, q_ids, q_w, *, rev_block=256, block_q=8,
                           dist=False, **_):
@@ -198,6 +224,11 @@ def _omr_batch(corpus, q_ids, q_w, *, use_kernels=False, block_v=256,
                                     block_v=block_v, block_h=block_h)
 
 
+@_register_cand("omr")
+def _omr_cand(corpus, q_ids, q_w, cand, *, block_q=8, **_):
+    return lc.lc_omr_scores_cand(corpus, q_ids, q_w, cand, block_q=block_q)
+
+
 @_register("act", paper_name="LC-ACT-k", uses_iters=True,
            supports_kernels=True)
 def _act(corpus, q_ids, q_w, *, iters=1, use_kernels=False, block_v=256,
@@ -214,6 +245,31 @@ def _act_batch(corpus, q_ids, q_w, *, iters=1, use_kernels=False,
                                     use_kernels=use_kernels, block_q=block_q,
                                     block_v=block_v, block_h=block_h,
                                     block_n=block_n)
+
+
+@_register_cand("act")
+def _act_cand(corpus, q_ids, q_w, cand, *, iters=1, block_q=8, **_):
+    return lc.lc_act_scores_cand(corpus, q_ids, q_w, cand, iters=iters,
+                                 block_q=block_q)
+
+
+@_register("ict", paper_name="LC-ICT (db -> query)")
+def _ict(corpus, q_ids, q_w, **_):
+    """The paper's tightest linear-complexity bound (Algorithm 2, full
+    cost-sorted ladder): Theorem 2 places it between ACT-k and exact EMD.
+    Too heavy for full-corpus serving (per-entry sort over h); its role
+    is the cascade rescorer on pruned candidate sets."""
+    return lc.lc_ict_scores(corpus, q_ids, q_w)
+
+
+@_register_batch("ict")
+def _ict_batch(corpus, q_ids, q_w, *, block_q=8, **_):
+    return lc.lc_ict_scores_batched(corpus, q_ids, q_w, block_q=block_q)
+
+
+@_register_cand("ict")
+def _ict_cand(corpus, q_ids, q_w, cand, *, block_q=8, **_):
+    return lc.lc_ict_scores_cand(corpus, q_ids, q_w, cand, block_q=block_q)
 
 
 @_register("bow", paper_name="BoW cosine baseline", symmetric=True)
@@ -239,20 +295,47 @@ def _bow_batch(corpus, q_ids, q_w, **_):
     return 1.0 - dots
 
 
+@_register_cand("bow")
+def _bow_cand(corpus, q_ids, q_w, cand, **_):
+    nq = q_ids.shape[0]
+    qv = jnp.zeros((nq, corpus.v), corpus.w.dtype)
+    qv = qv.at[jnp.arange(nq)[:, None], q_ids].add(q_w)
+    qv = qv / jnp.maximum(jnp.linalg.norm(qv, axis=1, keepdims=True), 1e-12)
+    w_c = corpus.w[cand]                                  # (nq, b, hmax)
+    wn = w_c / jnp.maximum(
+        jnp.linalg.norm(w_c, axis=-1, keepdims=True), 1e-12)
+    qg = lc.gather_per_query(qv, corpus.ids[cand])
+    return 1.0 - jnp.einsum("qbs,qbs->qb", wn, qg)
+
+
+def _corpus_centroids(corpus) -> Array:
+    """(n, m) weight-centroid of every corpus row."""
+    return jax.vmap(lambda i, w: w @ corpus.coords[i])(corpus.ids, corpus.w)
+
+
 @_register("wcd", paper_name="Word Centroid Distance baseline",
            symmetric=True)
 def _wcd(corpus, q_ids, q_w, **_):
     """Word Centroid Distance baseline (O(nm))."""
     qc = q_w @ corpus.coords[q_ids]                       # (m,)
-    cent = jax.vmap(lambda i, w: w @ corpus.coords[i])(corpus.ids, corpus.w)
-    return jnp.linalg.norm(cent - qc[None, :], axis=1)
+    return jnp.linalg.norm(_corpus_centroids(corpus) - qc[None, :], axis=1)
 
 
 @_register_batch("wcd")
 def _wcd_batch(corpus, q_ids, q_w, **_):
     qc = jnp.einsum("qh,qhm->qm", q_w, corpus.coords[q_ids])
-    cent = jax.vmap(lambda i, w: w @ corpus.coords[i])(corpus.ids, corpus.w)
+    cent = _corpus_centroids(corpus)
     return jnp.linalg.norm(cent[None, :] - qc[:, None], axis=-1)
+
+
+@_register_cand("wcd")
+def _wcd_cand(corpus, q_ids, q_w, cand, **_):
+    # Centroids only for the (nq, b) candidate rows — materializing all
+    # n through the gather would waste O(n/b) of the work.
+    qc = jnp.einsum("qh,qhm->qm", q_w, corpus.coords[q_ids])
+    cent = jnp.einsum("qbh,qbhm->qbm", corpus.w[cand],
+                      corpus.coords[corpus.ids[cand]])
+    return jnp.linalg.norm(cent - qc[:, None, :], axis=-1)
 
 
 _STATIC_KW = ("method", "iters", "use_kernels", "block_v", "block_h",
@@ -396,12 +479,73 @@ def all_pairs_scores(corpus: lc.Corpus, method: str = "act",
     return lc.symmetric_scores(asym)
 
 
+@functools.partial(jax.jit, static_argnames=("method",) + _STATIC_KW[1:])
+def cand_scores(corpus: lc.Corpus, q_ids: Array, q_w: Array, cand: Array, *,
+                method: str = "act", iters: int = 1,
+                use_kernels: bool = False, block_v: int = 256,
+                block_h: int = 256, block_n: int = 256,
+                rev_block: int = 256, block_q: int = 8) -> Array:
+    """Candidate-compacted scoring: ``(nq, h)`` queries against each
+    query's own ``(b,)`` candidate rows -> ``(nq, b)`` scores.
+
+    This is the cascade subsystem's stage primitive (Phase 1 is shared
+    with the full-corpus engines; only Phase 2/3 compacts to the
+    candidates), dispatched through ``MethodSpec.cand_fn``.
+    """
+    spec = METHODS[method]
+    if spec.cand_fn is None:
+        raise ValueError(f"method {method!r} has no candidate-compacted "
+                         "scorer registered (MethodSpec.cand_fn)")
+    return spec.cand_fn(corpus, q_ids, q_w, cand, iters=iters,
+                        use_kernels=use_kernels, block_v=block_v,
+                        block_h=block_h, block_n=block_n,
+                        rev_block=rev_block, block_q=block_q)
+
+
+def _mask_self(scores: Array) -> Array:
+    """Push the diagonal of a square corpus-as-queries score matrix to the
+    dtype max so a row never retrieves itself."""
+    n = scores.shape[0]
+    big = jnp.asarray(jnp.finfo(scores.dtype).max, scores.dtype)
+    return jnp.where(jnp.eye(n, dtype=bool), big, scores)
+
+
 def precision_at_l(scores: Array, labels: Array, top_l: int) -> float:
     """Average precision@top-l: fraction of each row's top-l neighbors
     (self excluded) sharing the row's label."""
-    n = scores.shape[0]
-    big = jnp.asarray(jnp.finfo(scores.dtype).max, scores.dtype)
-    s = jnp.where(jnp.eye(n, dtype=bool), big, scores)     # exclude self
-    _, idx = jax.lax.top_k(-s, top_l)                      # (n, top_l)
+    _, idx = jax.lax.top_k(-_mask_self(scores), top_l)     # (n, top_l)
     same = labels[idx] == labels[:, None]
     return float(jnp.mean(jnp.mean(same.astype(jnp.float32), axis=1)))
+
+
+def topl_overlap(got_idx, ref_idx) -> float:
+    """Mean fraction of each row's reference index set retrieved by the
+    row's ``got_idx`` set — the single home of the top-l agreement
+    metric (``recall_at_l`` and ``cascade.topk_recall`` both delegate
+    here)."""
+    got = jnp.asarray(got_idx)
+    ref = jnp.asarray(ref_idx)
+    if got.shape != ref.shape:
+        raise ValueError(f"index sets must share a shape, got "
+                         f"{got.shape} vs {ref.shape}")
+    hit = (got[..., :, None] == ref[..., None, :]).any(axis=-1)
+    return float(jnp.mean(hit.astype(jnp.float32)))
+
+
+def recall_at_l(scores: Array, ref_scores: Array, top_l: int, *,
+                exclude_self: bool = False) -> float:
+    """Average recall@top-l of ``scores`` against a reference ranking:
+    the fraction of each row's reference top-l (by ``ref_scores``, e.g.
+    exact EMD or full-corpus ACT) that the row's top-l under ``scores``
+    retrieves. Shapes must match — (nq, n) query batches or (n, n)
+    corpus-as-queries matrices (``exclude_self=True`` masks the diagonal
+    of both, the all-pairs convention of :func:`precision_at_l`)."""
+    if scores.shape != ref_scores.shape:
+        raise ValueError(f"score matrices must share a shape, got "
+                         f"{scores.shape} vs {ref_scores.shape}")
+    if exclude_self:
+        scores = _mask_self(scores)
+        ref_scores = _mask_self(ref_scores)
+    _, got = jax.lax.top_k(-scores, top_l)
+    _, ref = jax.lax.top_k(-ref_scores, top_l)
+    return topl_overlap(got, ref)

@@ -104,10 +104,7 @@ def make_search_step(iters: int = 1, top_l: int = 16,
 
     def search_step(corpus_ids, corpus_w, coords, q_ids, q_w):
         scores = scores_step(corpus_ids, corpus_w, coords, q_ids, q_w)
-        if n_valid is not None and n_valid < corpus_ids.shape[0]:
-            col = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
-            scores = jnp.where(col < n_valid, scores,
-                               jnp.asarray(lc.PAD_DIST, scores.dtype))
+        scores = lc.mask_pad_rows(scores, n_valid)
         neg, idx = jax.lax.top_k(-scores, top_l)
         return -neg, idx
 
@@ -182,4 +179,75 @@ def jit_scores_step(workload, mesh, iters: int | None = None, *,
     method = workload_method(workload) if method is None else method
     step = make_scores_step(iters, method=method, **score_kw)
     in_sh, out_sh = scores_shardings(mesh, workload, method=method)
+    return jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+
+
+# ---------------------------------------------------------------------------
+# Cascaded prune-and-rescore step (``repro.cascade`` on the mesh).
+#
+# Stage 1 scores the full sharded corpus through the same registry-derived
+# pipeline as ``make_scores_step``; its top-budget selection is SHARD-LOCAL
+# (``topk_blocks`` = the model-axis size: the (nq, n) score matrix reshapes
+# into per-shard column blocks, each block's lax.top_k runs on its own
+# shard, and only the (nq, blocks * budget') winner ladder is merged across
+# the mesh — the full score matrix is never all-gathered). Later stages
+# score the small merged candidate set (replicated over "model" on the
+# emd_ladder layout), so they stay cheap wherever they land.
+# ---------------------------------------------------------------------------
+
+
+def make_cascade_search_step(spec, top_l: int = 16,
+                             n_valid: int | None = None, *,
+                             topk_blocks: int = 1, engine: str = "dist",
+                             use_kernels: bool = False, block_q: int = 8,
+                             block_v: int = 256, block_h: int = 256,
+                             block_n: int = 256, rev_block: int = 256):
+    """Returns cascade_step(corpus_ids, corpus_w, coords, q_ids, q_w)
+    -> (top-l rescorer scores, top-l global row indices), each (nq, top_l).
+
+    ``spec`` is a ``repro.cascade`` CascadeSpec (or preset name) whose
+    rescorer must be jittable — the host-side exact ``emd`` rescorer
+    cannot run inside a mesh step. ``n_valid`` masks zero-weight pad rows
+    out of candidacy before the stage-1 top-budget.
+    """
+    from repro import cascade as Cx
+
+    rspec = Cx.resolve_spec(spec)
+    from repro.cascade import rescore
+    if not rescore.resolve(rspec.rescorer).jittable:
+        raise ValueError(
+            f"rescorer {rspec.rescorer!r} runs on the host and cannot be "
+            "traced into the mesh step; use a jittable rescorer "
+            "(act/ict/sinkhorn/...) or run the cascade through "
+            "repro.cascade.cascade_search on a single host")
+
+    def cascade_step(corpus_ids, corpus_w, coords, q_ids, q_w):
+        corpus = lc.Corpus(ids=corpus_ids, w=corpus_w, coords=coords)
+        return tuple(Cx.cascade_search(
+            corpus, q_ids, q_w, rspec, top_l, n_valid=n_valid,
+            topk_blocks=topk_blocks, engine=engine, use_kernels=use_kernels,
+            block_v=block_v, block_h=block_h, block_n=block_n,
+            rev_block=rev_block, block_q=block_q))
+
+    return cascade_step
+
+
+def jit_cascade_search_step(workload, mesh, spec, top_l: int = 16,
+                            n_valid: int | None = None, **score_kw):
+    """Jitted cascade step on ``mesh``: shard-local stage-wise top-budget
+    (``topk_blocks`` = the mesh's model-axis size when the padded row
+    count splits evenly over it), ladder-merged candidates, (nq, top_l)
+    outputs on the DP shards. ``n_valid`` defaults to the workload's real
+    row count so pad rows never enter candidacy."""
+    from repro.launch.mesh import model_axis_size
+
+    n_valid = workload.n_db if n_valid is None else n_valid
+    pad_multiple = score_kw.pop("pad_multiple", DEFAULT_ROW_PAD_MULTIPLE)
+    n_padded = -(-workload.n_db // pad_multiple) * pad_multiple
+    blocks = model_axis_size(mesh)
+    if n_padded % max(blocks, 1):
+        blocks = 1                       # uneven split: plain global top-k
+    step = make_cascade_search_step(spec, top_l, n_valid,
+                                    topk_blocks=blocks, **score_kw)
+    in_sh, out_sh = search_shardings(mesh, workload)
     return jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)

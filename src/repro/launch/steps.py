@@ -146,6 +146,20 @@ def jit_emd_search_step(workload, mesh, **kw):
     return Sx.jit_search_step(workload, mesh, **kw)
 
 
+def make_emd_cascade_step(workload, spec, top_l: int = 16, **score_kw):
+    """Unjitted cascaded prune-and-rescore step for ``workload`` (see
+    ``launch/search.make_cascade_search_step``; ``spec`` is a
+    ``repro.cascade`` CascadeSpec or preset name)."""
+    from repro.launch import search as Sx
+    return Sx.make_cascade_search_step(spec, top_l, workload.n_db,
+                                       **score_kw)
+
+
+def jit_emd_cascade_step(workload, mesh, spec, **kw):
+    from repro.launch import search as Sx
+    return Sx.jit_cascade_search_step(workload, mesh, spec, **kw)
+
+
 # ----------------------------------------------------------------------------
 # jit wrapping with shardings for a given mesh
 # ----------------------------------------------------------------------------

@@ -137,6 +137,20 @@ def emd_stacked_dist(D):
     return constrain(D, "model", _dp_axes(mesh), None)
 
 
+def emd_shard_topk(x):
+    """(nq, blocks, n/blocks) shard-blocked score view for the cascade's
+    stage-wise top-budget: queries over DP, the block axis over "model"
+    (each block IS one model shard's column slice, so the per-block
+    ``lax.top_k`` that follows is shard-local), block contents replicated.
+    The small (nq, blocks, b) winner tensors are then pinned to the
+    :func:`emd_ladder` layout — the ladder merge all-gathers b rows per
+    shard instead of the full (nq, n) score matrix."""
+    mesh = _mesh()
+    if mesh is None:
+        return x
+    return constrain(x, _dp_axes(mesh), "model", None)
+
+
 def emd_ladder(x):
     """Phase-1 -> Phase-2 handoff arrays, query-major — the (nq, v, k)
     cost/capacity ladders, the (nq, v) masked-min row, or the (nq, v, h)

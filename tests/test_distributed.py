@@ -259,6 +259,84 @@ print("SCAN STEP OK")
 
 
 @pytest.mark.slow
+def test_distributed_cascade_exact_and_matches_reference():
+    """Cascaded prune-and-rescore on the 8-device (4, 2) mesh: the
+    shard-blocked stage-wise top-budget (topk_blocks = model axis size,
+    ladder-merged winners) produces (a) the identical top-l as the
+    single-host cascade for the same spec, and (b) the admissible-cascade
+    exactness property — budgets covering every true top-l neighbor's
+    stage rank => identical top-l index set as full-corpus rescoring —
+    for both the act and ict rescorers. Pad rows (24 -> 32) in play."""
+    out = _run("""
+import dataclasses, jax, numpy as np
+import jax.numpy as jnp
+from repro import cascade
+from repro.api import EmdIndex, EngineConfig
+from repro.cascade import CascadeSpec, CascadeStage, rescore
+from repro.core import retrieval
+from repro.data.synth import make_text_like
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+corpus, _ = make_text_like(n_docs=24, n_classes=4, vocab=64, m=8,
+                           doc_len=10, hmax=16, seed=5)
+nq, top_l = 5, 3
+q_ids, q_w = corpus.ids[:nq], corpus.w[:nq]
+
+for rescorer, stages in (("act", (("rwmd", 0), ("omr", 0))),
+                         ("ict", (("rwmd", 0), ("act", 1)))):
+    iters = 2 if rescorer == "act" else 1
+    all_rows = jnp.broadcast_to(jnp.arange(corpus.n, dtype=jnp.int32),
+                                (nq, corpus.n))
+    full = np.asarray(rescore.resolve(rescorer).fn(
+        corpus, q_ids, q_w, all_rows, iters=iters))
+    ref_idx = np.argsort(full, axis=1, kind="stable")[:, :top_l]
+    budgets = []
+    for m, it in stages:
+        s = np.asarray(retrieval.batch_scores(corpus, q_ids, q_w,
+                                              method=m, iters=it))
+        order = np.argsort(s, axis=1, kind="stable")
+        rank = np.empty_like(order)
+        np.put_along_axis(rank, order,
+                          np.arange(s.shape[1])[None, :], axis=1)
+        budgets.append(max(top_l,
+                           int(np.take_along_axis(rank, ref_idx,
+                                                  axis=1).max()) + 1))
+    for i in range(len(budgets) - 2, -1, -1):
+        budgets[i] = max(budgets[i], budgets[i + 1])
+    spec = CascadeSpec(stages=tuple(
+        CascadeStage(m, b, iters=it)
+        for (m, it), b in zip(stages, budgets)),
+        rescorer=rescorer, rescorer_iters=iters)
+    assert spec.admissible
+
+    cfg = EngineConfig(method="act", iters=iters, top_l=top_l,
+                       cascade=spec, backend="distributed",
+                       pad_multiple=16, block_q=3)
+    dst = EmdIndex.build(corpus, cfg, mesh=mesh)
+    assert dst._padded_corpus.n == 32 > corpus.n
+    s_d, i_d = dst.search(q_ids, q_w)
+    # (a) parity with the single-host cascade
+    ref = EmdIndex.build(corpus,
+                         dataclasses.replace(cfg, backend="reference"))
+    s_r, i_r = ref.search(q_ids, q_w)
+    np.testing.assert_array_equal(np.sort(np.asarray(i_d), 1),
+                                  np.sort(np.asarray(i_r), 1))
+    np.testing.assert_allclose(np.sort(np.asarray(s_d), 1),
+                               np.sort(np.asarray(s_r), 1),
+                               rtol=1e-5, atol=1e-6)
+    # (b) admissible-cascade exactness vs full-corpus rescoring
+    np.testing.assert_array_equal(np.sort(np.asarray(i_d), 1),
+                                  np.sort(ref_idx, 1))
+    assert int(np.asarray(i_d).max()) < corpus.n      # pads masked
+    print("CASCADE MESH OK", rescorer, budgets)
+print("ALL CASCADE OK")
+""")
+    assert "ALL CASCADE OK" in out
+    assert "CASCADE MESH OK act" in out
+    assert "CASCADE MESH OK ict" in out
+
+
+@pytest.mark.slow
 def test_emd_index_distributed_backend_multi_device():
     """EmdIndex(backend='distributed') on an 8-device (4, 2) mesh matches
     the reference backend — identical code path as single-host callers."""

@@ -50,7 +50,7 @@ def test_wmd_search_exact_ranking_consistency():
 
 def test_retrieval_registry_complete():
     assert set(retrieval.METHODS) == {"rwmd", "rwmd_rev", "omr", "act",
-                                      "bow", "wcd"}
+                                      "ict", "bow", "wcd"}
     for name, spec in retrieval.METHODS.items():
         assert isinstance(spec, retrieval.MethodSpec)
         assert spec.name == name and spec.paper_name
