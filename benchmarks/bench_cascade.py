@@ -2,13 +2,21 @@
 
 The acceptance workload of the cascade subsystem: the ``wcd -> rwmd ->
 act`` ladder at rescore budgets {1%, 5%, 20%} of n against full-corpus
-LC-ACT scoring of the same query batch. For each budget it reports
+LC-ACT scoring of the same query batch — each budget measured on the
+reference engines AND on the ``use_kernels`` path (``backend="pallas"``:
+fused candidate kernels for the pruned stages + rescorer). For each
+entry it reports
 
 * recall@l of the cascade's top-l vs the full ACT top-l,
 * end-to-end queries/sec (PAIRED interleaved timing vs full scoring, as
   in ``bench_batch``), and
 * the rows-scored ladder — the cascade's pruned stages together read
   strictly fewer candidate rows than the n the full scorer reads.
+
+NOTE on the kernel entries off-TPU: without a TPU the kernels run in
+interpret mode, where the in-kernel one-hot gather is emulated as dense
+matmuls on the CPU — their queries/sec is a conformance smoke number,
+not a perf claim (the MXU gather win is a TPU measurement; see ROADMAP).
 
 Results append to the CSV stream and land in ``BENCH_cascade.json``
 (repo root, override with BENCH_CASCADE_JSON) with a distributed-step
@@ -94,30 +102,34 @@ def run() -> None:
 
     for pct in BUDGETS:
         spec = _spec(pct)
-        casc = EmdIndex.build(corpus, EngineConfig(
-            method="act", iters=ACT_ITERS, top_l=top_l, cascade=spec))
-        _, idx = casc.search(q_ids, q_w)
-        recall = cascade.topk_recall(idx, full_idx)
-        us_full, us_casc, speedup = _paired(
-            lambda: full.search(q_ids, q_w),
-            lambda: casc.search(q_ids, q_w), reps)
-        rows = cascade.stage_rows(spec, n, top_l)
-        cand_rows = sum(v for k, v in rows.items()
-                        if not k.startswith("stage1"))
-        qps_casc = nq / (us_casc / 1e6)
-        qps_full = nq / (us_full / 1e6)
-        emit(f"bench_cascade.act.b{int(100 * pct)}pct", us_casc,
-             f"recall@{top_l}={recall:.3f} qps={qps_casc:.1f} "
-             f"full_qps={qps_full:.1f} speedup={speedup:.2f}x")
-        report["entries"].append(dict(
-            budget_pct=pct, spec=spec.describe(),
-            admissible=spec.admissible,
-            recall_at_l=round(recall, 4), top_l=top_l,
-            queries_per_sec=round(qps_casc, 1),
-            full_queries_per_sec=round(qps_full, 1),
-            speedup_over_full=round(speedup, 2),
-            rows_scored=rows, candidate_rows_per_query=cand_rows,
-            scores_fewer_candidate_rows=bool(cand_rows < n)))
+        for use_kernels in (False, True):
+            backend = "pallas" if use_kernels else "reference"
+            casc = EmdIndex.build(corpus, EngineConfig(
+                method="act", iters=ACT_ITERS, top_l=top_l, cascade=spec,
+                backend=backend))
+            _, idx = casc.search(q_ids, q_w)
+            recall = cascade.topk_recall(idx, full_idx)
+            us_full, us_casc, speedup = _paired(
+                lambda: full.search(q_ids, q_w),
+                lambda: casc.search(q_ids, q_w), reps)
+            rows = cascade.stage_rows(spec, n, top_l)
+            cand_rows = sum(v for k, v in rows.items()
+                            if not k.startswith("stage1"))
+            qps_casc = nq / (us_casc / 1e6)
+            qps_full = nq / (us_full / 1e6)
+            tag = ".kernels" if use_kernels else ""
+            emit(f"bench_cascade.act.b{int(100 * pct)}pct{tag}", us_casc,
+                 f"recall@{top_l}={recall:.3f} qps={qps_casc:.1f} "
+                 f"full_qps={qps_full:.1f} speedup={speedup:.2f}x")
+            report["entries"].append(dict(
+                budget_pct=pct, spec=spec.describe(),
+                admissible=spec.admissible, use_kernels=use_kernels,
+                recall_at_l=round(recall, 4), top_l=top_l,
+                queries_per_sec=round(qps_casc, 1),
+                full_queries_per_sec=round(qps_full, 1),
+                speedup_over_full=round(speedup, 2),
+                rows_scored=rows, candidate_rows_per_query=cand_rows,
+                scores_fewer_candidate_rows=bool(cand_rows < n)))
 
     # Distributed cascade step (single-device mesh: step-latency drift +
     # recall through the shard-blocked top-budget path the host-mesh CI

@@ -161,7 +161,11 @@ class EngineConfig:
         and iters). Single place the cascade kwarg contract lives.
         ``use_kernels`` is keyed off the backend alone — NOT off
         ``config.method``'s kernel support, which the cascade never
-        runs; methods without kernels simply ignore the flag."""
+        runs; methods without kernels simply ignore the flag. On
+        ``backend="pallas"`` it reaches every layer of the ladder: the
+        Phase-1/2 kernels for stage-1 scoring and the fused candidate
+        kernels (``kernels/cand_pour``) for the compacted stages and
+        jittable rescorers."""
         kw = self.score_kwargs()
         kw.pop("method")
         kw.pop("iters")

@@ -151,8 +151,12 @@ def cascade_search(corpus: lc.Corpus, Q_ids: Array, Q_w: Array,
     step's padded corpora); ``topk_blocks`` picks the shard-blocked
     stage-1 top-budget (the mesh step passes its model-axis size). The
     remaining knobs mirror ``retrieval.batch_scores``; ``use_kernels``
-    applies to the full-corpus stage-1 scoring (candidate stages run the
-    reference gather-compacted engines).
+    routes the full-corpus stage-1 scoring through the Phase-1/2 kernels
+    AND every candidate stage + jittable registry rescorer through the
+    fused candidate kernels (``kernels/cand_pour`` — per-query gather and
+    reduction in one launch, matching the reference candidate engines to
+    within a few ulps, so an admissible cascade's exact-top-l guarantee is
+    unchanged; ``block_n``/``block_v`` tile them).
     """
     spec = resolve_spec(spec)
     knobs = dict(engine=engine, use_kernels=use_kernels, block_v=block_v,

@@ -762,7 +762,22 @@ def lc_ict_scores_batched(corpus: Corpus, Q_ids: Array, Q_w: Array, *,
 # sub-corpus (``corpus.ids[cand[u]]`` — Corpus row-slicing with the padded
 # layout preserved, no re-bucketing needed) instead of all n rows. Per
 # (query, row) the reduction order matches the full-corpus consumers, so
-# scores agree bitwise with the full engines at the candidate rows.
+# scores agree with the full engines at the candidate rows — bitwise for
+# the ladder consumers; ``rev_min_cand_blocked`` is within an ulp of
+# ``rev_min_blocked`` (its reduction is mul+sum where the full engine
+# contracts with einsum — see the comment there for why).
+#
+# ``use_kernels`` routes each consumer through the fused candidate Pallas
+# kernels (``kernels/cand_pour``): the per-query ladder gather and the
+# reduction run in ONE launch on a query-batch x candidate-block grid, so
+# the (nq, b, hmax, k) gather tensor never hits HBM (only the small
+# (nq, b, hmax) sub-corpus ids/weights do). Phase 1 stays the shared jnp
+# pipeline on BOTH paths and the kernels reuse the reference reductions
+# (``pour``/``ict_pour``/the expressions below) on identically shaped
+# tiles, so kernel and reference candidate scores agree to within a
+# few ulps (the gather itself is bitwise-exact) — the conformance contract
+# ``tests/test_cand_kernels.py`` pins, with the residual ulp explained
+# in ``kernels/cand_pour``'s module docstring.
 # --------------------------------------------------------------------------
 
 
@@ -773,9 +788,21 @@ def gather_per_query(A: Array, idx: Array) -> Array:
 
 
 def pour_min_cand_blocked(corpus: Corpus, Z0: Array, cand: Array,
-                          block_q: int) -> Array:
+                          block_q: int, *, use_kernels: bool = False,
+                          block_n: int = 128, block_v: int = 256) -> Array:
     """Candidate-compacted zero-round pour: Z0 (nq, v), cand (nq, b)
-    -> (nq, b) scores at the candidate rows."""
+    -> (nq, b) scores at the candidate rows. ``use_kernels`` fuses the
+    gather + dump into one ``kernels/cand_pour`` launch (block_n
+    candidate rows x block_v vocabulary rows per tile)."""
+    if use_kernels:
+        from repro.kernels import ops as kops
+
+        def blk_k(Zb, cb):                               # (bq, v), (bq, b)
+            return kops.cand_pour(corpus.ids[cb], corpus.w[cb],
+                                  Zb[..., None], None, 0, block_n=block_n,
+                                  block_v=block_v)
+        return _map_query_blocks(blk_k, (Z0, cand), Z0.shape[0], block_q)
+
     def blk(Zb, cb):                                     # (bq, v), (bq, b)
         Zg = gather_per_query(Zb, corpus.ids[cb])       # (bq, b, hmax)
         return jnp.sum(corpus.w[cb] * Zg, axis=-1)
@@ -783,13 +810,25 @@ def pour_min_cand_blocked(corpus: Corpus, Z0: Array, cand: Array,
 
 
 def pour_cand_blocked(corpus: Corpus, Z: Array, W: Array, cand: Array,
-                      iters: int, block_q: int) -> Array:
+                      iters: int, block_q: int, *,
+                      use_kernels: bool = False, block_n: int = 128,
+                      block_v: int = 256) -> Array:
     """Candidate-compacted Phase 2/3 pour: (nq, v, k) handoff ladders +
-    (nq, b) candidate rows -> (nq, b) lower bounds."""
+    (nq, b) candidate rows -> (nq, b) lower bounds. ``use_kernels`` fuses
+    gather + pour into one ``kernels/cand_pour`` launch."""
     nq = Z.shape[0]
     if iters == 0:
-        return pour_min_cand_blocked(corpus, Z[..., 0], cand, block_q)
+        return pour_min_cand_blocked(corpus, Z[..., 0], cand, block_q,
+                                     use_kernels=use_kernels,
+                                     block_n=block_n, block_v=block_v)
     W = W[..., :iters]
+    if use_kernels:
+        from repro.kernels import ops as kops
+
+        def blk_k(Zb, Wb, cb):
+            return kops.cand_pour(corpus.ids[cb], corpus.w[cb], Zb, Wb,
+                                  iters, block_n=block_n, block_v=block_v)
+        return _map_query_blocks(blk_k, (Z, W, cand), nq, block_q)
 
     def blk(Zb, Wb, cb):
         ids_g = corpus.ids[cb]                           # (bq, b, hmax)
@@ -800,9 +839,20 @@ def pour_cand_blocked(corpus: Corpus, Z: Array, W: Array, cand: Array,
 
 
 def omr_reduce_cand_blocked(corpus: Corpus, Z: Array, W0: Array,
-                            cand: Array, block_q: int) -> Array:
+                            cand: Array, block_q: int, *,
+                            use_kernels: bool = False, block_n: int = 128,
+                            block_v: int = 256) -> Array:
     """Candidate-compacted Algorithm-1 reduction: Z (nq, v, 2), W0 (nq, v),
-    cand (nq, b) -> (nq, b) LC-OMR bounds."""
+    cand (nq, b) -> (nq, b) LC-OMR bounds. ``use_kernels`` fuses gather +
+    reduce into one ``kernels/cand_pour`` launch (mode "omr")."""
+    if use_kernels:
+        from repro.kernels import ops as kops
+
+        def blk_k(Zb, W0b, cb):
+            return kops.cand_omr(corpus.ids[cb], corpus.w[cb], Zb, W0b,
+                                 block_n=block_n, block_v=block_v)
+        return _map_query_blocks(blk_k, (Z, W0, cand), Z.shape[0], block_q)
+
     def blk(Zb, W0b, cb):
         ids_g = corpus.ids[cb]
         x = corpus.w[cb]                                 # (bq, b, hmax)
@@ -816,9 +866,20 @@ def omr_reduce_cand_blocked(corpus: Corpus, Z: Array, W0: Array,
 
 
 def rev_min_cand_blocked(corpus: Corpus, Dq: Array, Q_w: Array,
-                         cand: Array, block_q: int) -> Array:
+                         cand: Array, block_q: int, *,
+                         use_kernels: bool = False, block_n: int = 128,
+                         block_v: int = 256) -> Array:
     """Candidate-compacted reverse masked (min,+) reduction: Dq (nq, v, h),
-    cand (nq, b) -> (nq, b) reverse-RWMD bounds."""
+    cand (nq, b) -> (nq, b) reverse-RWMD bounds. ``use_kernels`` fuses
+    gather + reduce into one ``kernels/cand_pour`` launch."""
+    if use_kernels:
+        from repro.kernels import ops as kops
+
+        def blk_k(Db, Wb, cb):
+            return kops.cand_rev_min(corpus.ids[cb], corpus.w[cb], Db, Wb,
+                                     block_n=block_n, block_v=block_v)
+        return _map_query_blocks(blk_k, (Dq, Q_w, cand), Dq.shape[0],
+                                 block_q)
     big = jnp.asarray(PAD_DIST, Dq.dtype)
 
     def blk(Db, Wb, cb):                                 # (bq, v, h), (bq, h)
@@ -827,14 +888,32 @@ def rev_min_cand_blocked(corpus: Corpus, Dq: Array, Q_w: Array,
         Dg = gather_per_query(Db, ids_g)                # (bq, b, hmax, h)
         Dg = jnp.where(valid[..., None], Dg, big)
         cmin = jnp.min(Dg, axis=2)                       # (bq, b, h)
-        return jnp.einsum("qbh,qh->qb", cmin, Wb)
+        # multiply + last-axis reduce, NOT einsum: the dot op's
+        # accumulation varies with the row count, so a candidate-blocked
+        # kernel tile could never reproduce its bits — this form is
+        # block-shape-stable (the kernel conformance contract).
+        return jnp.sum(cmin * Wb[:, None, :], axis=-1)
     return _map_query_blocks(blk, (Dq, Q_w, cand), Dq.shape[0], block_q)
 
 
 def ict_reduce_cand_blocked(corpus: Corpus, Dq: Array, Q_w: Array,
-                            cand: Array, block_q: int) -> Array:
+                            cand: Array, block_q: int, *,
+                            use_kernels: bool = False, block_n: int = 128,
+                            block_v: int = 256) -> Array:
     """Candidate-compacted Algorithm-2 reduction: Dq (nq, v, h),
-    cand (nq, b) -> (nq, b) LC-ICT bounds."""
+    cand (nq, b) -> (nq, b) LC-ICT bounds. ``use_kernels`` fuses gather +
+    full-ladder pour into one ``kernels/cand_pour`` launch; both paths
+    run :func:`ict_pour`, so the remainder dump stays at the max FINITE
+    cost (a PAD_DIST dump would explode float residue — see its doc)."""
+    if use_kernels:
+        from repro.kernels import ops as kops
+
+        def blk_k(Db, Wb, cb):
+            return kops.cand_ict(corpus.ids[cb], corpus.w[cb], Db, Wb,
+                                 block_n=block_n, block_v=block_v)
+        return _map_query_blocks(blk_k, (Dq, Q_w, cand), Dq.shape[0],
+                                 block_q)
+
     def blk(Db, Wb, cb):
         ids_g = corpus.ids[cb]
         C = gather_per_query(Db, ids_g)                 # (bq, b, hmax, h)
@@ -844,48 +923,93 @@ def ict_reduce_cand_blocked(corpus: Corpus, Dq: Array, Q_w: Array,
 
 
 # ------------------------------------------- candidate-compacted engines
+#
+# ``use_kernels`` on every engine routes Phase 2/3 through the fused
+# candidate kernels; Phase 1 is the SAME shared jnp pipeline either way
+# (the kernels fuse only the gather + reduction), so both paths score
+# identically to within a few ulps at the candidate rows.
 
 
-@functools.partial(jax.jit, static_argnames=("iters", "block_q"))
+def _pin_handoff(*arrays):
+    """Materialize the Phase-1 handoff behind an optimization barrier.
+
+    The kernel and reference candidate paths are DIFFERENT XLA programs;
+    without the barrier XLA fuses Phase 1 into whichever consumer follows
+    (e.g. FMA-contracting the distance expansion), and the two programs
+    would start from handoffs that already disagree by ulps. With it,
+    Phase 1 compiles as the same standalone subgraph in both, so the
+    handoff bits are identical and any residual divergence is confined
+    to the reference reduction's own per-program fusion (a few ulps; see
+    ``kernels/cand_pour``). Cost: the handoff materializes — it is the
+    explicit stage boundary anyway (tiny next to Phase 2's reads).
+    """
+    out = jax.lax.optimization_barrier(arrays)
+    return out[0] if len(arrays) == 1 else out
+
+
+_CAND_STATIC = ("use_kernels", "block_q", "block_n", "block_v")
+
+
+@functools.partial(jax.jit, static_argnames=("iters",) + _CAND_STATIC)
 def lc_act_scores_cand(corpus: Corpus, Q_ids: Array, Q_w: Array,
                        cand: Array, iters: int = 1, *,
-                       block_q: int = 8) -> Array:
+                       use_kernels: bool = False, block_q: int = 8,
+                       block_n: int = 128, block_v: int = 256) -> Array:
     """Candidate-compacted batched LC-ACT: (nq, h) queries scored against
     each query's own (b,) candidate rows -> (nq, b)."""
+    kw = dict(use_kernels=use_kernels, block_n=block_n, block_v=block_v)
     if iters == 0:
-        Z0 = phase1_min_batched(corpus.coords, Q_ids, Q_w)
-        return pour_min_cand_blocked(corpus, Z0, cand, block_q)
-    Z, W = phase1_batched(corpus.coords, Q_ids, Q_w, iters + 1)
-    return pour_cand_blocked(corpus, Z, W, cand, iters, block_q)
+        Z0 = _pin_handoff(phase1_min_batched(corpus.coords, Q_ids, Q_w))
+        return pour_min_cand_blocked(corpus, Z0, cand, block_q, **kw)
+    Z, W = _pin_handoff(*phase1_batched(corpus.coords, Q_ids, Q_w,
+                                        iters + 1))
+    return pour_cand_blocked(corpus, Z, W, cand, iters, block_q, **kw)
 
 
-@functools.partial(jax.jit, static_argnames=("block_q",))
+@functools.partial(jax.jit, static_argnames=_CAND_STATIC)
 def lc_rwmd_scores_cand(corpus: Corpus, Q_ids: Array, Q_w: Array,
-                        cand: Array, *, block_q: int = 8) -> Array:
+                        cand: Array, *, use_kernels: bool = False,
+                        block_q: int = 8, block_n: int = 128,
+                        block_v: int = 256) -> Array:
     """Candidate-compacted batched LC-RWMD db -> query."""
     return lc_act_scores_cand(corpus, Q_ids, Q_w, cand, iters=0,
-                              block_q=block_q)
+                              use_kernels=use_kernels, block_q=block_q,
+                              block_n=block_n, block_v=block_v)
 
 
-@functools.partial(jax.jit, static_argnames=("block_q",))
+@functools.partial(jax.jit, static_argnames=_CAND_STATIC)
 def lc_rwmd_scores_rev_cand(corpus: Corpus, Q_ids: Array, Q_w: Array,
-                            cand: Array, *, block_q: int = 8) -> Array:
+                            cand: Array, *, use_kernels: bool = False,
+                            block_q: int = 8, block_n: int = 128,
+                            block_v: int = 256) -> Array:
     """Candidate-compacted batched LC-RWMD query -> db."""
-    Dq = _rev_handoff(phase1_stacked_dist(corpus.coords, Q_ids, Q_w))
-    return rev_min_cand_blocked(corpus, Dq, Q_w, cand, block_q)
+    Dq = _pin_handoff(_rev_handoff(phase1_stacked_dist(corpus.coords,
+                                                       Q_ids, Q_w)))
+    return rev_min_cand_blocked(corpus, Dq, Q_w, cand, block_q,
+                                use_kernels=use_kernels, block_n=block_n,
+                                block_v=block_v)
 
 
-@functools.partial(jax.jit, static_argnames=("block_q",))
+@functools.partial(jax.jit, static_argnames=_CAND_STATIC)
 def lc_omr_scores_cand(corpus: Corpus, Q_ids: Array, Q_w: Array,
-                       cand: Array, *, block_q: int = 8) -> Array:
+                       cand: Array, *, use_kernels: bool = False,
+                       block_q: int = 8, block_n: int = 128,
+                       block_v: int = 256) -> Array:
     """Candidate-compacted batched LC-OMR."""
-    Z, W = phase1_batched(corpus.coords, Q_ids, Q_w, 2)
-    return omr_reduce_cand_blocked(corpus, Z, W[..., 0], cand, block_q)
+    Z, W = _pin_handoff(*phase1_batched(corpus.coords, Q_ids, Q_w, 2))
+    return omr_reduce_cand_blocked(corpus, Z, W[..., 0], cand, block_q,
+                                   use_kernels=use_kernels, block_n=block_n,
+                                   block_v=block_v)
 
 
-@functools.partial(jax.jit, static_argnames=("block_q",))
+@functools.partial(jax.jit, static_argnames=_CAND_STATIC)
 def lc_ict_scores_cand(corpus: Corpus, Q_ids: Array, Q_w: Array,
-                       cand: Array, *, block_q: int = 8) -> Array:
+                       cand: Array, *, use_kernels: bool = False,
+                       block_q: int = 8, block_n: int = 128,
+                       block_v: int = 256) -> Array:
     """Candidate-compacted batched LC-ICT (the cascade's tight rescorer)."""
-    Dq = _rev_handoff(phase1_stacked_dist(corpus.coords, Q_ids, Q_w))
-    return ict_reduce_cand_blocked(corpus, Dq, Q_w, cand, block_q)
+    Dq = _pin_handoff(_rev_handoff(phase1_stacked_dist(corpus.coords,
+                                                       Q_ids, Q_w)))
+    return ict_reduce_cand_blocked(corpus, Dq, Q_w, cand, block_q,
+                                   use_kernels=use_kernels, block_n=block_n,
+                                   block_v=block_v)

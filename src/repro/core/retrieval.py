@@ -87,6 +87,13 @@ class MethodSpec:
                  ids, returning (nq, b) scores at those rows only (Phase 1
                  unchanged, Phase 2/3 gather-compacted). ``None`` means
                  the method cannot serve as a cascade stage or rescorer.
+                 For the five LC methods ``use_kernels=True`` routes the
+                 gather + reduction through the fused candidate Pallas
+                 kernels (``kernels/cand_pour``; ``block_n`` tiles the
+                 candidate rows, ``block_v`` the in-kernel gather),
+                 matching the reference path to within a few ulps
+                 (gather exact, same reduction formulas); the bow/wcd baselines
+                 have no kernel form and ignore the flag.
     """
     name: str
     paper_name: str
@@ -188,14 +195,20 @@ def _rwmd_rev_dist(corpus, q_ids, q_w, *, rev_block=256, block_q=8, **_):
 
 
 @_register_cand("rwmd")
-def _rwmd_cand(corpus, q_ids, q_w, cand, *, block_q=8, **_):
-    return lc.lc_rwmd_scores_cand(corpus, q_ids, q_w, cand, block_q=block_q)
+def _rwmd_cand(corpus, q_ids, q_w, cand, *, block_q=8, use_kernels=False,
+               block_n=256, block_v=256, **_):
+    return lc.lc_rwmd_scores_cand(corpus, q_ids, q_w, cand, block_q=block_q,
+                                  use_kernels=use_kernels, block_n=block_n,
+                                  block_v=block_v)
 
 
 @_register_cand("rwmd_rev")
-def _rwmd_rev_cand(corpus, q_ids, q_w, cand, *, block_q=8, **_):
+def _rwmd_rev_cand(corpus, q_ids, q_w, cand, *, block_q=8, use_kernels=False,
+                   block_n=256, block_v=256, **_):
     return lc.lc_rwmd_scores_rev_cand(corpus, q_ids, q_w, cand,
-                                      block_q=block_q)
+                                      block_q=block_q,
+                                      use_kernels=use_kernels,
+                                      block_n=block_n, block_v=block_v)
 
 
 @_register_symmetric_batch("rwmd", "rwmd_rev")
@@ -225,8 +238,11 @@ def _omr_batch(corpus, q_ids, q_w, *, use_kernels=False, block_v=256,
 
 
 @_register_cand("omr")
-def _omr_cand(corpus, q_ids, q_w, cand, *, block_q=8, **_):
-    return lc.lc_omr_scores_cand(corpus, q_ids, q_w, cand, block_q=block_q)
+def _omr_cand(corpus, q_ids, q_w, cand, *, block_q=8, use_kernels=False,
+              block_n=256, block_v=256, **_):
+    return lc.lc_omr_scores_cand(corpus, q_ids, q_w, cand, block_q=block_q,
+                                 use_kernels=use_kernels, block_n=block_n,
+                                 block_v=block_v)
 
 
 @_register("act", paper_name="LC-ACT-k", uses_iters=True,
@@ -248,9 +264,11 @@ def _act_batch(corpus, q_ids, q_w, *, iters=1, use_kernels=False,
 
 
 @_register_cand("act")
-def _act_cand(corpus, q_ids, q_w, cand, *, iters=1, block_q=8, **_):
+def _act_cand(corpus, q_ids, q_w, cand, *, iters=1, block_q=8,
+              use_kernels=False, block_n=256, block_v=256, **_):
     return lc.lc_act_scores_cand(corpus, q_ids, q_w, cand, iters=iters,
-                                 block_q=block_q)
+                                 block_q=block_q, use_kernels=use_kernels,
+                                 block_n=block_n, block_v=block_v)
 
 
 @_register("ict", paper_name="LC-ICT (db -> query)")
@@ -268,8 +286,11 @@ def _ict_batch(corpus, q_ids, q_w, *, block_q=8, **_):
 
 
 @_register_cand("ict")
-def _ict_cand(corpus, q_ids, q_w, cand, *, block_q=8, **_):
-    return lc.lc_ict_scores_cand(corpus, q_ids, q_w, cand, block_q=block_q)
+def _ict_cand(corpus, q_ids, q_w, cand, *, block_q=8, use_kernels=False,
+              block_n=256, block_v=256, **_):
+    return lc.lc_ict_scores_cand(corpus, q_ids, q_w, cand, block_q=block_q,
+                                 use_kernels=use_kernels, block_n=block_n,
+                                 block_v=block_v)
 
 
 @_register("bow", paper_name="BoW cosine baseline", symmetric=True)
@@ -491,6 +512,10 @@ def cand_scores(corpus: lc.Corpus, q_ids: Array, q_w: Array, cand: Array, *,
     This is the cascade subsystem's stage primitive (Phase 1 is shared
     with the full-corpus engines; only Phase 2/3 compacts to the
     candidates), dispatched through ``MethodSpec.cand_fn``.
+    ``use_kernels=True`` fuses the per-query candidate gather and the
+    reduction into one ``kernels/cand_pour`` launch for the LC methods,
+    matching the reference path to within a few ulps (see the
+    ``cand_fn`` field doc and ``kernels/cand_pour``'s conformance notes).
     """
     spec = METHODS[method]
     if spec.cand_fn is None:

@@ -25,25 +25,38 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _act_phase2_kernel(x_ref, zg_ref, wg_ref, t_ref, *, iters: int):
-    """Grid = (nq, n_blocks, h_blocks); the query batch is the outermost
-    (parallel) axis — x blocks are shared across it — and h blocks
-    accumulate into t."""
-    j = pl.program_id(2)
-
-    x = x_ref[...].astype(jnp.float32)                       # (bn, bh)
+def pour_entry_costs(x, zg, wg, iters: int):
+    """Per-entry poured cost of the k-round water-filling ladder — the
+    pour machinery shared by the shared-x batched kernel and the
+    candidate-grid (per-query x) extension below. x (bn, bh);
+    zg (bn, bh, iters+1); wg (bn, bh, iters) -> (bn, bh)."""
     acc = jnp.zeros_like(x)
     prefix = jnp.zeros_like(x)
     poured = jnp.zeros_like(x)
     for l in range(iters):
-        w_l = wg_ref[0, ..., l].astype(jnp.float32)          # (bn, bh)
-        z_l = zg_ref[0, ..., l].astype(jnp.float32)
+        w_l = wg[..., l].astype(jnp.float32)                 # (bn, bh)
+        z_l = zg[..., l].astype(jnp.float32)
         r = jnp.clip(x - prefix, 0.0, w_l)
         acc = acc + r * z_l
         poured = poured + r
         prefix = prefix + w_l
     remainder = jnp.maximum(x - poured, 0.0)
-    acc = acc + remainder * zg_ref[0, ..., iters].astype(jnp.float32)
+    return acc + remainder * zg[..., iters].astype(jnp.float32)
+
+
+def _act_phase2_kernel(x_ref, zg_ref, wg_ref, t_ref, *, iters: int):
+    """Grid = (nq, n_blocks, h_blocks); the query batch is the outermost
+    (parallel) axis and h blocks accumulate into t. The x block is shared
+    across queries (2-D block) on the full-corpus grid, or per-query
+    (3-D block, leading 1) on the candidate grid — each query of a
+    cascade scores its OWN (b, hmax) surviving sub-corpus."""
+    j = pl.program_id(2)
+
+    x = x_ref[...]
+    if x.ndim == 3:                                          # candidate grid
+        x = x[0]
+    x = x.astype(jnp.float32)                                # (bn, bh)
+    acc = pour_entry_costs(x, zg_ref[0], wg_ref[0], iters)
     partial = jnp.sum(acc, axis=1, keepdims=True)[None]      # (1, bn, 1)
 
     @pl.when(j == 0)
@@ -90,3 +103,48 @@ def act_phase2_pallas(x: jax.Array, zg: jax.Array, wg: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((nq, n, 1), jnp.float32),
         interpret=interpret,
     )(x, zg, wg)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "block_h", "interpret"))
+def act_phase2_cand_pallas(xg: jax.Array, zg: jax.Array, wg: jax.Array, *,
+                           block_n: int = 256, block_h: int = 256,
+                           interpret: bool = False) -> jax.Array:
+    """Candidate-grid extension of :func:`act_phase2_pallas`: the database
+    axis is each query's OWN candidate block, so the residual weights are
+    per-query too (a cascade's stage-s+1 sub-corpus differs per query).
+
+    Args:
+      xg: (nq, b, hmax) per-query candidate residual weights.
+      zg: (nq, b, hmax, iters+1) / wg: (nq, b, hmax, iters) pre-gathered
+          per-candidate ladders.
+    Returns t: (nq, b, 1) transport-cost lower bounds.
+
+    This is the unfused half of the candidate pour — callers that already
+    hold gathered ladders (or back-ends without the in-kernel one-hot
+    gather of ``cand_pour``) tile the same pour over (query, candidate)
+    blocks. The fused ``cand_pour`` kernel subsumes gather + pour in one
+    launch and is what the ``lc`` candidate engines route to.
+    Caller guarantees b % block_n == 0 and hmax % block_h == 0 (ops.py).
+    """
+    nq, b, hmax = xg.shape
+    iters = wg.shape[-1]
+    assert zg.shape == (nq, b, hmax, iters + 1), (zg.shape, xg.shape)
+    assert b % block_n == 0 and hmax % block_h == 0, (b, hmax, block_n,
+                                                      block_h)
+    grid = (nq, b // block_n, hmax // block_h)
+    kernel = functools.partial(_act_phase2_kernel, iters=iters)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_n, block_h), lambda q, i, j: (q, i, j)),
+            pl.BlockSpec((1, block_n, block_h, iters + 1),
+                         lambda q, i, j: (q, i, j, 0)),
+            pl.BlockSpec((1, block_n, block_h, iters),
+                         lambda q, i, j: (q, i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n, 1), lambda q, i, j: (q, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nq, b, 1), jnp.float32),
+        interpret=interpret,
+    )(xg, zg, wg)

@@ -1,0 +1,208 @@
+"""Pallas TPU kernels: fused candidate gather + Phase-2/3 reduction.
+
+The cascade's candidate engines (``core/lc`` ``*_cand_blocked``) score each
+query against its own (b,) surviving rows: the reference path gathers the
+per-entry cost/capacity ladders with XLA (``Z[ids[cand]]`` — the
+(nq, b, hmax, k) tensor lands in HBM) and then reduces. These kernels do
+BOTH in one launch on a query-batch x candidate-block grid: each (q, i)
+cell holds its query's full Phase-1 table in VMEM, gathers its candidate
+block's per-entry ladder rows in-kernel, and reduces to the (1, bb) scores
+— the (nq, b, hmax, k) gather tensor never materializes.
+
+The in-kernel gather is a one-hot matmul streamed over vocabulary chunks:
+for a chunk of ``block_v`` table rows, the (bb*hmax, block_v) one-hot of
+the candidate entry ids against the chunk's row range is contracted with
+the chunk on the MXU — the TPU idiom for an arbitrary-index gather (Mosaic
+has no general dynamic-gather op). Every entry id hits exactly one chunk,
+so accumulation across chunks adds exact zeros and the gathered ladder is
+BITWISE the XLA gather's result.
+
+The reductions reuse the reference engines' own formulas (``lc.pour``,
+``lc.ict_pour``, the Algorithm-1/masked-min expressions) on identically
+shaped tiles. The conformance contract (``tests/test_cand_kernels.py``):
+the gather is bitwise-exact, scores match the reference candidate engines
+to within a few ulps, and admissible cascades keep their exact-top-l
+guarantee under the kernel path. The residual ulps are not the kernels':
+XLA re-fuses the REFERENCE path's reduction per surrounding program
+(FMA contraction), so even two pure-jnp programs of the same formula can
+disagree by an ulp on CPU — the kernel body, compiled as an isolated
+computation inside the grid loop, is the more stable of the two.
+
+Covers every candidate reduction in the registry:
+  mode "pour"    — LC-ACT Phase 2/3 (iters >= 1) and the LC-RWMD
+                   masked-min dump (iters == 0), via ``lc.pour``.
+  mode "omr"     — LC-OMR Algorithm-1 top-2 reduction.
+  mode "rev_min" — reverse-RWMD masked (min,+) over the distance handoff.
+  mode "ict"     — LC-ICT full-ladder pour (``lc.ict_pour``; the
+                   remainder dump stays max-FINITE — see that docstring).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.lc import PAD_DIST, ict_pour, pour
+
+#: Modes whose ladder table stacks Z|W columns (Phase-1 ranked handoff).
+POUR_MODES = ("pour", "omr")
+#: Modes that consume the (v, h) distance handoff plus the query weights.
+DIST_MODES = ("rev_min", "ict")
+
+
+def _gather_rows(flat_ids, table, block_v: int):
+    """In-kernel gather ``table[flat_ids]`` via chunked one-hot matmuls.
+
+    flat_ids: (r,) int32 row ids into ``table`` (vp, width); vp is a
+    ``block_v`` multiple (ops pads). Returns (r, width) float32, bitwise
+    equal to an XLA gather: each id matches exactly one chunk, the one-hot
+    contraction is 1.0 * row + exact zeros (table values are finite —
+    padding costs are the finite ``lc.PAD_DIST``, never inf, so the
+    0 * value products cannot produce NaN).
+    """
+    vp, width = table.shape
+    r = flat_ids.shape[0]
+
+    def chunk(u, acc):
+        blk = jax.lax.dynamic_slice_in_dim(table, u * block_v, block_v, 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (r, block_v), 1)
+        onehot = (flat_ids[:, None] - u * block_v == col).astype(jnp.float32)
+        return acc + jax.lax.dot_general(
+            onehot, blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    return jax.lax.fori_loop(0, vp // block_v, chunk,
+                             jnp.zeros((r, width), jnp.float32))
+
+
+def _cand_pour_kernel(idsg_ref, xg_ref, table_ref, t_ref, *, k: int,
+                      iters: int, mode: str, block_v: int):
+    """Grid = (nq, cand_blocks). One cell: gather this candidate block's
+    (bb, hmax, k [+iters]) ladder rows from the query's VMEM-resident
+    table, then run the reference reduction."""
+    ids = idsg_ref[0]                                    # (bb, hmax) int32
+    bb, hmax = ids.shape
+    g = _gather_rows(ids.reshape(-1), table_ref[0], block_v)
+    zg = g[:, :k].reshape(bb, hmax, k)
+    x = xg_ref[0].astype(jnp.float32)
+    if mode == "pour":
+        wg = (g[:, k:].reshape(bb, hmax, iters) if iters
+              else zg[..., :0])                          # unused at iters=0
+        t = pour(x, zg, wg, iters)
+    else:                                                # "omr": k == 2
+        w0 = g[:, k].reshape(bb, hmax)
+        overlap = zg[..., 0] == 0.0
+        rest = x - jnp.minimum(x, w0)
+        per_entry = jnp.where(overlap, rest * zg[..., 1], x * zg[..., 0])
+        t = jnp.sum(per_entry, axis=-1)
+    t_ref[...] = t[None]
+
+
+def _cand_dist_kernel(idsg_ref, xg_ref, dq_ref, qw_ref, t_ref, *, mode: str,
+                      block_v: int):
+    """Grid = (nq, cand_blocks). Gathers the (bb, hmax, h) per-entry cost
+    rows from the query's (v, h) distance handoff, then reduces:
+    masked (min,+) . q_w ("rev_min") or the full sorted ladder ("ict")."""
+    ids = idsg_ref[0]                                    # (bb, hmax)
+    bb, hmax = ids.shape
+    qw = qw_ref[0].astype(jnp.float32)                   # (h,)
+    C = _gather_rows(ids.reshape(-1), dq_ref[0], block_v)
+    C = C.reshape(bb, hmax, qw.shape[0])
+    x = xg_ref[0].astype(jnp.float32)
+    if mode == "rev_min":
+        big = jnp.asarray(PAD_DIST, C.dtype)
+        Dg = jnp.where((x > 0.0)[..., None], C, big)
+        cmin = jnp.min(Dg, axis=1)                       # (bb, h)
+        # multiply + reduce, matching lc.rev_min_cand_blocked bit-for-bit
+        # (a dot op's accumulation varies with the tile's row count)
+        t = jnp.sum(cmin * qw[None, :], axis=-1)
+    else:                                                # "ict"
+        cap = jnp.broadcast_to(qw[None, None, :], C.shape)
+        t = ict_pour(x, cap, C)
+    t_ref[...] = t[None]
+
+
+def _check_cand(idsg, xg, block_n: int):
+    nq, b, hmax = idsg.shape
+    assert xg.shape == (nq, b, hmax), (xg.shape, idsg.shape)
+    assert b % block_n == 0, (b, block_n)
+    return nq, b, hmax
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "mode",
+                                             "block_n", "block_v",
+                                             "interpret"))
+def cand_pour_pallas(idsg: jax.Array, xg: jax.Array, table: jax.Array, *,
+                     k: int, iters: int, mode: str = "pour",
+                     block_n: int = 128, block_v: int = 256,
+                     interpret: bool = False) -> jax.Array:
+    """Fused candidate gather + pour/OMR reduction over a query batch.
+
+    Args:
+      idsg:  (nq, b, hmax) int32 vocabulary ids of each query's candidate
+             rows (``corpus.ids[cand]``; padding slots/rows carry id 0
+             and weight 0, contributing exactly 0 cost).
+      xg:    (nq, b, hmax) residual weights (``corpus.w[cand]``).
+      table: (nq, vp, k [+ iters]) per-query Phase-1 ladder, Z columns
+             first then W ("pour" with iters >= 1) or W0 ("omr").
+    Returns t: (nq, b) scores at the candidate rows.
+    Caller guarantees b % block_n == 0 and vp % block_v == 0 (see ops.py).
+    """
+    assert mode in POUR_MODES, mode
+    nq, b, hmax = _check_cand(idsg, xg, block_n)
+    vp, width = table.shape[1], table.shape[2]
+    assert vp % block_v == 0 and width == k + (1 if mode == "omr" else iters)
+    kernel = functools.partial(_cand_pour_kernel, k=k, iters=iters,
+                               mode=mode, block_v=block_v)
+    return pl.pallas_call(
+        kernel,
+        grid=(nq, b // block_n),
+        in_specs=[
+            pl.BlockSpec((1, block_n, hmax), lambda q, i: (q, i, 0)),
+            pl.BlockSpec((1, block_n, hmax), lambda q, i: (q, i, 0)),
+            pl.BlockSpec((1, vp, width), lambda q, i: (q, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda q, i: (q, i)),
+        out_shape=jax.ShapeDtypeStruct((nq, b), jnp.float32),
+        interpret=interpret,
+    )(idsg, xg, table)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "block_n", "block_v",
+                                             "interpret"))
+def cand_dist_pallas(idsg: jax.Array, xg: jax.Array, dq: jax.Array,
+                     qw: jax.Array, *, mode: str = "rev_min",
+                     block_n: int = 128, block_v: int = 256,
+                     interpret: bool = False) -> jax.Array:
+    """Fused candidate gather + distance-handoff reduction (rev_min/ict).
+
+    Args:
+      idsg: (nq, b, hmax) int32 candidate-row vocabulary ids.
+      xg:   (nq, b, hmax) residual weights (0 marks padding slots, which
+            "rev_min" masks to the finite ``lc.PAD_DIST``).
+      dq:   (nq, vp, h) query-major Phase-1 distance handoff (padded query
+            bins already carry ``lc.PAD_DIST``).
+      qw:   (nq, h) query weights (0 at padded bins).
+    Returns t: (nq, b) scores at the candidate rows.
+    Caller guarantees b % block_n == 0 and vp % block_v == 0 (see ops.py).
+    """
+    assert mode in DIST_MODES, mode
+    nq, b, hmax = _check_cand(idsg, xg, block_n)
+    vp, h = dq.shape[1], dq.shape[2]
+    assert vp % block_v == 0 and qw.shape == (nq, h), (dq.shape, qw.shape)
+    kernel = functools.partial(_cand_dist_kernel, mode=mode, block_v=block_v)
+    return pl.pallas_call(
+        kernel,
+        grid=(nq, b // block_n),
+        in_specs=[
+            pl.BlockSpec((1, block_n, hmax), lambda q, i: (q, i, 0)),
+            pl.BlockSpec((1, block_n, hmax), lambda q, i: (q, i, 0)),
+            pl.BlockSpec((1, vp, h), lambda q, i: (q, 0, 0)),
+            pl.BlockSpec((1, h), lambda q, i: (q, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda q, i: (q, i)),
+        out_shape=jax.ShapeDtypeStruct((nq, b), jnp.float32),
+        interpret=interpret,
+    )(idsg, xg, dq, qw)

@@ -3,20 +3,33 @@
 Handle padding to block multiples, backend selection (interpret=True on
 CPU — the container has no TPU; the kernels are written for TPU BlockSpec
 tiling and validated in interpret mode), and shape restoration.
+
+``JAX_PALLAS_INTERPRET=1`` forces interpret mode on every backend — the
+CI kernel-conformance job sets it so the suite pins the interpreted
+semantics explicitly rather than relying on backend detection.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.act_phase2 import act_phase2_pallas
+from repro.kernels.act_phase2 import act_phase2_cand_pallas, act_phase2_pallas
+from repro.kernels.cand_pour import cand_dist_pallas, cand_pour_pallas
 from repro.kernels.dist_topk import dist_topk_pallas
 
 
+#: Read once at import: the flag participates in no jit cache key, so a
+#: mid-process change could not take effect anyway (the first trace's
+#: choice would be reused) — pinning it at import makes that explicit.
+_FORCE_INTERPRET = os.environ.get("JAX_PALLAS_INTERPRET", "") not in ("",
+                                                                      "0")
+
+
 def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
+    return _FORCE_INTERPRET or jax.default_backend() != "tpu"
 
 
 def _round_up(x: int, b: int) -> int:
@@ -92,3 +105,128 @@ def act_phase2(x: jax.Array, zg: jax.Array, wg: jax.Array, *,
     -> t (n,). Single-query view of ``act_phase2_batched``."""
     return act_phase2_batched(x, zg[None], wg[None], block_n=block_n,
                               block_h=block_h)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_h"))
+def act_phase2_cand(xg: jax.Array, zg: jax.Array, wg: jax.Array, *,
+                    block_n: int = 256, block_h: int = 256) -> jax.Array:
+    """Candidate-grid Phase-2/3 pour: per-query residuals.
+
+    xg (nq, b, hmax) per-query candidate weights; zg (nq, b, hmax, k) /
+    wg (nq, b, hmax, k-1) pre-gathered ladders -> t (nq, b). The unfused
+    schedule for callers already holding gathered ladders; the ``cand_*``
+    wrappers below fuse the gather into the same launch."""
+    nq, b, hmax = xg.shape
+    block_n = min(block_n, _round_up(b, 8))
+    block_h = min(block_h, _round_up(hmax, 8))
+    bp, hp = _round_up(b, block_n), _round_up(hmax, block_h)
+    pad3 = ((0, 0), (0, bp - b), (0, hp - hmax))
+    pad4 = pad3 + ((0, 0),)
+    t = act_phase2_cand_pallas(jnp.pad(xg, pad3), jnp.pad(zg, pad4),
+                               jnp.pad(wg, pad4), block_n=block_n,
+                               block_h=block_h,
+                               interpret=_interpret_default())
+    return t[:, :b, 0]
+
+
+# ------------------------------------------------------ candidate kernels
+#
+# Fused per-query candidate gather + Phase-2/3 reduction (cascade stages).
+# Shapes: idsg/xg (nq, b, hmax) are the candidate sub-corpus
+# (corpus.ids[cand] / corpus.w[cand] — already compacted, k+ times smaller
+# than the ladder gathers these kernels avoid); the Phase-1 handoff rides
+# in per-query tables. Padding added here (candidate rows to a block_n
+# multiple, vocabulary rows to a block_v multiple) contributes exactly
+# zero cost and is sliced off.
+
+
+def _cand_blocking(idsg, xg, table, block_n: int, block_v: int):
+    """Shared blocking for the fused candidate wrappers: clamp the tiles
+    to the (8-rounded) data sizes, zero-pad the candidate axis to a
+    block_n multiple and the table's vocabulary axis to a block_v
+    multiple. Returns (idsg, xg, table, block_n, block_v, b) with ``b``
+    the original candidate count to slice the output back to."""
+    nq, b, hmax = idsg.shape
+    v = table.shape[1]
+    block_n = min(block_n, _round_up(b, 8))
+    block_v = min(block_v, _round_up(v, 8))
+    padb = ((0, 0), (0, _round_up(b, block_n) - b), (0, 0))
+    table = jnp.pad(table, ((0, 0), (0, _round_up(v, block_v) - v), (0, 0)))
+    return (jnp.pad(idsg, padb), jnp.pad(xg, padb), table, block_n,
+            block_v, b)
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "block_n", "block_v"))
+def cand_pour(idsg: jax.Array, xg: jax.Array, Z: jax.Array,
+              W: jax.Array | None, iters: int, *, block_n: int = 128,
+              block_v: int = 256) -> jax.Array:
+    """Fused candidate gather + pour: the LC-ACT (iters >= 1) and LC-RWMD
+    masked-min (iters == 0) candidate reductions in one kernel launch.
+
+    idsg/xg (nq, b, hmax); Z (nq, v, >= iters+1) cost ladder;
+    W (nq, v, >= iters) capacity ladder (``None`` when iters == 0)
+    -> (nq, b) scores, matching the reference candidate engines to
+    within a few ulps (exact gather + the reference reduction formulas;
+    see ``kernels/cand_pour``'s conformance notes).
+    """
+    k = iters + 1
+    table = Z[..., :k] if iters == 0 else \
+        jnp.concatenate([Z[..., :k], W[..., :iters]], axis=-1)
+    idsg, xg, table, block_n, block_v, b = _cand_blocking(
+        idsg, xg, table, block_n, block_v)
+    t = cand_pour_pallas(idsg, xg, table, k=k, iters=iters, mode="pour",
+                         block_n=block_n, block_v=block_v,
+                         interpret=_interpret_default())
+    return t[:, :b]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_v"))
+def cand_omr(idsg: jax.Array, xg: jax.Array, Z: jax.Array, W0: jax.Array,
+             *, block_n: int = 128, block_v: int = 256) -> jax.Array:
+    """Fused candidate gather + LC-OMR Algorithm-1 reduction.
+
+    idsg/xg (nq, b, hmax); Z (nq, v, 2) top-2 costs; W0 (nq, v) first
+    capacities -> (nq, b) scores.
+    """
+    table = jnp.concatenate([Z[..., :2], W0[..., None]], axis=-1)
+    idsg, xg, table, block_n, block_v, b = _cand_blocking(
+        idsg, xg, table, block_n, block_v)
+    t = cand_pour_pallas(idsg, xg, table, k=2, iters=1, mode="omr",
+                         block_n=block_n, block_v=block_v,
+                         interpret=_interpret_default())
+    return t[:, :b]
+
+
+def _cand_dist(idsg, xg, Dq, qw, mode, block_n, block_v):
+    idsg, xg, dq, block_n, block_v, b = _cand_blocking(
+        idsg, xg, Dq, block_n, block_v)
+    t = cand_dist_pallas(idsg, xg, dq, qw, mode=mode, block_n=block_n,
+                         block_v=block_v, interpret=_interpret_default())
+    return t[:, :b]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_v"))
+def cand_rev_min(idsg: jax.Array, xg: jax.Array, Dq: jax.Array,
+                 qw: jax.Array, *, block_n: int = 128,
+                 block_v: int = 256) -> jax.Array:
+    """Fused candidate gather + reverse-RWMD masked (min,+) reduction.
+
+    idsg/xg (nq, b, hmax); Dq (nq, v, h) distance handoff; qw (nq, h)
+    query weights -> (nq, b) scores (invalid slots mask to the finite
+    ``lc.PAD_DIST``, matching ``lc.rev_min_cand_blocked``).
+    """
+    return _cand_dist(idsg, xg, Dq, qw, "rev_min", block_n, block_v)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_v"))
+def cand_ict(idsg: jax.Array, xg: jax.Array, Dq: jax.Array,
+             qw: jax.Array, *, block_n: int = 128,
+             block_v: int = 256) -> jax.Array:
+    """Fused candidate gather + LC-ICT full-ladder pour (Algorithm 2).
+
+    idsg/xg (nq, b, hmax); Dq (nq, v, h); qw (nq, h) -> (nq, b) scores.
+    Runs ``lc.ict_pour`` on the gathered tile, so the remainder dump
+    stays at the max FINITE gathered cost — never ``lc.PAD_DIST``, where
+    a ~1e-7 cumsum residue would explode to ~1e23.
+    """
+    return _cand_dist(idsg, xg, Dq, qw, "ict", block_n, block_v)

@@ -208,7 +208,12 @@ def make_cascade_search_step(spec, top_l: int = 16,
     ``spec`` is a ``repro.cascade`` CascadeSpec (or preset name) whose
     rescorer must be jittable — the host-side exact ``emd`` rescorer
     cannot run inside a mesh step. ``n_valid`` masks zero-weight pad rows
-    out of candidacy before the stage-1 top-budget.
+    out of candidacy before the stage-1 top-budget. ``use_kernels``
+    routes stage-1 AND the candidate stages/rescorer through the fused
+    kernels; in interpret mode they lower to plain HLO and shard like any
+    other op (the 8-device conformance test), but COMPILED Pallas calls
+    have no SPMD partitioning rule, so ``EmdIndex`` keeps the flag off on
+    the distributed backend until a shard_map wrapping lands.
     """
     from repro import cascade as Cx
 

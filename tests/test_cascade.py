@@ -179,6 +179,57 @@ def test_blocked_topk_uneven_split_falls_back():
     np.testing.assert_allclose(np.asarray(v), np.asarray(v0))
 
 
+def _check_topk_ties(s, k, blocks):
+    """Tie-breaking contract of ``topk_smallest`` on duplicate scores:
+    blocks=1 must match ``lax.top_k`` EXACTLY (values and indices — the
+    lowest index wins ties); the blocked ladder merge returns the same
+    values with a score-consistent, duplicate-free index set (its ties
+    resolve by (block, local rank) — a recall-silent difference, pinned
+    here so a silent regression cannot slip in)."""
+    import jax
+
+    neg, ref_i = jax.lax.top_k(-s, k)
+    v, i = topk_smallest(s, k, blocks=blocks)
+    np.testing.assert_array_equal(np.asarray(v), -np.asarray(neg))
+    iv = np.asarray(i)
+    if blocks == 1:
+        np.testing.assert_array_equal(iv, np.asarray(ref_i))
+        return
+    # every selected index carries exactly its reported score, no index
+    # is selected twice, and the multiset of scores matches lax.top_k's
+    np.testing.assert_array_equal(np.take_along_axis(np.asarray(s), iv, 1),
+                                  np.asarray(v))
+    assert all(len(set(row)) == len(row) for row in iv)
+
+
+@pytest.mark.parametrize("blocks", [1, 2, 4])
+def test_topk_smallest_tie_breaking_fixed_seeds(blocks):
+    """Satellite: duplicate-heavy scores (integers in a tiny range) hit
+    tie-breaking on every row."""
+    for seed in (0, 1, 2):
+        rng = np.random.default_rng(seed)
+        s = jnp.asarray(rng.integers(0, 4, size=(6, 32)), jnp.float32)
+        _check_topk_ties(s, 7, blocks)
+
+
+def test_topk_smallest_tie_breaking_property():
+    """Hypothesis sweep of the tie-breaking contract."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None, derandomize=True)
+    @given(seed=st.integers(0, 2**31 - 1), rows=st.integers(1, 5),
+           n=st.sampled_from([16, 32, 48]), k=st.integers(1, 9),
+           spread=st.integers(1, 5), blocks=st.sampled_from([1, 2, 4, 8]))
+    def run(seed, rows, n, k, spread, blocks):
+        rng = np.random.default_rng(seed)
+        s = jnp.asarray(rng.integers(0, spread, size=(rows, n)),
+                        jnp.float32)
+        _check_topk_ties(s, k, blocks)
+
+    run()
+
+
 def test_topk_recall():
     a = np.array([[0, 1, 2], [3, 4, 5]])
     assert topk_recall(a, a) == 1.0
@@ -223,7 +274,7 @@ _ADMISSIBLE_STAGES = {
 }
 
 
-def _full_rescorer_scores(c, qi, qw, rescorer, iters):
+def _full_rescorer_scores(c, qi, qw, rescorer, iters, use_kernels=False):
     """Full-corpus scores THROUGH the rescorer's own candidate scorer
     (cand = every row), so the cascade and the reference share float
     behavior exactly."""
@@ -232,26 +283,33 @@ def _full_rescorer_scores(c, qi, qw, rescorer, iters):
                                 (nq, c.n))
     r = rescore.resolve(rescorer)
     if r.jittable:
-        return np.asarray(r.fn(c, qi, qw, all_rows, iters=iters))
+        return np.asarray(r.fn(c, qi, qw, all_rows, iters=iters,
+                               use_kernels=use_kernels))
     return np.asarray(r.host_fn(c, qi, qw, np.asarray(all_rows)))
 
 
-def _check_admissible_exactness(rescorer: str, seed: int):
+def _check_admissible_exactness(rescorer: str, seed: int,
+                                use_kernels: bool = False):
     """One instance of the acceptance property: an admissible cascade
     (every stage a provable lower bound of the rescorer, budgets >= top_l
     and >= the stage-score rank of every true top-l neighbor) returns the
-    identical top-l index set as full-corpus rescoring."""
+    identical top-l index set as full-corpus rescoring.
+    ``use_kernels`` runs the SAME property with the fused candidate
+    kernels (interpret mode) in every stage and the rescorer — budgets
+    and the reference ranking are derived from the kernel path's own
+    scores, so coverage holds on the path under test."""
     c, _ = make_text_like(n_docs=20, n_classes=3, vocab=64, m=6,
                           doc_len=8, hmax=8, seed=seed)
     nq, top_l = 3, 3
     qi, qw = c.ids[:nq], c.w[:nq]
     iters = 2 if rescorer == "act" else 1
-    full = _full_rescorer_scores(c, qi, qw, rescorer, iters)
+    full = _full_rescorer_scores(c, qi, qw, rescorer, iters, use_kernels)
     ref_idx = np.argsort(full, axis=1, kind="stable")[:, :top_l]
 
     stages = _ADMISSIBLE_STAGES[rescorer]
     stage_scores = [np.asarray(retrieval.batch_scores(
-        c, qi, qw, method=m, iters=it)) for m, it in stages]
+        c, qi, qw, method=m, iters=it, use_kernels=use_kernels))
+        for m, it in stages]
     budgets = _rank_budgets(stage_scores, ref_idx, top_l)
     spec = CascadeSpec(
         stages=tuple(CascadeStage(m, b, iters=it)
@@ -262,33 +320,102 @@ def _check_admissible_exactness(rescorer: str, seed: int):
     # budgets still make the cascade exact by construction
     assert spec.admissible == (rescorer != "sinkhorn"), spec.describe()
 
-    res = cascade.cascade_search(c, qi, qw, spec, top_l)
+    res = cascade.cascade_search(c, qi, qw, spec, top_l,
+                                 use_kernels=use_kernels)
     got = np.sort(np.asarray(res.indices), axis=1)
     assert got.shape == (nq, top_l)
     np.testing.assert_array_equal(got, np.sort(ref_idx, axis=1),
                                   err_msg=spec.describe())
 
 
+@pytest.mark.parametrize("use_kernels", [False, True],
+                         ids=["reference", "kernels"])
 @pytest.mark.parametrize("rescorer", sorted(_ADMISSIBLE_STAGES))
-def test_admissible_cascade_exact_fixed_seeds(rescorer):
+def test_admissible_cascade_exact_fixed_seeds(rescorer, use_kernels):
     """The acceptance property on pinned seeds (always runs, even where
-    hypothesis is unavailable) — every registered rescorer."""
+    hypothesis is unavailable) — every registered rescorer, on the
+    reference path AND composed with the fused candidate kernels."""
     for seed in (3, 17):
-        _check_admissible_exactness(rescorer, seed)
+        _check_admissible_exactness(rescorer, seed, use_kernels)
 
 
+@pytest.mark.parametrize("use_kernels", [False, True],
+                         ids=["reference", "kernels"])
 @pytest.mark.parametrize("rescorer", sorted(_ADMISSIBLE_STAGES))
-def test_admissible_cascade_exact_property(rescorer):
-    """Hypothesis sweep of the same property over random corpora."""
+def test_admissible_cascade_exact_property(rescorer, use_kernels):
+    """Hypothesis sweep of the same property over random corpora, for
+    every admissible ladder with and without the fused kernels."""
     pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st
 
     @settings(max_examples=4, deadline=None)
     @given(seed=st.integers(0, 2**31 - 1))
     def run(seed):
-        _check_admissible_exactness(rescorer, seed)
+        _check_admissible_exactness(rescorer, seed, use_kernels)
 
     run()
+
+
+def test_cascade_kernel_path_matches_reference_path(corpus_labels):
+    """Acceptance: an admissible cascade whose budgets cover the true
+    top-l stage ranks under BOTH paths returns the identical top-l set
+    with use_kernels=True and False, and the rescorer scores of that set
+    agree to the last ulps (the fused kernels reuse the reference
+    reductions — see kernels/cand_pour)."""
+    c, _ = corpus_labels
+    nq, top_l, iters = 4, 4, 2
+    qi, qw = c.ids[:nq], c.w[:nq]
+    stages = (("rwmd", 0), ("omr", 0))
+    results = {}
+    for uk in (False, True):
+        full = _full_rescorer_scores(c, qi, qw, "act", iters, uk)
+        ref_idx = np.argsort(full, axis=1, kind="stable")[:, :top_l]
+        ss = [np.asarray(retrieval.batch_scores(c, qi, qw, method=m,
+                                                iters=it, use_kernels=uk))
+              for m, it in stages]
+        results[uk] = (_rank_budgets(ss, ref_idx, top_l), ref_idx)
+    budgets = [max(a, b) for a, b in zip(results[False][0],
+                                         results[True][0])]
+    spec = CascadeSpec(stages=tuple(CascadeStage(m, b, iters=it)
+                                    for (m, it), b in zip(stages, budgets)),
+                       rescorer="act", rescorer_iters=iters)
+    assert spec.admissible
+    res_r = cascade.cascade_search(c, qi, qw, spec, top_l)
+    res_k = cascade.cascade_search(c, qi, qw, spec, top_l,
+                                   use_kernels=True)
+    order_r = np.argsort(np.asarray(res_r.indices), axis=1)
+    order_k = np.argsort(np.asarray(res_k.indices), axis=1)
+    np.testing.assert_array_equal(
+        np.take_along_axis(np.asarray(res_r.indices), order_r, 1),
+        np.take_along_axis(np.asarray(res_k.indices), order_k, 1))
+    s_r = np.take_along_axis(np.asarray(res_r.scores), order_r, 1)
+    s_k = np.take_along_axis(np.asarray(res_k.scores), order_k, 1)
+    from test_cand_kernels import assert_ulp_equal
+    assert_ulp_equal(s_k, s_r, err_msg="cascade kernel-vs-reference")
+
+
+def test_emdindex_pallas_backend_cascade(corpus_labels):
+    """EngineConfig(backend="pallas", cascade=...) reaches the fused
+    candidate kernels through the API and agrees with the reference
+    backend at generous budgets."""
+    import dataclasses as dc
+
+    from repro.api import EmdIndex, EngineConfig
+    c, _ = corpus_labels
+    qi, qw = c.ids[:5], c.w[:5]
+    spec = CascadeSpec(stages=(CascadeStage("rwmd", 24),
+                               CascadeStage("omr", 12)),
+                       rescorer="act", rescorer_iters=2)
+    cfg = EngineConfig(method="act", iters=2, top_l=4, cascade=spec,
+                       backend="pallas")
+    s_k, i_k = EmdIndex.build(c, cfg).search(qi, qw)
+    ref = EmdIndex.build(c, dc.replace(cfg, backend="reference"))
+    s_r, i_r = ref.search(qi, qw)
+    np.testing.assert_array_equal(np.sort(np.asarray(i_k), 1),
+                                  np.sort(np.asarray(i_r), 1))
+    np.testing.assert_allclose(np.sort(np.asarray(s_k), 1),
+                               np.sort(np.asarray(s_r), 1),
+                               rtol=1e-5, atol=1e-6)
 
 
 def test_full_budget_cascade_bitwise_exact(corpus_labels):

@@ -337,6 +337,102 @@ print("ALL CASCADE OK")
 
 
 @pytest.mark.slow
+def test_distributed_cascade_kernel_conformance():
+    """The fused candidate kernels inside the mesh cascade step on the
+    8-device (4, 2) mesh: ``use_kernels=True`` (interpret-mode Pallas
+    lowers to plain HLO, so SPMD shards it like any other op) returns
+    the identical top-l set as (a) the non-kernel mesh cascade and
+    (b) full-corpus rescoring — the acceptance criterion's mesh half.
+    Budgets cover the true neighbors' stage ranks under both paths."""
+    out = _run("""
+import contextlib, jax, numpy as np
+import jax.numpy as jnp
+from repro.cascade import CascadeSpec, CascadeStage, rescore
+from repro.configs.emd_20news import EMDWorkload
+from repro.core import retrieval
+from repro.core.lc import Corpus
+from repro.data.synth import make_text_like
+from repro.launch import search as Sx
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+corpus, _ = make_text_like(n_docs=24, n_classes=4, vocab=64, m=8,
+                           doc_len=10, hmax=16, seed=5)
+nq, top_l, iters = 5, 3, 2
+q_ids, q_w = corpus.ids[:nq], corpus.w[:nq]
+stages = (("rwmd", 0), ("omr", 0))
+
+# budgets covering the true act top-l ranks under BOTH paths
+budget_req = []
+for uk in (False, True):
+    all_rows = jnp.broadcast_to(jnp.arange(corpus.n, dtype=jnp.int32),
+                                (nq, corpus.n))
+    full = np.asarray(rescore.resolve("act").fn(
+        corpus, q_ids, q_w, all_rows, iters=iters, use_kernels=uk))
+    ref_idx = np.argsort(full, axis=1, kind="stable")[:, :top_l]
+    req = []
+    for m, it in stages:
+        s = np.asarray(retrieval.batch_scores(corpus, q_ids, q_w,
+                                              method=m, iters=it,
+                                              use_kernels=uk))
+        order = np.argsort(s, axis=1, kind="stable")
+        rank = np.empty_like(order)
+        np.put_along_axis(rank, order,
+                          np.arange(s.shape[1])[None, :], axis=1)
+        req.append(max(top_l,
+                       int(np.take_along_axis(rank, ref_idx,
+                                              axis=1).max()) + 1))
+    budget_req.append(req)
+budgets = [max(a, b) for a, b in zip(*budget_req)]
+for i in range(len(budgets) - 2, -1, -1):
+    budgets[i] = max(budgets[i], budgets[i + 1])
+spec = CascadeSpec(stages=tuple(CascadeStage(m, b, iters=it)
+                                for (m, it), b in zip(stages, budgets)),
+                   rescorer="act", rescorer_iters=iters)
+assert spec.admissible
+
+workload = EMDWorkload(name="t", n_db=corpus.n, vocab=corpus.v,
+                       dim=corpus.m, hmax=corpus.hmax, iters=iters,
+                       queries=nq, method="act")
+n_pad = 32
+padded = Corpus(ids=jnp.pad(corpus.ids, ((0, n_pad - corpus.n), (0, 0))),
+                w=jnp.pad(corpus.w, ((0, n_pad - corpus.n), (0, 0))),
+                coords=corpus.coords)
+in_sh, _ = Sx.search_shardings(mesh, workload)
+p_ids = jax.device_put(padded.ids, in_sh[0])
+p_w = jax.device_put(padded.w, in_sh[1])
+coords = jax.device_put(padded.coords, in_sh[2])
+qi = jnp.pad(q_ids, ((0, 8 - nq), (0, 0)))      # data axis = 4: pad to 8
+qw = jnp.pad(q_w, ((0, 8 - nq), (0, 0)))
+
+set_mesh = getattr(jax, "set_mesh", None)
+ctx = set_mesh(mesh) if set_mesh else contextlib.nullcontext()
+results = {}
+with ctx:
+    for uk in (False, True):
+        step = Sx.jit_cascade_search_step(workload, mesh, spec,
+                                          top_l=top_l, pad_multiple=16,
+                                          block_q=3, use_kernels=uk)
+        s, i = step(p_ids, p_w, coords, qi, qw)
+        results[uk] = (np.asarray(s)[:nq], np.asarray(i)[:nq])
+
+i_ref, i_ker = results[False][1], results[True][1]
+np.testing.assert_array_equal(np.sort(i_ker, 1), np.sort(i_ref, 1))
+np.testing.assert_allclose(np.sort(results[True][0], 1),
+                           np.sort(results[False][0], 1),
+                           rtol=1e-6, atol=1e-7)
+assert int(i_ker.max()) < corpus.n                # pads masked
+full = np.asarray(rescore.resolve("act").fn(
+    corpus, q_ids, q_w,
+    jnp.broadcast_to(jnp.arange(corpus.n, dtype=jnp.int32),
+                     (nq, corpus.n)), iters=iters))
+ref_idx = np.argsort(full, axis=1, kind="stable")[:, :top_l]
+np.testing.assert_array_equal(np.sort(i_ker, 1), np.sort(ref_idx, 1))
+print("CASCADE KERNEL MESH OK", budgets)
+""")
+    assert "CASCADE KERNEL MESH OK" in out
+
+
+@pytest.mark.slow
 def test_emd_index_distributed_backend_multi_device():
     """EmdIndex(backend='distributed') on an 8-device (4, 2) mesh matches
     the reference backend — identical code path as single-host callers."""
