@@ -1,0 +1,103 @@
+"""Benchmark-artifact sanity pass (stdlib-only, no jax).
+
+The CI smoke job used to hold its BENCH_*.json assertions in inline
+``python -c`` strings inside the workflow — unreviewable and
+untestable. This module is those checks as code: the smoke job now runs
+``python -m repro.analysis.check --passes bench`` after the benchmark
+smokes, and the same validations are unit-tested against seeded-bad
+artifacts.
+
+Validated:
+
+* ``BENCH_batch.json`` — non-empty ``entries``, at least one entry from
+  the distributed engine, every entry carrying the throughput fields.
+* ``BENCH_cascade.json`` — non-empty ``entries`` each with
+  ``recall_at_l`` / ``queries_per_sec`` / ``use_kernels``; BOTH kernel
+  settings present (the kernel path must not silently drop out of the
+  bench matrix); a ``distributed_step`` record with recall + qps; all
+  recalls inside [0, 1].
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.analysis.violations import Violation
+
+BATCH_PATH = "BENCH_batch.json"
+CASCADE_PATH = "BENCH_cascade.json"
+
+
+def _load(path: str) -> tuple[dict | None, list[Violation]]:
+    if not os.path.exists(path):
+        return None, [Violation(
+            "bench", path,
+            "artifact missing — run the benchmark smoke first "
+            "(BENCH_SMOKE=1 PYTHONPATH=src python -m benchmarks.run)")]
+    try:
+        with open(path) as f:
+            return json.load(f), []
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        return None, [Violation("bench", path, f"unparseable JSON: {e}")]
+
+
+def check_batch(path: str = BATCH_PATH) -> list[Violation]:
+    r, out = _load(path)
+    if r is None:
+        return out
+    entries = r.get("entries") or []
+    if not entries:
+        out.append(Violation("bench", path, "no benchmark entries"))
+        return out
+    if not any(e.get("engine") == "distributed" for e in entries):
+        out.append(Violation(
+            "bench", path,
+            "no distributed-engine entry — the mesh path fell out of "
+            "the bench matrix"))
+    for i, e in enumerate(entries):
+        if "queries_per_sec" not in e and "qps" not in e:
+            out.append(Violation(
+                "bench", path, f"entry #{i} has no throughput field"))
+    return out
+
+
+def check_cascade(path: str = CASCADE_PATH) -> list[Violation]:
+    r, out = _load(path)
+    if r is None:
+        return out
+    entries = r.get("entries") or []
+    if not entries:
+        out.append(Violation("bench", path, "no benchmark entries"))
+        return out
+    for i, e in enumerate(entries):
+        for key in ("recall_at_l", "queries_per_sec", "use_kernels"):
+            if key not in e:
+                out.append(Violation(
+                    "bench", path, f"entry #{i} missing {key!r}"))
+        rec = e.get("recall_at_l")
+        if isinstance(rec, (int, float)) and not 0.0 <= rec <= 1.0:
+            out.append(Violation(
+                "bench", path,
+                f"entry #{i} recall_at_l={rec} outside [0, 1]"))
+    kernel_settings = {e.get("use_kernels") for e in entries
+                      if "use_kernels" in e}
+    if kernel_settings and kernel_settings != {False, True}:
+        out.append(Violation(
+            "bench", path,
+            f"kernel settings covered: {sorted(kernel_settings)} — the "
+            "bench matrix must run use_kernels both ways"))
+    dist = r.get("distributed_step")
+    if not isinstance(dist, dict):
+        out.append(Violation(
+            "bench", path, "no distributed_step record"))
+    else:
+        for key in ("recall_at_l", "queries_per_sec"):
+            if key not in dist:
+                out.append(Violation(
+                    "bench", path, f"distributed_step missing {key!r}"))
+    return out
+
+
+def run(*, batch_path: str = BATCH_PATH,
+        cascade_path: str = CASCADE_PATH) -> tuple[list[Violation], int]:
+    return check_batch(batch_path) + check_cascade(cascade_path), 2

@@ -4,8 +4,9 @@ XLA's ``compiled.cost_analysis()`` counts every while/scan body ONCE
 (trip counts are invisible to HloCostAnalysis), which under-reports any
 scanned-layer model by ~the layer count. This counter walks the closed
 jaxpr instead, multiplying scan bodies by their static length, so the
-roofline terms in EXPERIMENTS.md are exact for the matmul-dominated
-workloads this framework runs.
+roofline terms the dry-run records (``launch/dryrun.py`` ->
+``results/dryrun.jsonl``) are exact for the matmul-dominated workloads
+this framework runs.
 
 FLOPs: 2*M*N*K per dot_general (batched dims included), conv as implicit
 dot. Bytes: a structural HBM-traffic model — operands+outputs of
@@ -17,13 +18,27 @@ on real traffic and is labelled as such wherever reported.
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import numpy as np
-from jax._src import core as jcore
+
+try:
+    # The supported introspection surface (jax >= 0.4.16 ships
+    # jax.extend.core; ClosedJaxpr joined it later).
+    from jax.extend import core as jcore
+
+    _ = jcore.ClosedJaxpr
+except (ImportError, AttributeError):  # pragma: no cover - old-jax shim
+    # Fallback for jax builds whose extend surface predates ClosedJaxpr.
+    # Private import, kept ONLY as the shim: it breaks silently on jax
+    # upgrades, which is why the supported path above is tried first.
+    from jax._src import core as jcore
 
 _RECURSE_PARAM_KEYS = ("jaxpr", "call_jaxpr", "fun_jaxpr", "cond_jaxpr")
+#: Body-carrying params of the control-flow primitives ``_count`` handles
+#: explicitly (with trip-count multiplication); ``iter_eqns`` descends into
+#: these too so generic walkers see EVERY equation.
+_BODY_PARAM_KEYS = ("body_jaxpr",)
 
 
 def _aval_bytes(aval) -> int:
@@ -71,6 +86,27 @@ def _sub_jaxprs(eqn):
     if "branches" in eqn.params:                      # cond
         for b in eqn.params["branches"]:
             yield b.jaxpr if isinstance(b, jcore.ClosedJaxpr) else b
+
+
+def iter_eqns(jaxpr):
+    """Yield every equation of ``jaxpr`` and all nested sub-jaxprs
+    (scan/while/cond/pjit/remat/pallas_call bodies), each visited once.
+
+    The generic single-visit walk for structural analyses
+    (``analysis/hazards`` builds on it); unlike :func:`_count` it applies
+    no trip-count weighting — an equation inside a scanned body is
+    yielded once however many times the loop runs.
+    """
+    for eqn in jaxpr.eqns:
+        yield eqn
+        subs = list(_sub_jaxprs(eqn))
+        for key in _BODY_PARAM_KEYS:
+            if key in eqn.params:
+                j = eqn.params[key]
+                subs.append(j.jaxpr if isinstance(j, jcore.ClosedJaxpr)
+                            else j)
+        for sub in subs:
+            yield from iter_eqns(sub)
 
 
 def _count(jaxpr) -> dict[str, float]:

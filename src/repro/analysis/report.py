@@ -1,16 +1,25 @@
-"""Build the EXPERIMENTS.md roofline tables from results/dryrun.jsonl.
+"""Render markdown roofline tables from the dry-run's JSONL results.
+
+The records come from ``launch/dryrun.py`` (default output
+``results/dryrun.jsonl`` — the dry-run must have been run first; this
+module only formats). Prints one markdown table per mesh; keeps the LAST
+record per (arch, shape, mesh) so re-runs supersede earlier rows.
 
 Usage: PYTHONPATH=src python -m repro.analysis.report [results/dryrun.jsonl]
-Prints a markdown table per mesh; keeps the LAST record per (arch, shape,
-mesh) so re-runs supersede earlier rows.
 """
 from __future__ import annotations
 
 import json
+import os
 import sys
 
 
 def load(path: str) -> dict:
+    if not os.path.exists(path):
+        raise SystemExit(
+            f"no dry-run results at {path!r} — generate them first with "
+            "`PYTHONPATH=src python -m repro.launch.dryrun --all` (or pass "
+            "the JSONL path as the first argument)")
     recs = {}
     with open(path) as f:
         for line in f:
@@ -36,7 +45,7 @@ def fmt_e(x: float) -> str:
 
 
 def table(recs: dict, mesh: str) -> str:
-    rows = [r for (a, s, m), r in sorted(recs.items()) if m == mesh]
+    rows = [r for (_a, _s, m), r in sorted(recs.items()) if m == mesh]
     out = ["| arch | shape | t_compute | t_memory | t_collective | "
            "bottleneck | HLO FLOPs | model FLOPs | useful | "
            "roofline frac |",
@@ -54,7 +63,7 @@ def table(recs: dict, mesh: str) -> str:
 
 
 def summary(recs: dict, mesh: str) -> str:
-    rows = [r for (a, s, m), r in sorted(recs.items()) if m == mesh]
+    rows = [r for (_a, _s, m), r in sorted(recs.items()) if m == mesh]
     worst = min(rows, key=lambda r: (
         r["t_compute"] / max(r["t_compute"], r["t_memory"],
                              r["t_collective"], 1e-30)))

@@ -1,0 +1,116 @@
+"""Pallas kernel VMEM static analyzer.
+
+Every kernel family in ``repro.kernels.ops`` publishes its per-grid-cell
+block layout as data (``ops.KERNEL_FAMILIES`` / ``ops.block_layout`` —
+the same clamp/pad arithmetic the wrappers apply, evaluated without
+tracing). This pass turns those layouts into a per-core VMEM footprint:
+pipelined in/out blocks count twice (Pallas double-buffers the
+HBM<->VMEM streams), scratch once, and the total must clear a
+configurable budget below the hardware's ~16 MB/core (see
+``/opt/skills/guides`` Pallas notes). It also validates the launch
+geometry — non-empty grids, padded dims divisible by their blocks.
+
+Two checked profiles:
+
+* ``bench`` — the tile sizes and shapes the test/bench suites actually
+  launch; these must fit with the default knobs.
+* ``paper`` — 20News scale (n=18.8k, v=69.7k, h=500) with the tuned-down
+  candidate tiles that fit. The profile is the static half of the future
+  tile autotuner (ROADMAP): :func:`footprint` is the model it will sweep.
+  ``cand_dist`` is deliberately ABSENT from the paper profile: its
+  layout rides the query's full (v, h) Phase-1 distance slab into every
+  cell, which no tile size fits at 20News scale — a known rework item,
+  recorded in ROADMAP.md, that this pass will start guarding the moment
+  the layout is tiled.
+"""
+from __future__ import annotations
+
+from repro.analysis.violations import Violation
+from repro.kernels import ops
+
+#: ~16 MB/core of VMEM on current TPUs; the default budget is the full
+#: amount — callers wanting Mosaic-register headroom pass a lower one
+#: (the CI job checks at the default).
+DEFAULT_VMEM_BUDGET_BYTES = 16 * 2**20
+
+
+def footprint(family: str, **dims) -> tuple[ops.KernelBlocks, int]:
+    """(layout, per-core VMEM bytes) of one kernel launch — the static
+    cost model the tile autotuner sweeps."""
+    layout = ops.block_layout(family, **dims)
+    return layout, layout.vmem_bytes()
+
+
+def check_configs() -> list[tuple[str, str, dict]]:
+    """(profile:family label, family, dims) for every checked launch."""
+    from repro.configs.emd_20news import CONFIG as PAPER
+
+    bench = dict(v=2048, h=64, m=32, k=8, n=4096, b=256, iters=3, qh=64)
+    out: list[tuple[str, str, dict]] = [
+        ("bench:dist_topk", "dist_topk",
+         dict(nq=8, v=bench["v"], h=bench["h"], m=bench["m"], k=bench["k"])),
+        ("bench:act_phase2", "act_phase2",
+         dict(nq=8, n=bench["n"], h=bench["h"], iters=bench["iters"])),
+        ("bench:act_phase2_cand", "act_phase2_cand",
+         dict(nq=8, n=bench["b"], h=bench["h"], iters=bench["iters"])),
+    ]
+    for mode in ("pour", "omr"):
+        out.append((f"bench:cand_pour:{mode}", "cand_pour",
+                    dict(nq=8, b=bench["b"], h=bench["h"], v=bench["v"],
+                         k=bench["k"], iters=bench["iters"], mode=mode,
+                         block_n=64)))
+    for mode in ("rev_min", "ict"):
+        out.append((f"bench:cand_dist:{mode}", "cand_dist",
+                    dict(nq=8, b=bench["b"], h=bench["h"], v=bench["v"],
+                         qh=bench["h"], mode=mode, block_n=64)))
+    # Paper scale: Phase-1/2 tiles are h/n-blocked so the defaults hold;
+    # the candidate pour needs block_n=8 (the onehot gather scratch is
+    # r = block_n * h rows and h is 500 here).
+    k = PAPER.iters + 1
+    out += [
+        ("paper:dist_topk", "dist_topk",
+         dict(nq=8, v=PAPER.vocab, h=PAPER.hmax, m=PAPER.dim, k=k)),
+        ("paper:act_phase2", "act_phase2",
+         dict(nq=8, n=PAPER.n_db, h=PAPER.hmax, iters=PAPER.iters)),
+        ("paper:cand_pour", "cand_pour",
+         dict(nq=8, b=512, h=PAPER.hmax, v=PAPER.vocab, k=k,
+              iters=PAPER.iters, block_n=8)),
+    ]
+    return out
+
+
+def check_launch(label: str, family: str, dims: dict, *,
+                 budget_bytes: int = DEFAULT_VMEM_BUDGET_BYTES,
+                 ) -> list[Violation]:
+    """Validate one launch config: layout builds, grid well-formed,
+    footprint under budget."""
+    try:
+        layout, nbytes = footprint(family, **dims)
+    except (ValueError, AssertionError) as e:
+        return [Violation("vmem", label, f"invalid launch config: {e}")]
+    out: list[Violation] = []
+    if not layout.grid or any(g < 1 for g in layout.grid):
+        out.append(Violation("vmem", label,
+                             f"degenerate grid {layout.grid}"))
+    for buf in layout.buffers:
+        if any(d < 1 for d in buf.shape) and 0 not in buf.shape:
+            out.append(Violation(
+                "vmem", label,
+                f"buffer {buf.name!r} has a negative dim: {buf.shape}"))
+    if nbytes > budget_bytes:
+        out.append(Violation(
+            "vmem", label,
+            f"per-core VMEM footprint {nbytes / 2**20:.2f} MiB exceeds "
+            f"the {budget_bytes / 2**20:.0f} MiB budget "
+            f"(grid {layout.grid}; shrink block_n/block_v/block_h)"))
+    return out
+
+
+def run(*, budget_bytes: int = DEFAULT_VMEM_BUDGET_BYTES,
+        configs=None) -> tuple[list[Violation], int]:
+    """Check every profiled launch; returns (violations, launches)."""
+    configs = check_configs() if configs is None else configs
+    out: list[Violation] = []
+    for label, family, dims in configs:
+        out += check_launch(label, family, dims, budget_bytes=budget_bytes)
+    return out, len(configs)

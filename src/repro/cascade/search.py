@@ -55,6 +55,15 @@ def topk_smallest(scores: Array, k: int, blocks: int = 1):
     ``blocks * min(k, n/blocks)`` winners. Exact for any block count —
     a block can hold at most min(k, n/blocks) of the true top-k — and
     falls back to plain ``lax.top_k`` when n does not split evenly.
+
+    The per-block selection is ``lc.streaming_smallest_k``, NOT
+    ``lax.top_k``: top_k lowers to a sort/TopK custom call the SPMD
+    partitioner cannot shard, so on the mesh it all-gathers the whole
+    (nq, blocks, n/blocks) score tensor over "model" before selecting —
+    exactly the corpus-scaled traffic this schedule exists to avoid (the
+    static collective checker's scaling guard caught it). The streaming
+    form is built from min/where/iota, which partitions shard-locally,
+    and makes the same selection (ascending, ties to the lowest column).
     """
     n = scores.shape[-1]
     if blocks > 1 and n % blocks == 0:
@@ -62,7 +71,8 @@ def topk_smallest(scores: Array, k: int, blocks: int = 1):
         kb = min(k, per)
         s = annotate.emd_shard_topk(
             scores.reshape(scores.shape[:-1] + (blocks, per)))
-        negv, li = jax.lax.top_k(-s, kb)             # shard-local top-k
+        zv, li = lc.streaming_smallest_k(s, kb)      # shard-local top-k
+        negv = -zv
         gi = li + (jnp.arange(blocks, dtype=jnp.int32) * per)[:, None]
         negv = annotate.emd_ladder(
             negv.reshape(scores.shape[:-1] + (blocks * kb,)))
@@ -97,7 +107,7 @@ def _prune(corpus: lc.Corpus, Q_ids: Array, Q_w: Array, spec: CascadeSpec,
                                iters=first.iters, engine=engine, **knobs)
     _, cand = topk_smallest(lc.mask_pad_rows(s, n_valid), budgets[0],
                             topk_blocks)
-    for stage, b in zip(spec.stages[1:], budgets[1:]):
+    for stage, b in zip(spec.stages[1:], budgets[1:], strict=True):
         sc = retrieval.cand_scores(corpus, Q_ids, Q_w, cand,
                                    method=stage.method, iters=stage.iters,
                                    **knobs)

@@ -24,11 +24,17 @@ import dataclasses
 
 from repro.core.retrieval import METHODS
 
+#: The paper's directional bound chain, loosest to tightest (Theorem 2:
+#: RWMD <= OMR <= ACT-k <= ICT <= EMD). Public: the static registry lint
+#: (``repro.analysis.registry_lint``) proves :func:`is_lower_bound` is a
+#: partial order consistent with exactly this chain.
+BOUND_CHAIN = ("rwmd", "omr", "act", "ict")
+
 #: Chain position of each directional measure in Theorem 2's hierarchy.
 #: Tightness keys are (position, iters): a stage lower-bounds a rescorer
 #: iff its key is <= the rescorer's. ``act`` with iters=0 degenerates to
 #: RWMD (position 0); iters only discriminates act-vs-act.
-_CHAIN_POS = {"rwmd": 0, "omr": 1, "act": 2, "ict": 3}
+_CHAIN_POS = {m: i for i, m in enumerate(BOUND_CHAIN)}
 
 #: Final measures every EMD lower bound PROVABLY sits below: exact EMD
 #: only. The Sinkhorn rescorer is deliberately absent — a converged
@@ -41,8 +47,10 @@ _AT_LEAST_EMD = ("emd",)
 #: Methods that provably lower-bound exact EMD without being comparable
 #: inside the directional chain: ``wcd`` (Jensen: the centroid distance
 #: under a Euclidean ground metric is below any transport cost) and
-#: ``rwmd_rev`` (the chain's opposite direction).
-_EMD_ONLY_BOUNDS = ("wcd", "rwmd_rev")
+#: ``rwmd_rev`` (the chain's opposite direction). Public for the same
+#: reason as :data:`BOUND_CHAIN`.
+EMD_ONLY_BOUNDS = ("wcd", "rwmd_rev")
+_EMD_ONLY_BOUNDS = EMD_ONLY_BOUNDS
 
 
 def _tightness(method: str, iters: int) -> tuple[int, int] | None:
@@ -140,7 +148,7 @@ class CascadeSpec:
                  if isinstance(s.budget, float)]
         ints = [s.budget for s in self.stages if isinstance(s.budget, int)]
         for seq in (fracs, ints):
-            if any(b > a for a, b in zip(seq, seq[1:])):
+            if any(b > a for a, b in zip(seq, seq[1:], strict=False)):
                 raise ValueError(
                     "stage budgets must be non-increasing (each stage "
                     f"prunes), got {[s.budget for s in self.stages]}")
@@ -218,7 +226,20 @@ CASCADES: dict[str, CascadeSpec] = {
 }
 
 
-def resolve_spec(spec: "CascadeSpec | str") -> CascadeSpec:
+#: Declared admissibility of every preset — the documentation claim each
+#: preset's comment makes, as data. The registry lint recomputes
+#: ``CASCADES[name].admissible`` and fails if code and claim diverge
+#: (e.g. an edit to the bound table silently flipping a preset's
+#: exactness guarantee).
+PRESET_ADMISSIBLE: dict[str, bool] = {
+    "fast": False,      # wcd bounds exact EMD only, not the act rescorer
+    "chain": True,
+    "tight": True,
+    "exact": True,
+}
+
+
+def resolve_spec(spec: CascadeSpec | str) -> CascadeSpec:
     """A CascadeSpec passes through; a string resolves in :data:`CASCADES`."""
     if isinstance(spec, CascadeSpec):
         return spec

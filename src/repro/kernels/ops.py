@@ -10,7 +10,9 @@ semantics explicitly rather than relying on backend detection.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+import math
 import os
 
 import jax
@@ -230,3 +232,204 @@ def cand_ict(idsg: jax.Array, xg: jax.Array, Dq: jax.Array,
     a ~1e-7 cumsum residue would explode to ~1e23.
     """
     return _cand_dist(idsg, xg, Dq, qw, "ict", block_n, block_v)
+
+
+# --------------------------------------------------- static block metadata
+#
+# The per-grid-cell block layout of every kernel family, as DATA: the same
+# clamp/pad arithmetic the wrappers above apply, but evaluated without
+# tracing anything. ``repro.analysis.vmem`` turns these layouts into a
+# static VMEM-footprint model (checked in CI, swept by the future tile
+# autotuner), so any change to a wrapper's blocking MUST be mirrored here
+# — the conformance test pins the two against each other on the padded
+# shapes the wrappers actually launch.
+
+_DTYPE_BYTES = {"float32": 4, "int32": 4, "bfloat16": 2, "float16": 2,
+                "int8": 1, "uint8": 1, "bool": 1}
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockBuffer:
+    """One VMEM-resident buffer of a kernel grid cell.
+
+    role: ``in`` / ``out`` blocks are pipelined by Pallas (double-buffered
+    while the grid streams, so they count twice in the footprint);
+    ``scratch`` covers the kernel body's dominant temporaries (single
+    copy). The scratch entries are a documented lower-ish bound — Mosaic
+    may materialize more registers — which is why the VMEM budget the
+    checker enforces leaves headroom below the hardware's ~16 MB.
+    """
+    name: str
+    shape: tuple[int, ...]
+    dtype: str = "float32"
+    role: str = "in"
+
+    def __post_init__(self) -> None:
+        assert self.role in ("in", "out", "scratch"), self.role
+        assert self.dtype in _DTYPE_BYTES, self.dtype
+
+    @property
+    def nbytes(self) -> int:
+        return math.prod(self.shape) * _DTYPE_BYTES[self.dtype]
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelBlocks:
+    """Static description of one kernel launch: grid + per-cell buffers."""
+    family: str
+    grid: tuple[int, ...]
+    buffers: tuple[BlockBuffer, ...]
+
+    def vmem_bytes(self, *, pipeline_depth: int = 2) -> int:
+        """Per-core VMEM footprint of one grid cell: pipelined in/out
+        blocks count ``pipeline_depth`` times (Pallas double-buffers the
+        HBM<->VMEM streams by default), scratch once."""
+        total = 0
+        for b in self.buffers:
+            total += b.nbytes * (1 if b.role == "scratch" else pipeline_depth)
+        return total
+
+    def buffer(self, name: str) -> BlockBuffer:
+        for b in self.buffers:
+            if b.name == name:
+                return b
+        raise KeyError(f"{self.family} has no buffer {name!r}; "
+                       f"have {[b.name for b in self.buffers]}")
+
+
+def _positive(**dims) -> None:
+    bad = {k: v for k, v in dims.items() if v < 1}
+    if bad:
+        raise ValueError(f"kernel dims/blocks must be >= 1, got {bad}")
+
+
+def _dist_topk_layout(*, nq: int, v: int, h: int, m: int, k: int,
+                      block_v: int = 256, block_h: int = 256) -> KernelBlocks:
+    _positive(nq=nq, v=v, h=h, m=m, k=k, block_v=block_v, block_h=block_h)
+    block_v = min(block_v, _round_up(v, 8))
+    block_h = min(block_h, _round_up(h, 8))
+    vp, hp = _round_up(v, block_v), _round_up(h, block_h)
+    return KernelBlocks(
+        family="dist_topk",
+        grid=(nq, vp // block_v, hp // block_h),
+        buffers=(
+            BlockBuffer("coords", (block_v, m)),
+            BlockBuffer("qcs", (1, block_h, m)),
+            BlockBuffer("qmask", (1, 1, block_h)),
+            BlockBuffer("z", (1, block_v, k), role="out"),
+            BlockBuffer("s", (1, block_v, k), "int32", "out"),
+            # the (bv, bh) distance tile + its global column ids — the
+            # body's working set that never leaves VMEM
+            BlockBuffer("dist_tile", (block_v, block_h), role="scratch"),
+            BlockBuffer("col_ids", (block_v, block_h), "int32", "scratch"),
+        ))
+
+
+def _act_phase2_layout(*, nq: int, n: int, h: int, iters: int,
+                       block_n: int = 256, block_h: int = 256,
+                       per_query_x: bool = False) -> KernelBlocks:
+    _positive(nq=nq, n=n, h=h, block_n=block_n, block_h=block_h)
+    if iters < 0:
+        raise ValueError(f"iters must be >= 0, got {iters}")
+    block_n = min(block_n, _round_up(n, 8))
+    block_h = min(block_h, _round_up(h, 8))
+    np_, hp = _round_up(n, block_n), _round_up(h, block_h)
+    x_shape = (1, block_n, block_h) if per_query_x else (block_n, block_h)
+    return KernelBlocks(
+        family="act_phase2_cand" if per_query_x else "act_phase2",
+        grid=(nq, np_ // block_n, hp // block_h),
+        buffers=(
+            BlockBuffer("x", x_shape),
+            BlockBuffer("zg", (1, block_n, block_h, iters + 1)),
+            BlockBuffer("wg", (1, block_n, block_h, iters)),
+            BlockBuffer("t", (1, block_n, 1), role="out"),
+            # pour temporaries: acc / prefix / poured / r, each (bn, bh)
+            BlockBuffer("pour_tmp", (4, block_n, block_h), role="scratch"),
+        ))
+
+
+def _cand_table_width(mode: str, k: int, iters: int) -> int:
+    if mode == "omr":
+        return 3                                   # Z top-2 + W0
+    return k + iters                               # Z ladder + W ladder
+
+
+def _cand_pour_layout(*, nq: int, b: int, h: int, v: int, k: int,
+                      iters: int, mode: str = "pour", block_n: int = 128,
+                      block_v: int = 256) -> KernelBlocks:
+    from repro.kernels.cand_pour import POUR_MODES
+    assert mode in POUR_MODES, mode
+    _positive(nq=nq, b=b, h=h, v=v, k=k, block_n=block_n, block_v=block_v)
+    width = _cand_table_width(mode, k, iters)
+    block_n = min(block_n, _round_up(b, 8))
+    block_v = min(block_v, _round_up(v, 8))
+    bp, vp = _round_up(b, block_n), _round_up(v, block_v)
+    r = block_n * h
+    return KernelBlocks(
+        family="cand_pour",
+        grid=(nq, bp // block_n),
+        buffers=(
+            BlockBuffer("idsg", (1, block_n, h), "int32"),
+            BlockBuffer("xg", (1, block_n, h)),
+            # the query's FULL padded Phase-1 ladder rides in every cell
+            BlockBuffer("table", (1, vp, width)),
+            BlockBuffer("t", (1, block_n), role="out"),
+            BlockBuffer("onehot", (r, block_v), role="scratch"),
+            BlockBuffer("gathered", (r, width), role="scratch"),
+            BlockBuffer("chunk", (block_v, width), role="scratch"),
+        ))
+
+
+def _cand_dist_layout(*, nq: int, b: int, h: int, v: int, qh: int,
+                      mode: str = "rev_min", block_n: int = 128,
+                      block_v: int = 256) -> KernelBlocks:
+    from repro.kernels.cand_pour import DIST_MODES
+    assert mode in DIST_MODES, mode
+    _positive(nq=nq, b=b, h=h, v=v, qh=qh, block_n=block_n, block_v=block_v)
+    block_n = min(block_n, _round_up(b, 8))
+    block_v = min(block_v, _round_up(v, 8))
+    bp, vp = _round_up(b, block_n), _round_up(v, block_v)
+    r = block_n * h
+    scratch = [
+        BlockBuffer("onehot", (r, block_v), role="scratch"),
+        BlockBuffer("gathered", (r, qh), role="scratch"),
+        # rev_min: the PAD_DIST-masked copy; ict: ict_pour's sorted
+        # ladder + cumsum, ~2 extra copies of the gathered cost tile
+        BlockBuffer("reduce_tmp",
+                    ((1 if mode == "rev_min" else 2) * r, qh),
+                    role="scratch"),
+    ]
+    return KernelBlocks(
+        family="cand_dist",
+        grid=(nq, bp // block_n),
+        buffers=(
+            BlockBuffer("idsg", (1, block_n, h), "int32"),
+            BlockBuffer("xg", (1, block_n, h)),
+            BlockBuffer("dq", (1, vp, qh)),
+            BlockBuffer("qw", (1, qh)),
+            BlockBuffer("t", (1, block_n), role="out"),
+            *scratch,
+        ))
+
+
+#: family name -> layout function. The enumerable surface
+#: ``repro.analysis.vmem`` iterates; every pallas_call in this package
+#: belongs to exactly one family (``cand_pour`` covers modes pour/omr,
+#: ``cand_dist`` modes rev_min/ict via the ``mode`` kwarg).
+KERNEL_FAMILIES = {
+    "dist_topk": _dist_topk_layout,
+    "act_phase2": _act_phase2_layout,
+    "act_phase2_cand": functools.partial(_act_phase2_layout,
+                                         per_query_x=True),
+    "cand_pour": _cand_pour_layout,
+    "cand_dist": _cand_dist_layout,
+}
+
+
+def block_layout(family: str, **dims) -> KernelBlocks:
+    """Static per-cell block layout of one kernel launch (see
+    :data:`KERNEL_FAMILIES` for the per-family dim kwargs)."""
+    if family not in KERNEL_FAMILIES:
+        raise ValueError(f"unknown kernel family {family!r}; "
+                         f"one of {sorted(KERNEL_FAMILIES)}")
+    return KERNEL_FAMILIES[family](**dims)

@@ -16,6 +16,7 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod both]
 """
 import argparse
+import contextlib
 import json
 import sys
 import time
@@ -161,10 +162,8 @@ def main() -> None:
         try:
             v = int(v)
         except ValueError:
-            try:
+            with contextlib.suppress(ValueError):
                 v = float(v)
-            except ValueError:
-                pass
         overrides[k] = v
     overrides = overrides or None
 

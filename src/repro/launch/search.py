@@ -39,6 +39,8 @@ Sharding (DESIGN.md section 2):
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -256,3 +258,104 @@ def jit_cascade_search_step(workload, mesh, spec, top_l: int = 16,
                                     topk_blocks=blocks, **score_kw)
     in_sh, out_sh = search_shardings(mesh, workload)
     return jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+
+
+# ---------------------------------------------------------------------------
+# Enumerable step registry — the surface ``repro.analysis.check`` iterates.
+#
+# Every servable mesh program this module can build, as data: the static
+# checkers (collective-contract, jaxpr-hazard) walk these cases instead of
+# hard-coding method lists, so a newly registered method or preset is
+# covered by CI the moment it lands in ``retrieval.METHODS`` / ``CASCADES``.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StepCase:
+    """One enumerable step program.
+
+    kind:          ``scores`` | ``search`` | ``cascade``.
+    method:        registry method (``None`` for cascade cases — the spec
+                   carries its own stage methods).
+    engine:        ``dist`` (the serving pipeline) or ``scan`` (the
+                   per-query verification graphs).
+    cascade:       CascadeSpec or preset name for ``kind="cascade"``.
+    scale_guarded: True when the case promises corpus-size-independent
+                   all-gather traffic (the PR-4 "score matrix never
+                   crosses the mesh" contract): the checker compiles it
+                   at two corpus sizes and fails on O(n) all-gather
+                   growth. False for plain ``search`` (``lax.top_k``
+                   does not partition, so its top-l legitimately gathers
+                   scores — the cascade step exists to avoid exactly
+                   that) and for fractional-budget cascades (candidate
+                   counts scale with n BY DESIGN).
+    """
+    name: str
+    kind: str
+    method: str | None
+    engine: str
+    cascade: object = None
+    scale_guarded: bool = False
+
+
+def step_cases(*, engines: tuple[str, ...] = ("dist", "scan"),
+               include_search: bool = True,
+               include_cascades: bool = True) -> tuple[StepCase, ...]:
+    """Every (kind x method x engine) step the mesh serves, plus the
+    jittable cascade presets and one absolute-budget admissible ladder
+    (``cascade:pinned``) whose collective traffic must NOT scale with the
+    corpus — fractional presets grow their candidate sets with n, so only
+    the pinned ladder can carry the scaling guard."""
+    cases = [
+        StepCase(f"scores:{method}:{engine}", "scores", method, engine,
+                 scale_guarded=engine == "dist")
+        for method in sorted(retrieval.METHODS)
+        for engine in engines
+    ]
+    if include_search:
+        cases += [StepCase(f"search:act:{engine}", "search", "act", engine)
+                  for engine in engines]
+    if include_cascades:
+        from repro import cascade as Cx
+        from repro.cascade import rescore
+        for preset in sorted(Cx.CASCADES):
+            if rescore.resolve(Cx.CASCADES[preset].rescorer).jittable:
+                cases.append(StepCase(f"cascade:{preset}:dist", "cascade",
+                                      None, "dist", cascade=preset))
+        pinned = Cx.CascadeSpec(
+            stages=(Cx.CascadeStage("rwmd", 24),
+                    Cx.CascadeStage("act", 8, iters=2)),
+            rescorer="ict")
+        cases.append(StepCase("cascade:pinned:dist", "cascade", None,
+                              "dist", cascade=pinned, scale_guarded=True))
+    return tuple(cases)
+
+
+def build_step(case: StepCase, workload, mesh=None, *, top_l: int = 4,
+               pad_multiple: int = DEFAULT_ROW_PAD_MULTIPLE, **score_kw):
+    """Build one registry case for ``workload``: the jitted mesh program
+    when ``mesh`` is given (collective checker), the raw traceable
+    callable when it is ``None`` (jaxpr hazard walker — no devices
+    needed). ``score_kw`` are the usual batch knobs."""
+    if case.kind == "scores":
+        if mesh is not None:
+            return jit_scores_step(workload, mesh, method=case.method,
+                                   engine=case.engine, **score_kw)
+        return make_scores_step(workload.iters, method=case.method,
+                                engine=case.engine, **score_kw)
+    if case.kind == "search":
+        if mesh is not None:
+            return jit_search_step(workload, mesh, top_l=top_l,
+                                   method=case.method, engine=case.engine,
+                                   **score_kw)
+        return make_search_step(workload.iters, top_l,
+                                n_valid=workload.n_db, method=case.method,
+                                engine=case.engine, **score_kw)
+    assert case.kind == "cascade", case.kind
+    if mesh is not None:
+        return jit_cascade_search_step(workload, mesh, case.cascade,
+                                       top_l=top_l,
+                                       pad_multiple=pad_multiple,
+                                       engine=case.engine, **score_kw)
+    return make_cascade_search_step(case.cascade, top_l, workload.n_db,
+                                    engine=case.engine, **score_kw)

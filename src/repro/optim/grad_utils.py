@@ -3,7 +3,8 @@ int8 stochastic-rounding gradient compression (for the cross-pod reduce).
 """
 from __future__ import annotations
 
-from typing import Any, Callable
+from collections.abc import Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -69,7 +70,7 @@ def compressed_psum_tree(grads: Any, key: jax.Array, axis_name: str) -> Any:
     leaves, treedef = jax.tree.flatten(grads)
     keys = jax.random.split(key, len(leaves))
     out = []
-    for leaf, k in zip(leaves, keys):
+    for leaf, k in zip(leaves, keys, strict=True):
         # Share ONE scale across the axis first (scalar pmax — cheap), so the
         # int8 payloads are additive under psum.
         local_max = jnp.maximum(jnp.max(jnp.abs(leaf.astype(jnp.float32))),

@@ -20,7 +20,8 @@ from __future__ import annotations
 import dataclasses
 import statistics
 import time
-from typing import Any, Callable
+from collections.abc import Callable
+from typing import Any
 
 from repro.checkpoint import store
 

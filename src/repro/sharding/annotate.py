@@ -68,7 +68,9 @@ def constrain(x, *spec):
     if mesh is None:
         return x
     fixed = []
-    for dim, ax in zip(x.shape, spec):
+    # strict=False: a spec shorter than the rank is PartitionSpec
+    # shorthand for replicated trailing dims.
+    for dim, ax in zip(x.shape, spec, strict=False):
         if ax is None:
             fixed.append(None)
             continue

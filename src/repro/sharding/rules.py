@@ -66,7 +66,7 @@ _REPLICATED = {"scale", "norm", "conv_w", "conv_b", "a_log", "dt_bias",
 
 def _divides(shape: tuple[int, ...], spec: tuple[Axis, ...],
              mesh: Mesh) -> bool:
-    for dim, ax in zip(shape, spec):
+    for dim, ax in zip(shape, spec, strict=True):
         if ax is None:
             continue
         axes = (ax,) if isinstance(ax, str) else ax

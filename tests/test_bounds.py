@@ -46,7 +46,7 @@ def test_theorem2_chain(data, overlap):
         float(ict(p, q, C)),
         emd_exact(p, q, C),
     ]
-    for lo, hi in zip(vals, vals[1:]):
+    for lo, hi in zip(vals, vals[1:], strict=False):
         assert lo <= hi + 1e-5, vals
 
 

@@ -153,7 +153,7 @@ def test_ict_registered_and_chain_position(corpus_labels):
                                                iters=it))
              for m, it in (("rwmd", 0), ("omr", 0), ("act", 1),
                            ("act", 3), ("ict", 0))]
-    for lo, hi in zip(chain, chain[1:]):
+    for lo, hi in zip(chain, chain[1:], strict=False):
         assert (lo <= hi + 1e-5).all()
 
 
@@ -313,7 +313,7 @@ def _check_admissible_exactness(rescorer: str, seed: int,
     budgets = _rank_budgets(stage_scores, ref_idx, top_l)
     spec = CascadeSpec(
         stages=tuple(CascadeStage(m, b, iters=it)
-                     for (m, it), b in zip(stages, budgets)),
+                     for (m, it), b in zip(stages, budgets, strict=True)),
         rescorer=rescorer, rescorer_iters=iters)
     # sinkhorn is deliberately outside the provable table (its
     # fixed-iteration plan is not exactly feasible); rank-covering
@@ -375,9 +375,10 @@ def test_cascade_kernel_path_matches_reference_path(corpus_labels):
               for m, it in stages]
         results[uk] = (_rank_budgets(ss, ref_idx, top_l), ref_idx)
     budgets = [max(a, b) for a, b in zip(results[False][0],
-                                         results[True][0])]
+                                         results[True][0], strict=True)]
     spec = CascadeSpec(stages=tuple(CascadeStage(m, b, iters=it)
-                                    for (m, it), b in zip(stages, budgets)),
+                                    for (m, it), b in zip(stages, budgets,
+                                                          strict=True)),
                        rescorer="act", rescorer_iters=iters)
     assert spec.admissible
     res_r = cascade.cascade_search(c, qi, qw, spec, top_l)

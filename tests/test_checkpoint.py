@@ -21,7 +21,8 @@ def test_roundtrip(tmp_path, tree):
     store.save(d, 7, tree, extra={"loss": 1.5})
     assert store.latest_step(d) == 7
     out = store.restore(d, 7, tree)
-    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out),
+                    strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     assert store.restore_extra(d, 7)["loss"] == 1.5
 

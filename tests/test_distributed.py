@@ -85,12 +85,12 @@ mesh4 = jax.make_mesh((2, 2), ("data", "model"))
 p8 = elastic.restore_on_mesh(d, 5, params, mesh8)
 p4 = elastic.restore_on_mesh(d, 5, params, mesh4)
 for a, b, c in zip(jax.tree.leaves(params), jax.tree.leaves(p8),
-                   jax.tree.leaves(p4)):
+                   jax.tree.leaves(p4), strict=True):
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
 # live reshard between meshes
 p4b = elastic.reshard_live(p8, mesh4)
-for a, b in zip(jax.tree.leaves(p8), jax.tree.leaves(p4b)):
+for a, b in zip(jax.tree.leaves(p8), jax.tree.leaves(p4b), strict=True):
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 print("ELASTIC OK")
 """)
@@ -305,7 +305,7 @@ for rescorer, stages in (("act", (("rwmd", 0), ("omr", 0))),
         budgets[i] = max(budgets[i], budgets[i + 1])
     spec = CascadeSpec(stages=tuple(
         CascadeStage(m, b, iters=it)
-        for (m, it), b in zip(stages, budgets)),
+        for (m, it), b in zip(stages, budgets, strict=True)),
         rescorer=rescorer, rescorer_iters=iters)
     assert spec.admissible
 
@@ -382,11 +382,11 @@ for uk in (False, True):
                        int(np.take_along_axis(rank, ref_idx,
                                               axis=1).max()) + 1))
     budget_req.append(req)
-budgets = [max(a, b) for a, b in zip(*budget_req)]
+budgets = [max(a, b) for a, b in zip(*budget_req, strict=True)]
 for i in range(len(budgets) - 2, -1, -1):
     budgets[i] = max(budgets[i], budgets[i + 1])
 spec = CascadeSpec(stages=tuple(CascadeStage(m, b, iters=it)
-                                for (m, it), b in zip(stages, budgets)),
+                                for (m, it), b in zip(stages, budgets, strict=True)),
                    rescorer="act", rescorer_iters=iters)
 assert spec.admissible
 
@@ -458,3 +458,59 @@ np.testing.assert_array_equal(np.asarray(i_ref), np.asarray(i_dst))
 print("INDEX DIST OK")
 """)
     assert "INDEX DIST OK" in out
+
+
+@pytest.mark.slow
+def test_static_check_cli_clean_on_main():
+    """The full static-check CLI (registry + hazards + vmem +
+    collectives vs the committed golden manifest) exits 0 on the repo as
+    it stands — the same invocation CI's static-checks job runs."""
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.check"], env=_ENV,
+        capture_output=True, text=True, cwd=".", timeout=600)
+    assert res.returncode == 0, res.stdout + "\n" + res.stderr
+    for passname in ("registry", "hazards", "vmem", "collectives"):
+        assert f"PASS {passname}" in res.stdout, res.stdout
+
+
+@pytest.mark.slow
+def test_collective_scaling_guard_catches_seeded_gather():
+    """Seed the violation the scaling guard exists for: a step whose
+    (nq, n) score matrix is forced replicated (one all-gather of the
+    whole matrix over 'model'), compiled at the guard's two corpus
+    sizes. The guard must flag it, and must stay quiet on the real
+    registry-built steps at the same sizes."""
+    out = _run("""
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.analysis import collectives_check as C
+from repro.launch import search as S
+
+mesh = C.make_mesh()
+cases = {c.name: c for c in S.step_cases()}
+case = cases["scores:rwmd:dist"]
+
+def bad_step_fn(workload):
+    step = S.make_scores_step(workload.iters, method="rwmd", engine="dist")
+    def bad(ids, w, coords, q_ids, q_w):
+        s = step(ids, w, coords, q_ids, q_w)
+        # Replicate the (nq, n) score matrix: the corpus-scaled
+        # all-gather the shard-local contract forbids.
+        return jax.lax.with_sharding_constraint(
+            s, NamedSharding(mesh, P(None, None)))
+    in_sh, _ = S.search_shardings(mesh, workload)
+    return jax.jit(bad, in_shardings=in_sh,
+                   out_shardings=NamedSharding(mesh, P(None, None)))
+
+n0, n1 = C.SCALE_N_DBS
+violations = C.check_scaling(
+    case, mesh,
+    small_fn=bad_step_fn(C.check_workload(n0)),
+    big_fn=bad_step_fn(C.check_workload(n1)))
+assert violations, "seeded corpus-scaled all-gather not flagged"
+assert "scale with the corpus" in violations[0].message, violations
+assert C.check_scaling(case, mesh) == []          # real step stays clean
+assert C.check_scaling(cases["cascade:pinned:dist"], mesh) == []
+print("SCALING GUARD OK", violations[0].message[:60])
+""")
+    assert "SCALING GUARD OK" in out

@@ -28,7 +28,7 @@ def test_schedule_shape():
     assert lrs[0] == 0.0
     assert abs(lrs[10] - 1.0) < 1e-6
     assert lrs[100] <= 0.1 + 1e-6
-    assert all(a >= b - 1e-9 for a, b in zip(lrs[10:], lrs[11:]))  # decay
+    assert all(a >= b - 1e-9 for a, b in zip(lrs[10:], lrs[11:], strict=False))  # decay
 
 
 def test_clip_by_global_norm():

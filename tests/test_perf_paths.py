@@ -78,7 +78,7 @@ def test_remat_policy_dots_same_loss_and_grads():
     l1, g1 = jax.value_and_grad(lambda p: M.train_loss(p, batch, cfg))(params)
     l2, g2 = jax.value_and_grad(lambda p: M.train_loss(p, batch, cfg_d))(params)
     assert abs(float(l1) - float(l2)) < 1e-6
-    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2), strict=True):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32), atol=1e-5)
 

@@ -25,8 +25,9 @@ MESH2 = FakeMesh({"pod": 2, "data": 16, "model": 16})
 
 def _check_divisible(tree, specs, mesh):
     for leaf, spec in zip(jax.tree.leaves(tree),
-                          jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, P))):
-        for dim, ax in zip(leaf.shape, tuple(spec)):
+                          jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, P)),
+                          strict=True):
+        for dim, ax in zip(leaf.shape, tuple(spec), strict=False):
             if ax is None:
                 continue
             axes = (ax,) if isinstance(ax, str) else ax

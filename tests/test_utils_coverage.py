@@ -44,7 +44,7 @@ def test_wmd_search_exact_ranking_consistency():
     # WMD distances dominate the RWMD lower bounds
     from repro.core.lc import lc_rwmd_scores
     lb = np.asarray(lc_rwmd_scores(corpus, corpus.ids[0], corpus.w[0]))
-    for u, v in zip(idx, val):
+    for u, v in zip(idx, val, strict=True):
         assert v >= lb[u] - 1e-5
 
 
