@@ -1,0 +1,188 @@
+"""Online serving runtime under offered load and injected faults.
+
+Drives ``repro.serving.EmdServer`` — the micro-batching queue plus the
+degradation ladder — with seeded open-loop traffic (exponential
+inter-arrivals) at several offered loads and records, per load level:
+
+* request latency p50 / p99 (ms, enqueue -> resolved future),
+* the served-tier mix (how often the ladder degraded, and to what),
+* micro-batch shape stats (launches, flushes, bucket histogram), and
+* sheds (requests fast-failed after the whole ladder was exhausted).
+
+A final CHAOS entry replays deterministic traffic under a seeded
+:class:`~repro.serving.ChaosSchedule` (the same schedules the chaos test
+suite proves correct: every request completes, degraded tiers labeled,
+zero wrong results) and asserts the served-tier mix reproduces exactly
+under the fixed seed — run twice, compared byte for byte.
+
+Results append to the CSV stream and land in ``BENCH_serve.json`` (repo
+root, override with BENCH_SERVE_JSON). ``BENCH_SMOKE=1`` shrinks corpus,
+load levels, and request counts to CI smoke sizes.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import os
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, text_corpus
+from repro.api import EmdIndex, EngineConfig
+from repro.serving import (ChaosInjector, ChaosSchedule, EmdServer,
+                           ServerOverloaded, ServingPolicy)
+
+#: Offered load levels in requests/sec (open loop: arrivals don't wait
+#: for completions, so overload shows up as queueing + degradation).
+LOADS = (50.0, 200.0, 800.0)
+LOADS_SMOKE = (50.0, 400.0)
+
+CHAOS_SEED = 17
+CHAOS_P_FAIL = 0.25
+
+
+def _sizes(smoke: bool) -> dict:
+    if smoke:
+        return dict(n_docs=64, n_classes=4, vocab=192, m=16, doc_len=24,
+                    hmax=16, top_l=4, n_req=32, iters=2)
+    return dict(n_docs=512, n_classes=8, vocab=512, m=16, doc_len=20,
+                hmax=16, top_l=8, n_req=192, iters=3)
+
+
+def _policy() -> ServingPolicy:
+    return ServingPolicy(ladder=("primary", "fast", "wcd"), max_batch=16,
+                         flush_ms=2.0, deadline_ms=500.0, max_retries=1,
+                         backoff_ms=0.5)
+
+
+async def _drive_open_loop(server: EmdServer, corpus, n_req: int,
+                           qps: float, seed: int):
+    """Seeded open-loop arrivals; returns (results, sheds)."""
+    rng = np.random.default_rng(seed)
+    at = np.cumsum(rng.exponential(1.0 / qps, n_req))
+    results, sheds = [], 0
+
+    async def one(k: int, t: float):
+        nonlocal sheds
+        await asyncio.sleep(t)
+        try:
+            results.append(await server.search(corpus.ids[k % corpus.n],
+                                               corpus.w[k % corpus.n]))
+        except ServerOverloaded:
+            sheds += 1
+
+    await asyncio.gather(*[one(k, float(at[k])) for k in range(n_req)])
+    return results, sheds
+
+
+def _mix(results) -> dict[str, int]:
+    mix: dict[str, int] = {}
+    for r in results:
+        mix[r.tier] = mix.get(r.tier, 0) + 1
+    return dict(sorted(mix.items()))
+
+
+def _load_entry(index, corpus, qps: float, n_req: int) -> dict:
+    async def go():
+        async with EmdServer(index, _policy()) as server:
+            # Warm every primary (tier, bucket) jit shape out of the
+            # measurement: a burst per power-of-two bucket.
+            b = 1
+            while b <= server.policy.max_batch:
+                await asyncio.gather(*[
+                    server.search(corpus.ids[k % corpus.n],
+                                  corpus.w[k % corpus.n])
+                    for k in range(b)])
+                b <<= 1
+            server.stats = type(server.stats)()     # measured run only
+            results, sheds = await _drive_open_loop(
+                server, corpus, n_req, qps, seed=int(qps))
+            return results, sheds, server.stats
+    results, sheds, stats = asyncio.run(go())
+    lat = np.asarray([r.latency_ms for r in results])
+    p50 = float(np.percentile(lat, 50)) if lat.size else float("nan")
+    p99 = float(np.percentile(lat, 99)) if lat.size else float("nan")
+    degraded = sum(1 for r in results if r.degraded)
+    entry = dict(
+        offered_qps=qps, n_requests=n_req,
+        completed=len(results) + sheds, served=len(results), shed=sheds,
+        p50_ms=round(p50, 3), p99_ms=round(p99, 3),
+        tier_mix=_mix(results), degraded=degraded,
+        launches=stats.launches, flushes=stats.flushes,
+        bucket_launches={str(k): v for k, v in
+                         sorted(stats.bucket_launches.items())})
+    emit(f"bench_serve.load{int(qps)}", p50 * 1e3,
+         f"p99_ms={p99:.1f} served={len(results)} shed={sheds} "
+         f"degraded={degraded} launches={stats.launches}")
+    return entry
+
+
+def _chaos_run(index, corpus, n_req: int) -> dict:
+    """Sequential deterministic traffic under a seeded fault schedule;
+    launch order is then a pure function of the schedule, so the tier
+    sequence must reproduce exactly."""
+    schedule = ChaosSchedule.from_seed(CHAOS_SEED, horizon=8 * n_req,
+                                       p_fail=CHAOS_P_FAIL)
+
+    def once():
+        chaos = ChaosInjector(schedule)
+
+        async def go():
+            async with EmdServer(index, _policy(),
+                                 launch_hook=chaos) as server:
+                tiers, sheds, lat = [], 0, []
+                for k in range(n_req):
+                    try:
+                        r = await server.search(
+                            corpus.ids[k % corpus.n],
+                            corpus.w[k % corpus.n])
+                        tiers.append(r.tier)
+                        lat.append(r.latency_ms)
+                    except ServerOverloaded:
+                        sheds += 1
+                        tiers.append("SHED")
+                return tiers, sheds, lat, server.stats
+        return asyncio.run(go()) + (chaos,)
+
+    tiers_a, sheds_a, lat, stats, chaos = once()
+    tiers_b, sheds_b, *_ = once()
+    mix = {t: tiers_a.count(t) for t in sorted(set(tiers_a))}
+    completed = len(tiers_a)            # served or fast-failed, no hangs
+    entry = dict(
+        seed=CHAOS_SEED, p_fail=CHAOS_P_FAIL, n_requests=n_req,
+        completed=completed, shed=sheds_a,
+        tier_mix=mix, launch_failures=stats.launch_failures,
+        injected_faults=sum(1 for e in chaos.log if e[2] == "fail"),
+        p50_ms=round(float(np.percentile(lat, 50)), 3) if lat else None,
+        deterministic=bool(tiers_a == tiers_b and sheds_a == sheds_b))
+    emit("bench_serve.chaos", entry["p50_ms"] * 1e3 if lat else 0.0,
+         f"completed={completed}/{n_req} shed={sheds_a} "
+         f"failures={stats.launch_failures} "
+         f"deterministic={entry['deterministic']}")
+    return entry
+
+
+def run() -> None:
+    smoke = os.environ.get("BENCH_SMOKE", "0") not in ("0", "")
+    sz = _sizes(smoke)
+    n_req, top_l, iters = sz.pop("n_req"), sz.pop("top_l"), sz.pop("iters")
+    corpus, _ = text_corpus(**sz, seed=11)
+    index = EmdIndex.build(corpus, EngineConfig(method="act", iters=iters,
+                                                top_l=top_l))
+    report = {"bench": "bench_serve", "smoke": smoke,
+              "sizes": dict(sz, n_req=n_req, top_l=top_l, iters=iters),
+              "backend": jax.default_backend(),
+              "ladder": list(_policy().ladder), "entries": []}
+    for qps in (LOADS_SMOKE if smoke else LOADS):
+        report["entries"].append(_load_entry(index, corpus, qps, n_req))
+    report["chaos"] = _chaos_run(index, corpus, n_req)
+
+    path = os.environ.get("BENCH_SERVE_JSON", "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    run()

@@ -8,6 +8,7 @@
   kernels_bench      DESIGN 2   kernel traffic/fusion model
   bench_batch        serving    batched vs scanned queries/sec (+ JSON)
   bench_cascade      serving    cascaded prune-and-rescore recall/qps (+ JSON)
+  bench_serve        serving    online runtime latency/tier mix vs load (+ JSON)
 
 Each prints ``name,us_per_call,derived`` CSV rows. All retrieval-bench
 entry points score through the unified ``repro.api.EmdIndex`` serving API
@@ -28,11 +29,12 @@ def main() -> None:
                     help="substring filter on benchmark module names")
     args = ap.parse_args()
 
-    from benchmarks import (bench_batch, bench_cascade, fig8_tradeoff,
-                            kernels_bench, sinkhorn_compare,
+    from benchmarks import (bench_batch, bench_cascade, bench_serve,
+                            fig8_tradeoff, kernels_bench, sinkhorn_compare,
                             table3_complexity, table5_mnist, table6_dense)
     mods = [table6_dense, table5_mnist, fig8_tradeoff, sinkhorn_compare,
-            table3_complexity, kernels_bench, bench_batch, bench_cascade]
+            table3_complexity, kernels_bench, bench_batch, bench_cascade,
+            bench_serve]
     print("name,us_per_call,derived")
     failures = 0
     for mod in mods:

@@ -16,6 +16,11 @@ Validated:
   settings present (the kernel path must not silently drop out of the
   bench matrix); a ``distributed_step`` record with recall + qps; all
   recalls inside [0, 1].
+* ``BENCH_serve.json`` — non-empty per-load ``entries`` each carrying
+  latency percentiles (``p50_ms <= p99_ms``), a served-tier mix, and
+  100% request completion (served + shed == offered — the runtime never
+  hangs a request); a ``chaos`` record whose seeded fault replay
+  completed every request AND reproduced deterministically.
 """
 from __future__ import annotations
 
@@ -26,6 +31,7 @@ from repro.analysis.violations import Violation
 
 BATCH_PATH = "BENCH_batch.json"
 CASCADE_PATH = "BENCH_cascade.json"
+SERVE_PATH = "BENCH_serve.json"
 
 
 def _load(path: str) -> tuple[dict | None, list[Violation]]:
@@ -98,6 +104,54 @@ def check_cascade(path: str = CASCADE_PATH) -> list[Violation]:
     return out
 
 
-def run(*, batch_path: str = BATCH_PATH,
-        cascade_path: str = CASCADE_PATH) -> tuple[list[Violation], int]:
-    return check_batch(batch_path) + check_cascade(cascade_path), 2
+def check_serve(path: str = SERVE_PATH) -> list[Violation]:
+    r, out = _load(path)
+    if r is None:
+        return out
+    entries = r.get("entries") or []
+    if not entries:
+        out.append(Violation("bench", path, "no load entries"))
+    for i, e in enumerate(entries):
+        for key in ("p50_ms", "p99_ms", "tier_mix", "offered_qps"):
+            if key not in e:
+                out.append(Violation(
+                    "bench", path, f"entry #{i} missing {key!r}"))
+        p50, p99 = e.get("p50_ms"), e.get("p99_ms")
+        if isinstance(p50, (int, float)) and isinstance(p99, (int, float)) \
+                and p50 > p99:
+            out.append(Violation(
+                "bench", path,
+                f"entry #{i} p50_ms={p50} > p99_ms={p99}"))
+        n, done = e.get("n_requests"), e.get("completed")
+        if isinstance(n, int) and isinstance(done, int) and done != n:
+            out.append(Violation(
+                "bench", path,
+                f"entry #{i} completed {done}/{n} requests — the "
+                "runtime hung or dropped traffic"))
+        mix = e.get("tier_mix")
+        if isinstance(mix, dict) and isinstance(e.get("served"), int) \
+                and sum(mix.values()) != e["served"]:
+            out.append(Violation(
+                "bench", path,
+                f"entry #{i} tier_mix totals {sum(mix.values())} != "
+                f"served {e['served']}"))
+    chaos = r.get("chaos")
+    if not isinstance(chaos, dict):
+        out.append(Violation("bench", path, "no chaos record"))
+        return out
+    if chaos.get("completed") != chaos.get("n_requests"):
+        out.append(Violation(
+            "bench", path,
+            f"chaos run completed {chaos.get('completed')}/"
+            f"{chaos.get('n_requests')} requests under injected faults"))
+    if chaos.get("deterministic") is not True:
+        out.append(Violation(
+            "bench", path,
+            "chaos replay was not deterministic under the fixed seed"))
+    return out
+
+
+def run(*, batch_path: str = BATCH_PATH, cascade_path: str = CASCADE_PATH,
+        serve_path: str = SERVE_PATH) -> tuple[list[Violation], int]:
+    return (check_batch(batch_path) + check_cascade(cascade_path)
+            + check_serve(serve_path), 3)

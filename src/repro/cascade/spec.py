@@ -187,6 +187,29 @@ class CascadeSpec:
             prev = b
         return tuple(out)
 
+    def check_servable(self, n: int, top_l: int, *,
+                       require_jittable: bool = False) -> None:
+        """Raise ``ValueError`` unless this spec can serve an index of
+        ``n`` rows at ``top_l`` neighbors — the per-rung validation the
+        online serving runtime (``repro.serving``) runs over its whole
+        degradation ladder BEFORE taking traffic, so a fallback rung can
+        never fail at the moment it is needed.
+
+        Checks: the budgets resolve monotonically on this corpus size
+        (``resolve_budgets`` raises otherwise), and — with
+        ``require_jittable`` (the distributed backend, whose cascade step
+        compiles the rescorer into the mesh program) — that the rescorer
+        is device-side, not host-side exact EMD.
+        """
+        if require_jittable:
+            from repro.cascade import rescore    # late: avoids import cycle
+            if not rescore.resolve(self.rescorer).jittable:
+                raise ValueError(
+                    f"cascade rescorer {self.rescorer!r} runs on the host; "
+                    "this serving configuration needs a jittable rescorer "
+                    f"({self.describe()})")
+        self.resolve_budgets(n, top_l)
+
     def describe(self) -> str:
         """``wcd(20%) -> rwmd(5%) -> act-3`` style one-liner."""
         def fmt(b):

@@ -3,13 +3,20 @@
 Design goals (DESIGN.md section 5):
   * restart-safety — the manifest is written LAST and atomically
     (tmp + rename), so a crash mid-save never leaves a "latest" pointer at
-    a torn checkpoint;
-  * integrity — SHA256 per leaf, verified on restore;
+    a torn checkpoint; ``latest_step``/``steps`` additionally re-verify
+    that a step directory is *complete* (manifest present, parseable, and
+    every leaf file it names on disk), so even a torn directory produced
+    by a non-atomic filesystem or a crashed copy is skipped, never served;
+  * integrity — SHA256 per leaf, verified on restore; any mismatch (or a
+    missing/unreadable file) surfaces as the typed :class:`CheckpointCorrupt`
+    so callers can fall back to an older snapshot instead of crashing on a
+    bare assertion;
   * elasticity — restore() takes target shardings, so the same checkpoint
     restores onto a different mesh (runtime/elastic.py).
 """
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import json
 import os
@@ -20,6 +27,13 @@ import jax
 import numpy as np
 
 MANIFEST = "manifest.json"
+
+
+class CheckpointCorrupt(IOError):
+    """A checkpoint failed integrity verification: SHA-256 mismatch,
+    missing/unreadable leaf file, or missing/partial manifest. Typed so
+    recovery paths (``serving/lifecycle.restore_latest``) can skip the
+    bad snapshot and fall back to an older one."""
 
 
 def _leaf_paths(tree: Any) -> list[tuple[str, Any]]:
@@ -74,36 +88,109 @@ def save(ckpt_dir: str, step: int, tree: Any, extra: dict | None = None) -> str:
     return final
 
 
-def latest_step(ckpt_dir: str) -> int | None:
+def _step_dir(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:08d}")
+
+
+def load_manifest(ckpt_dir: str, step: int) -> dict:
+    """The parsed manifest of checkpoint ``step``.
+
+    Raises :class:`CheckpointCorrupt` when the manifest is missing or
+    partial (a crash mid-save on a filesystem without atomic rename, or a
+    truncated copy) — the checkpoint must be treated as torn.
+    """
+    path = os.path.join(_step_dir(ckpt_dir, step), MANIFEST)
+    try:
+        with open(path) as f:
+            manifest = json.load(f)
+    except FileNotFoundError as e:
+        raise CheckpointCorrupt(
+            f"checkpoint step {step}: manifest missing ({path})") from e
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise CheckpointCorrupt(
+            f"checkpoint step {step}: manifest partial/unparseable "
+            f"({path}: {e})") from e
+    if not isinstance(manifest, dict) or "leaves" not in manifest:
+        raise CheckpointCorrupt(
+            f"checkpoint step {step}: manifest has no leaf table ({path})")
+    return manifest
+
+
+def _complete(ckpt_dir: str, step: int) -> bool:
+    """True when the step directory holds a parseable manifest AND every
+    leaf file the manifest names. Cheap (stat-only — no hashing): the
+    completeness gate for ``steps``/``latest_step``; full integrity is
+    verified at restore time."""
+    try:
+        manifest = load_manifest(ckpt_dir, step)
+    except CheckpointCorrupt:
+        return False
+    d = _step_dir(ckpt_dir, step)
+    return all(os.path.exists(os.path.join(d, meta["file"]))
+               for meta in manifest["leaves"].values())
+
+
+def steps(ckpt_dir: str) -> list[int]:
+    """All COMPLETE checkpoint steps under ``ckpt_dir``, ascending.
+
+    Skips ``.tmp`` staging directories and torn checkpoints (directory
+    present but manifest missing/partial, or leaf files absent) — a crash
+    at any point mid-save can never surface here.
+    """
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-             if d.startswith("step_") and not d.endswith(".tmp")
-             and os.path.exists(os.path.join(ckpt_dir, d, MANIFEST))]
-    return max(steps) if steps else None
+        return []
+    found = []
+    for d in os.listdir(ckpt_dir):
+        if not d.startswith("step_") or d.endswith(".tmp"):
+            continue
+        with contextlib.suppress(ValueError):
+            found.append(int(d.split("_")[1]))
+    return sorted(s for s in found if _complete(ckpt_dir, s))
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    """Newest complete checkpoint step, or None. Provably skips torn
+    checkpoints — delegates to :func:`steps`' completeness gate."""
+    all_steps = steps(ckpt_dir)
+    return all_steps[-1] if all_steps else None
 
 
 def restore(ckpt_dir: str, step: int, like: Any,
             shardings: Any = None, verify: bool = True) -> Any:
     """Restore into the structure of ``like``. ``shardings``: optional
     matching tree of NamedShardings — THE elastic-rescale hook: pass the new
-    mesh's shardings and each leaf lands resharded."""
-    d = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(d, MANIFEST)) as f:
-        manifest = json.load(f)
+    mesh's shardings and each leaf lands resharded.
+
+    Integrity failures (SHA-256 mismatch, missing leaf file or manifest)
+    raise :class:`CheckpointCorrupt`.
+    """
+    d = _step_dir(ckpt_dir, step)
+    manifest = load_manifest(ckpt_dir, step)
     names = dict(_leaf_paths(like))
     shard_map_ = dict(_leaf_paths(shardings)) if shardings is not None else {}
     out = {}
     for name in names:
-        meta = manifest["leaves"][name]
+        try:
+            meta = manifest["leaves"][name]
+        except KeyError as e:
+            raise CheckpointCorrupt(
+                f"checkpoint corruption in {name}: leaf missing from "
+                f"manifest at step {step}") from e
         path = os.path.join(d, meta["file"])
-        if verify:
-            with open(path, "rb") as f:
-                digest = hashlib.sha256(f.read()).hexdigest()
-            if digest != meta["sha256"]:
-                raise IOError(f"checkpoint corruption in {name}: "
-                              f"{digest} != {meta['sha256']}")
-        raw = np.load(path)
+        try:
+            if verify:
+                with open(path, "rb") as f:
+                    digest = hashlib.sha256(f.read()).hexdigest()
+            raw = np.load(path)
+        except (OSError, ValueError) as e:
+            # ValueError: np.load on a corrupted/truncated .npy header.
+            raise CheckpointCorrupt(
+                f"checkpoint corruption in {name}: leaf file unreadable "
+                f"({path}: {e})") from e
+        if verify and digest != meta["sha256"]:
+            raise CheckpointCorrupt(
+                f"checkpoint corruption in {name}: "
+                f"{digest} != {meta['sha256']}")
         dtype = _np_dtype(meta["dtype"])
         arr = raw.view(dtype).reshape(meta["shape"])
         if name in shard_map_:
@@ -121,6 +208,4 @@ def restore(ckpt_dir: str, step: int, like: Any,
 
 
 def restore_extra(ckpt_dir: str, step: int) -> dict:
-    d = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(d, MANIFEST)) as f:
-        return json.load(f)["extra"]
+    return load_manifest(ckpt_dir, step).get("extra", {})

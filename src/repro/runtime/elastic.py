@@ -30,7 +30,13 @@ def restore_on_mesh(ckpt_dir: str, step: int, params_like: Any,
                          shardings=reshard_plan(params_like, new_mesh))
 
 
-def reshard_live(tree: Any, new_mesh: Mesh) -> Any:
-    """In-memory reshard (survivor-only recovery, no checkpoint round-trip)."""
-    target = reshard_plan(tree, new_mesh)
+def reshard_live(tree: Any, new_mesh: Mesh, shardings: Any = None) -> Any:
+    """In-memory reshard (survivor-only recovery, no checkpoint round-trip).
+
+    ``shardings``: explicit target NamedSharding tree matching ``tree`` —
+    for state whose placement is NOT covered by the parameter rule table,
+    e.g. a built EmdIndex's Phase-1 tables, whose target is the search
+    step's input shardings on the surviving mesh. Defaults to
+    :func:`reshard_plan` (the training-parameter rules)."""
+    target = reshard_plan(tree, new_mesh) if shardings is None else shardings
     return jax.tree.map(jax.device_put, tree, target)

@@ -9,32 +9,44 @@ straggler tracking.
     microbatches are bit-identical;
   * tracks per-step wall time; steps slower than ``straggler_factor`` x the
     running median are recorded so the controller can exclude the offending
-    hosts at the next elastic event (runtime/elastic.py).
+    hosts at the next elastic event (runtime/elastic.py). Failed and
+    REPLAYED steps are excluded from the timing stats: a replayed step runs
+    against warm caches (and a failed one measured the failure, not the
+    work), so re-recording either would bias the median the flagging
+    threshold compares against.
 
 On a real multi-host cluster the exception source is jax's distributed
 runtime (missing heartbeat -> coordinator error); here failures are
-injected by tests, which exercises the identical recovery path.
+injected by tests (and the serving chaos harness, serving/chaos.py), which
+exercises the identical recovery path.
 """
 from __future__ import annotations
 
 import dataclasses
 import statistics
 import time
+from collections import deque
 from collections.abc import Callable
 from typing import Any
 
 from repro.checkpoint import store
 
+#: Sliding window of per-step wall times kept for the straggler median.
+#: Also the memory bound: ``StragglerStats.times`` is a deque capped here,
+#: so a long-running service never grows it past 64 floats.
+TIME_WINDOW = 64
+
 
 @dataclasses.dataclass
 class StragglerStats:
-    times: list[float] = dataclasses.field(default_factory=list)
+    times: deque[float] = dataclasses.field(
+        default_factory=lambda: deque(maxlen=TIME_WINDOW))
     flagged_steps: list[int] = dataclasses.field(default_factory=list)
 
     def record(self, step: int, dt: float, factor: float) -> bool:
         self.times.append(dt)
         if len(self.times) >= 8:
-            med = statistics.median(self.times[-64:])
+            med = statistics.median(self.times)
             if dt > factor * med:
                 self.flagged_steps.append(step)
                 return True
@@ -54,6 +66,9 @@ class FaultTolerantRunner:
         self.straggler = StragglerStats()
         self.straggler_factor = straggler_factor
         self.restarts = 0
+        # High-water mark of steps whose timing was recorded: steps at or
+        # below it are rollback replays and must not re-enter the stats.
+        self._timed_through = 0
 
     def _save(self, state: Any, step: int) -> None:
         store.save(self.ckpt_dir, step, state, extra={"wall": time.time()})
@@ -77,7 +92,9 @@ class FaultTolerantRunner:
                 state = self.step_fn(state, batch)
                 dt = time.monotonic() - t0
                 step += 1
-                self.straggler.record(step, dt, self.straggler_factor)
+                if step > self._timed_through:       # first attempt only
+                    self.straggler.record(step, dt, self.straggler_factor)
+                    self._timed_through = step
                 if on_step is not None:
                     on_step(step, state)
                 if step % self.ckpt_every == 0:

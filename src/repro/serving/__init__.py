@@ -1,0 +1,34 @@
+"""Fault-tolerant online serving runtime over :class:`~repro.api.EmdIndex`.
+
+From batch library to live service: ``EmdServer`` forms device batches
+out of concurrent single-query callers (micro-batching queue), survives
+launch failures and deadline pressure by honestly degrading down a
+validated ladder of cascade presets (``ServingPolicy``), and keeps the
+index crash-safe through generational snapshot/restore
+(``serving.lifecycle``) with deterministic chaos injection for tests and
+benchmarks (``serving.chaos``).
+
+    from repro.serving import EmdServer, ServingPolicy
+    server = EmdServer(index, ServingPolicy(ladder=("primary", "fast",
+                                                    "wcd")))
+    async with server:
+        res = await server.search(q_ids, q_w)
+    print(res.tier, res.expected_recall, res.indices)
+"""
+from repro.serving.chaos import (ChaosInjector, ChaosSchedule,
+                                 FaultInjected, corrupt_checkpoint)
+from repro.serving.lifecycle import (RestoredSnapshot, restore_latest,
+                                     restore_server, restore_snapshot,
+                                     snapshot)
+from repro.serving.policy import (TIER_RECALL, ServerOverloaded,
+                                  ServingPolicy, ServingTier, resolve_tier,
+                                  validate_ladder)
+from repro.serving.server import EmdServer, ServeResult, ServerStats
+
+__all__ = [
+    "TIER_RECALL", "ChaosInjector", "ChaosSchedule", "EmdServer",
+    "FaultInjected", "RestoredSnapshot", "ServeResult", "ServerOverloaded",
+    "ServerStats", "ServingPolicy", "ServingTier", "corrupt_checkpoint",
+    "resolve_tier", "restore_latest", "restore_server", "restore_snapshot",
+    "snapshot", "validate_ladder",
+]

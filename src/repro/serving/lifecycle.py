@@ -1,0 +1,171 @@
+"""Crash-safe index lifecycle: snapshot / restore / recover.
+
+A serving snapshot is one checkpoint step written through
+``checkpoint/store``'s atomic manifest protocol (tmp + rename, SHA-256
+per leaf), keyed by the server's GENERATION counter, holding:
+
+* the Phase-1 tables — the padded dense-bucket corpus (``ids``, ``w``,
+  ``coords``); nothing else is needed to rebuild every engine, because
+  all per-tier state (jitted steps, shardings) is derived at build time;
+* the corpus manifest — the external ``doc_ids`` row map and the next
+  id to assign, so append/delete history survives a restart;
+* the frozen ``EngineConfig`` (cascade spec included), JSON-encoded in
+  the checkpoint's ``extra`` block.
+
+``restore_server`` rebuilds a serving runtime from the newest snapshot
+that passes integrity verification — a corrupt or torn newest snapshot
+(``store.CheckpointCorrupt``) falls back to the previous generation
+instead of refusing to serve. Passing ``mesh=`` restores onto a
+DIFFERENT device mesh (recovery after losing part of the machine): the
+tables are stored unsharded, so a mesh change is a pure rebuild, the
+same property ``runtime/elastic.py`` gives training checkpoints.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.api.config import EngineConfig
+from repro.api.index import EmdIndex
+from repro.cascade.spec import CascadeSpec, CascadeStage
+from repro.checkpoint import store
+from repro.checkpoint.store import CheckpointCorrupt
+from repro.core.lc import Corpus
+from repro.serving.policy import ServingPolicy
+from repro.serving.server import EmdServer
+
+#: Leaf names of a serving snapshot (the ``like`` tree for store.restore
+#: is reconstructed from the manifest, so restore needs no prior shapes).
+SNAPSHOT_LEAVES = ("ids", "w", "coords", "doc_ids")
+
+
+# ------------------------------------------------------------- config codec
+def config_to_dict(config: EngineConfig) -> dict:
+    """JSON-encodable dict round-tripping through
+    :func:`config_from_dict` (CascadeSpec encoded structurally; preset
+    names stay strings)."""
+    d = {f.name: getattr(config, f.name)
+         for f in dataclasses.fields(config)}
+    c = d["cascade"]
+    if isinstance(c, CascadeSpec):
+        d["cascade"] = {
+            "stages": [{"method": s.method, "budget": s.budget,
+                        "iters": s.iters} for s in c.stages],
+            "rescorer": c.rescorer,
+            "rescorer_iters": c.rescorer_iters,
+        }
+    return d
+
+
+def config_from_dict(d: dict) -> EngineConfig:
+    d = dict(d)
+    c = d.get("cascade")
+    if isinstance(c, dict):
+        d["cascade"] = CascadeSpec(
+            stages=tuple(CascadeStage(**s) for s in c["stages"]),
+            rescorer=c["rescorer"],
+            rescorer_iters=c["rescorer_iters"])
+    return EngineConfig(**d)
+
+
+# ---------------------------------------------------------------- snapshot
+def snapshot(server: EmdServer, ckpt_dir: str) -> str:
+    """Write the server's CURRENT generation as checkpoint step
+    ``generation`` under ``ckpt_dir``; returns the snapshot path.
+    Atomic: a crash mid-save leaves the previous snapshot live."""
+    gen = server._gen
+    tree = {"ids": gen.corpus.ids, "w": gen.corpus.w,
+            "coords": gen.corpus.coords, "doc_ids": gen.doc_ids}
+    extra = {
+        "kind": "emd-serving-snapshot",
+        "generation": gen.gen,
+        "next_doc_id": server._next_doc_id,
+        "config": config_to_dict(server.config),
+        "corpus_manifest": {"n": gen.corpus.n, "hmax": gen.corpus.hmax,
+                            "v": gen.corpus.v, "m": gen.corpus.m},
+    }
+    return store.save(ckpt_dir, gen.gen, tree, extra=extra)
+
+
+@dataclasses.dataclass(frozen=True)
+class RestoredSnapshot:
+    """One verified snapshot, ready to build a server from."""
+    corpus: Corpus
+    doc_ids: np.ndarray
+    config: EngineConfig
+    generation: int
+    next_doc_id: int
+
+
+def _like_from_manifest(manifest: dict) -> dict[str, Any]:
+    like = {}
+    for name in SNAPSHOT_LEAVES:
+        try:
+            meta = manifest["leaves"][name]
+        except KeyError as e:
+            raise CheckpointCorrupt(
+                f"serving snapshot missing leaf {name!r}") from e
+        like[name] = np.zeros(tuple(meta["shape"]),
+                              dtype=np.dtype(meta["dtype"]))
+    return like
+
+
+def restore_snapshot(ckpt_dir: str,
+                     generation: int | None = None) -> RestoredSnapshot:
+    """Load + verify snapshot ``generation`` (default: newest complete).
+    Raises :class:`~repro.checkpoint.store.CheckpointCorrupt` on torn or
+    corrupt data — see :func:`restore_latest` for the falling-back
+    variant."""
+    if generation is None:
+        generation = store.latest_step(ckpt_dir)
+        if generation is None:
+            raise FileNotFoundError(
+                f"no complete serving snapshot under {ckpt_dir}")
+    manifest = store.load_manifest(ckpt_dir, generation)
+    extra = manifest.get("extra", {})
+    if extra.get("kind") != "emd-serving-snapshot":
+        raise CheckpointCorrupt(
+            f"step {generation} under {ckpt_dir} is not a serving "
+            f"snapshot (kind={extra.get('kind')!r})")
+    tree = store.restore(ckpt_dir, generation,
+                         _like_from_manifest(manifest))
+    return RestoredSnapshot(
+        corpus=Corpus(ids=tree["ids"], w=tree["w"], coords=tree["coords"]),
+        doc_ids=np.asarray(tree["doc_ids"], np.int64),
+        config=config_from_dict(extra["config"]),
+        generation=generation,
+        next_doc_id=int(extra["next_doc_id"]))
+
+
+def restore_latest(ckpt_dir: str) -> RestoredSnapshot:
+    """Newest snapshot that passes FULL integrity verification, walking
+    backwards over generations past any corrupt/torn ones (the
+    kill-and-restore path: a crash mid-save, or chaos-injected
+    corruption, costs at most the mutations since the previous
+    snapshot)."""
+    failures = []
+    for generation in reversed(store.steps(ckpt_dir)):
+        try:
+            return restore_snapshot(ckpt_dir, generation)
+        except CheckpointCorrupt as e:
+            failures.append(f"gen {generation}: {e}")
+    raise CheckpointCorrupt(
+        f"no intact serving snapshot under {ckpt_dir}"
+        + (": " + "; ".join(failures) if failures else ""))
+
+
+def restore_server(ckpt_dir: str, policy: ServingPolicy | None = None, *,
+                   generation: int | None = None, mesh=None,
+                   launch_hook=None) -> EmdServer:
+    """Snapshot -> running-ready :class:`EmdServer` (caller still
+    ``await start()``s it). ``generation=None`` takes the newest INTACT
+    snapshot (corrupt ones skipped); ``mesh`` rebuilds the distributed
+    backend's steps on a different mesh (recovery on mesh change)."""
+    snap = (restore_latest(ckpt_dir) if generation is None
+            else restore_snapshot(ckpt_dir, generation))
+    index = EmdIndex.build(snap.corpus, snap.config, mesh=mesh)
+    return EmdServer(index, policy, launch_hook=launch_hook,
+                     doc_ids=snap.doc_ids, generation=snap.generation,
+                     next_doc_id=snap.next_doc_id)

@@ -5,6 +5,8 @@ import pytest
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: long-running distributed/subprocess tests")
+    config.addinivalue_line(
+        "markers", "chaos: deterministic fault-injection serving tests")
 
 
 @pytest.fixture

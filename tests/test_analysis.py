@@ -314,10 +314,26 @@ def test_bench_check_clean_on_valid_artifacts(tmp_path):
         ],
         "distributed_step": {"recall_at_l": 1.0, "queries_per_sec": 4.0},
     }))
+    serve = tmp_path / "s.json"
+    serve.write_text(json.dumps(_valid_serve()))
     violations, checked = bench_check.run(batch_path=str(batch),
-                                          cascade_path=str(cascade))
+                                          cascade_path=str(cascade),
+                                          serve_path=str(serve))
     assert violations == []
-    assert checked == 2
+    assert checked == 3
+
+
+def _valid_serve():
+    return {
+        "entries": [
+            {"offered_qps": 50.0, "n_requests": 8, "completed": 8,
+             "served": 8, "shed": 0, "p50_ms": 3.0, "p99_ms": 9.0,
+             "tier_mix": {"primary": 8}},
+        ],
+        "chaos": {"n_requests": 8, "completed": 8, "shed": 1,
+                  "tier_mix": {"primary": 5, "wcd": 2, "SHED": 1},
+                  "deterministic": True},
+    }
 
 
 def test_bench_check_rejects_seeded_defects(tmp_path):
@@ -329,19 +345,51 @@ def test_bench_check_rejects_seeded_defects(tmp_path):
         "entries": [{"recall_at_l": 1.4, "queries_per_sec": 9.0,
                      "use_kernels": False}],
     }))
+    serve = tmp_path / "s.json"
+    serve.write_text(json.dumps({
+        "entries": [
+            {"offered_qps": 50.0, "n_requests": 8, "completed": 6,
+             "served": 5, "shed": 1, "p50_ms": 12.0, "p99_ms": 9.0,
+             "tier_mix": {"primary": 4}},
+        ],
+        "chaos": {"n_requests": 8, "completed": 8,
+                  "deterministic": False},
+    }))
     violations, _ = bench_check.run(batch_path=str(batch),
-                                    cascade_path=str(cascade))
+                                    cascade_path=str(cascade),
+                                    serve_path=str(serve))
     msgs = "\n".join(v.message for v in violations)
     assert "no distributed-engine entry" in msgs
     assert "outside [0, 1]" in msgs
     assert "use_kernels both ways" in msgs
     assert "no distributed_step record" in msgs
+    assert "p50_ms=12.0 > p99_ms=9.0" in msgs
+    assert "completed 6/8" in msgs
+    assert "tier_mix totals 4 != served 5" in msgs
+    assert "not deterministic" in msgs
+
+
+def test_bench_check_serve_requires_chaos_record(tmp_path):
+    serve = tmp_path / "s.json"
+    art = _valid_serve()
+    del art["chaos"]
+    serve.write_text(json.dumps(art))
+    out = bench_check.check_serve(str(serve))
+    assert any("no chaos record" in v.message for v in out)
+    # completion gate: a chaos run that hung a request is a violation
+    art = _valid_serve()
+    art["chaos"]["completed"] = 7
+    serve.write_text(json.dumps(art))
+    out = bench_check.check_serve(str(serve))
+    assert any("7/8 requests under injected faults" in v.message
+               for v in out)
 
 
 def test_bench_check_reports_missing_artifacts(tmp_path):
     violations, _ = bench_check.run(batch_path=str(tmp_path / "no.json"),
-                                    cascade_path=str(tmp_path / "no2.json"))
-    assert len(violations) == 2
+                                    cascade_path=str(tmp_path / "no2.json"),
+                                    serve_path=str(tmp_path / "no3.json"))
+    assert len(violations) == 3
     assert all("artifact missing" in v.message for v in violations)
 
 

@@ -70,3 +70,85 @@ def test_manifest_contents(tmp_path, tree):
     assert "a" in man["leaves"]
     assert man["leaves"]["a"]["shape"] == [3, 4]
     assert len(man["leaves"]["a"]["sha256"]) == 64
+
+
+def test_corruption_is_typed_for_fallback(tmp_path, tree):
+    """SHA mismatch surfaces as CheckpointCorrupt (a subclass of the
+    IOError older callers catch) so recovery code can fall back to an
+    older snapshot on type, not on string matching."""
+    d = str(tmp_path)
+    path = store.save(d, 1, tree)
+    with open(os.path.join(path, "a.npy"), "r+b") as f:
+        f.seek(8)
+        f.write(b"\xff")
+    with pytest.raises(store.CheckpointCorrupt):
+        store.restore(d, 1, tree)
+    assert issubclass(store.CheckpointCorrupt, IOError)
+
+
+def test_latest_skips_partial_manifest(tmp_path, tree):
+    """A manifest truncated mid-write (crash on a filesystem without
+    atomic rename) is torn: skipped by steps()/latest_step, typed on
+    direct load."""
+    d = str(tmp_path)
+    store.save(d, 3, tree)
+    p = store.save(d, 5, tree)
+    man = os.path.join(p, store.MANIFEST)
+    with open(man) as f:
+        content = f.read()
+    with open(man, "w") as f:
+        f.write(content[:len(content) // 2])       # torn mid-write
+    assert store.steps(d) == [3]
+    assert store.latest_step(d) == 3
+    with pytest.raises(store.CheckpointCorrupt, match="partial"):
+        store.load_manifest(d, 5)
+
+
+def test_latest_skips_missing_leaf_file(tmp_path, tree):
+    """Manifest intact but a leaf file missing (partially copied /
+    crashed move): the completeness gate must refuse the step."""
+    d = str(tmp_path)
+    store.save(d, 2, tree)
+    p = store.save(d, 4, tree)
+    os.remove(os.path.join(p, "a.npy"))
+    assert store.latest_step(d) == 2
+    with pytest.raises(store.CheckpointCorrupt, match="unreadable"):
+        store.restore(d, 4, tree)
+
+
+def test_crash_mid_save_leaves_previous_snapshot_live(tmp_path, tree,
+                                                      monkeypatch):
+    """Simulated crash DURING save (before the atomic publish rename):
+    the staging .tmp dir is left behind, latest_step still points at the
+    previous complete checkpoint, and a retried save succeeds."""
+    d = str(tmp_path)
+    store.save(d, 1, tree)
+
+    real_rename = os.rename
+
+    def crash(src, dst):
+        raise OSError("simulated crash before atomic publish")
+
+    monkeypatch.setattr(store.os, "rename", crash)
+    with pytest.raises(OSError, match="simulated crash"):
+        store.save(d, 2, tree)
+    monkeypatch.setattr(store.os, "rename", real_rename)
+    # The torn attempt is invisible: only the staging dir exists.
+    assert os.path.isdir(os.path.join(d, "step_00000002.tmp"))
+    assert store.steps(d) == [1]
+    assert store.latest_step(d) == 1
+    # Retry after restart: overwrites the stale .tmp and publishes.
+    store.save(d, 2, tree)
+    assert store.latest_step(d) == 2
+    out = store.restore(d, 2, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out),
+                    strict=True):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_missing_manifest_is_corrupt(tmp_path, tree):
+    d = str(tmp_path)
+    os.makedirs(os.path.join(d, "step_00000006"))
+    with pytest.raises(store.CheckpointCorrupt, match="manifest missing"):
+        store.restore(d, 6, tree)
+    assert store.latest_step(d) is None

@@ -514,3 +514,105 @@ assert C.check_scaling(cases["cascade:pinned:dist"], mesh) == []
 print("SCALING GUARD OK", violations[0].message[:60])
 """)
     assert "SCALING GUARD OK" in out
+
+
+@pytest.mark.slow
+def test_reshard_live_index_tables_8_to_4_to_8():
+    """Satellite of the serving PR: survivor-only recovery of a BUILT
+    index. ``elastic.reshard_live`` moves the Phase-1 tables of an
+    8-device index onto the surviving 4-device mesh in memory (no
+    checkpoint round-trip), parity-checked against a full rebuild, and
+    the resharded tables actually serve — spliced under the small mesh's
+    jitted step they return the identical top-l. Then back up 4 -> 8
+    (the node returns)."""
+    out = _run("""
+import dataclasses, jax, numpy as np
+from repro.api import EmdIndex, EngineConfig
+from repro.configs.emd_20news import EMDWorkload
+from repro.core.lc import Corpus
+from repro.data.synth import make_text_like
+from repro.launch import search as dsearch
+from repro.runtime import elastic
+
+corpus, _ = make_text_like(n_docs=24, vocab=64, m=8, doc_len=10, hmax=16)
+cfg = EngineConfig(method="act", iters=2, top_l=4, backend="distributed",
+                   pad_multiple=8)
+mesh8 = jax.make_mesh((4, 2), ("data", "model"))
+mesh4 = jax.make_mesh((2, 2), ("data", "model"))
+idx8 = EmdIndex.build(corpus, cfg, mesh=mesh8)
+q_ids, q_w = corpus.ids[:5], corpus.w[:5]
+s8, i8 = idx8.search(q_ids, q_w)
+
+def table_shardings(mesh):
+    w = EMDWorkload(name="emd-index", n_db=corpus.n, vocab=corpus.v,
+                    dim=corpus.m, hmax=corpus.hmax,
+                    iters=cfg.effective_iters, queries=0, method=cfg.method)
+    in_sh, _ = dsearch.scores_shardings(mesh, w, method=cfg.method)
+    return {"ids": in_sh[0], "w": in_sh[1], "coords": in_sh[2]}
+
+tables8 = {"ids": idx8._padded_corpus.ids, "w": idx8._padded_corpus.w,
+           "coords": idx8._padded_corpus.coords}
+t4 = elastic.reshard_live(tables8, mesh4, shardings=table_shardings(mesh4))
+dev4 = set(mesh4.devices.ravel().tolist())
+for leaf in jax.tree.leaves(t4):
+    assert set(leaf.devices()) <= dev4, (leaf.devices(), dev4)
+# parity vs a full rebuild on the surviving mesh
+idx4 = EmdIndex.build(corpus, cfg, mesh=mesh4)
+for k in tables8:
+    np.testing.assert_array_equal(np.asarray(t4[k]),
+                                  np.asarray(getattr(idx4._padded_corpus, k)))
+# the resharded tables SERVE under the small mesh's step
+idx4b = dataclasses.replace(idx4, _padded_corpus=Corpus(**t4))
+s4, i4 = idx4b.search(q_ids, q_w)
+np.testing.assert_array_equal(np.asarray(i8), np.asarray(i4))
+np.testing.assert_allclose(np.asarray(s8), np.asarray(s4),
+                           rtol=1e-5, atol=1e-6)
+# scale back up: 4 -> 8
+t8 = elastic.reshard_live(t4, mesh8, shardings=table_shardings(mesh8))
+for k in tables8:
+    np.testing.assert_array_equal(np.asarray(t8[k]), np.asarray(tables8[k]))
+idx8b = dataclasses.replace(idx8, _padded_corpus=Corpus(**t8))
+s8b, i8b = idx8b.search(q_ids, q_w)
+np.testing.assert_array_equal(np.asarray(i8), np.asarray(i8b))
+print("RESHARD LIVE OK")
+""")
+    assert "RESHARD LIVE OK" in out
+
+
+@pytest.mark.slow
+def test_emd_server_recovers_on_mesh_change():
+    """Serving-level recovery on mesh change: a live EmdServer over a
+    distributed-backend index rebuilds every tier on the surviving mesh
+    as a new generation (in-flight semantics preserved) and keeps
+    serving identical results."""
+    out = _run("""
+import asyncio, jax, numpy as np
+from repro.api import EmdIndex, EngineConfig
+from repro.data.synth import make_text_like
+from repro.serving import EmdServer, ServingPolicy
+
+corpus, _ = make_text_like(n_docs=24, vocab=64, m=8, doc_len=10, hmax=16)
+cfg = EngineConfig(method="act", iters=2, top_l=4, backend="distributed",
+                   pad_multiple=8)
+mesh8 = jax.make_mesh((4, 2), ("data", "model"))
+mesh4 = jax.make_mesh((2, 2), ("data", "model"))
+index = EmdIndex.build(corpus, cfg, mesh=mesh8)
+policy = ServingPolicy(ladder=("primary", "wcd"), max_batch=4,
+                       flush_ms=5.0, backoff_ms=0.0, deadline_ms=60_000)
+
+async def main():
+    async with EmdServer(index, policy) as server:
+        before = await server.search(corpus.ids[0], corpus.w[0])
+        server.reshard(mesh4)            # half the machine went away
+        after = await server.search(corpus.ids[0], corpus.w[0])
+        assert after.generation == before.generation + 1
+        np.testing.assert_array_equal(before.scores, after.scores)
+        np.testing.assert_array_equal(before.indices, after.indices)
+        server.reshard(mesh8)            # and came back
+        again = await server.search(corpus.ids[0], corpus.w[0])
+        np.testing.assert_array_equal(before.scores, again.scores)
+
+asyncio.run(main())
+print("SERVER MESH RECOVERY OK")
+""")
+    assert "SERVER MESH RECOVERY OK" in out

@@ -79,3 +79,49 @@ def test_data_pipeline_deterministic_and_shardable():
     np.testing.assert_array_equal(g["tokens"][4:6], a["tokens"])
     # labels are next-token shifted
     np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+def test_straggler_times_window_is_bounded():
+    """StragglerStats.times is a bounded deque: a long-running service
+    never grows it past TIME_WINDOW entries, and the median tracks the
+    recent window, not all history."""
+    from repro.runtime.fault import TIME_WINDOW
+    st = StragglerStats()
+    for i in range(10 * TIME_WINDOW):
+        st.record(i, 1.0, factor=3.0)
+    assert len(st.times) == TIME_WINDOW
+    # Flood the window with slow steps: the median follows, so a
+    # now-normal 1.0s step is no longer flagged against ancient history.
+    for i in range(TIME_WINDOW):
+        st.record(1000 + i, 9.0, factor=3.0)
+    assert not st.record(5000, 9.0, factor=3.0)
+
+
+def test_replayed_steps_excluded_from_straggler_stats(tmp_path):
+    """Failed and replayed steps must not enter the timing stats: the
+    failed attempt measured the failure and the replay runs against warm
+    caches — either would bias the median the flagging threshold uses.
+    Every successful step is timed EXACTLY once despite 4 rollbacks."""
+    init = {"w": jnp.float32(0.0), "n": jnp.int32(0)}
+    fail_at = {3, 11, 12, 19}
+
+    def flaky(state, batch):
+        step = int(state["n"])
+        if step in fail_at:
+            fail_at.discard(step)
+            raise RuntimeError(f"injected failure at step {step}")
+        return _step(state, batch)
+
+    runner = FaultTolerantRunner(flaky, _data, str(tmp_path / "flaky"),
+                                 ckpt_every=5)
+    runner.run(init, 23)
+    assert runner.restarts == 4
+    # 23 successful steps -> exactly 23 timing samples; the replayed
+    # steps (e.g. 11-15 rerun after the step-12 failure rolled back to
+    # the step-10 checkpoint) were not re-recorded.
+    assert len(runner.straggler.times) == 23
+
+    clean = FaultTolerantRunner(_step, _data, str(tmp_path / "clean"),
+                                ckpt_every=5)
+    clean.run(init, 23)
+    assert len(clean.straggler.times) == 23

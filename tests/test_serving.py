@@ -1,0 +1,419 @@
+"""Online serving runtime: micro-batching, degradation, chaos, lifecycle.
+
+The acceptance contract these tests pin down:
+
+* requests served at the PRIMARY tier are bit-identical to calling
+  ``EmdIndex.search`` directly — micro-batching and padding change the
+  launch shape, never the answer;
+* under injected launch failures every request still completes, and a
+  degraded response is (a) labeled with the tier actually served and
+  (b) bit-identical to an index built directly with that tier's config —
+  zero wrong results, only labeled quality changes;
+* kill-and-restore from a snapshot resumes with parity-checked scores,
+  and a corrupt newest snapshot falls back to the previous generation;
+* everything is deterministic under fixed chaos seeds.
+"""
+import asyncio
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import EmdIndex, EngineConfig
+from repro.cascade.spec import CASCADES
+from repro.checkpoint.store import CheckpointCorrupt
+from repro.data.synth import make_text_like
+from repro.serving import (ChaosInjector, ChaosSchedule, EmdServer,
+                           ServerOverloaded, ServingPolicy, ServingTier,
+                           corrupt_checkpoint, resolve_tier, restore_latest,
+                           restore_server, snapshot, validate_ladder)
+from repro.serving.server import _tier_config
+
+pytestmark = pytest.mark.chaos
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    c, _ = make_text_like(n_docs=24, vocab=48, m=8, doc_len=12, hmax=12)
+    return c
+
+
+@pytest.fixture(scope="module")
+def config():
+    return EngineConfig(method="act", iters=2, top_l=4)
+
+
+@pytest.fixture(scope="module")
+def index(corpus, config):
+    return EmdIndex.build(corpus, config)
+
+
+def policy(**kw):
+    kw.setdefault("ladder", ("primary", "wcd"))
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("flush_ms", 20.0)
+    kw.setdefault("backoff_ms", 0.0)
+    kw.setdefault("max_retries", 1)
+    kw.setdefault("deadline_ms", 10_000.0)
+    return ServingPolicy(**kw)
+
+
+def run(coro):
+    return asyncio.run(coro)
+
+
+# --------------------------------------------------------------- parity
+def test_single_query_bit_identical_to_direct_search(index, corpus):
+    async def go():
+        async with EmdServer(index, policy()) as server:
+            return await server.search(corpus.ids[0], corpus.w[0])
+    res = run(go())
+    s, i = index.search(corpus.ids[0], corpus.w[0])
+    np.testing.assert_array_equal(res.scores, np.asarray(s))
+    np.testing.assert_array_equal(res.indices, np.asarray(i))
+    assert res.tier == "primary" and not res.degraded
+    assert res.expected_recall == 1.0 and res.generation == 0
+
+
+def test_microbatch_coalesces_and_pads_to_bucket(index, corpus):
+    async def go():
+        async with EmdServer(index, policy()) as server:
+            outs = await asyncio.gather(*[
+                server.search(corpus.ids[k], corpus.w[k]) for k in range(3)])
+            return outs, server.stats
+    outs, stats = run(go())
+    # 3 concurrent callers -> ONE launch, padded up to the pow-2 bucket 4.
+    assert stats.launches == 1 and stats.flushes == 1
+    assert stats.bucket_launches == {4: 1}
+    assert stats.tier_served == {"primary": 3}
+    for k, o in enumerate(outs):
+        s, i = index.search(corpus.ids[k], corpus.w[k])
+        np.testing.assert_array_equal(o.scores, np.asarray(s))
+        np.testing.assert_array_equal(o.indices, np.asarray(i))
+
+
+def test_bucket_is_next_pow2_capped_at_max_batch(index):
+    async def go():
+        async with EmdServer(index, policy(max_batch=8)) as server:
+            return [server._bucket(n) for n in (1, 2, 3, 5, 8, 9)]
+    assert run(go()) == [1, 2, 4, 8, 8, 8]
+
+
+def test_requires_running_server_and_single_query(index, corpus):
+    server = EmdServer(index, policy())
+
+    async def not_running():
+        with pytest.raises(RuntimeError, match="not running"):
+            await server.search(corpus.ids[0], corpus.w[0])
+
+    async def batched_query():
+        async with EmdServer(index, policy()) as srv:
+            with pytest.raises(ValueError, match=r"one \(h,\) query"):
+                await srv.search(corpus.ids[:2], corpus.w[:2])
+    run(not_running())
+    run(batched_query())
+
+
+# --------------------------------------------------- chaos: degradation
+def test_injected_failures_degrade_with_correct_labeled_results(
+        index, corpus, config):
+    # Attempts: 0 ok (req A), then req B: 1 fail, 2 fail (primary
+    # exhausted, max_retries=1) -> 3 ok on the wcd rung.
+    chaos = ChaosInjector(ChaosSchedule(fail_launches=frozenset({1, 2})))
+
+    async def go():
+        async with EmdServer(index, policy(),
+                             launch_hook=chaos) as server:
+            a = await server.search(corpus.ids[0], corpus.w[0])
+            b = await server.search(corpus.ids[1], corpus.w[1])
+            return a, b, server.stats
+    a, b, stats = run(go())
+    assert a.tier == "primary" and not a.degraded
+    assert b.tier == "wcd" and b.degraded and b.retries == 2
+    assert [e[2] for e in chaos.log] == ["ok", "fail", "fail", "ok"]
+    assert stats.launch_failures == 2
+    # Zero wrong results: the degraded answer is bit-identical to an
+    # index built directly with the degraded tier's config.
+    wcd = EmdIndex.build(corpus,
+                         _tier_config(config, resolve_tier("wcd")))
+    s, i = wcd.search(corpus.ids[1], corpus.w[1])
+    np.testing.assert_array_equal(b.scores, np.asarray(s))
+    np.testing.assert_array_equal(b.indices, np.asarray(i))
+
+
+def test_retry_with_backoff_recovers_without_degrading(index, corpus):
+    chaos = ChaosInjector(ChaosSchedule(fail_launches=frozenset({0})))
+
+    async def go():
+        async with EmdServer(index, policy(max_retries=2),
+                             launch_hook=chaos) as server:
+            return await server.search(corpus.ids[0], corpus.w[0])
+    res = run(go())
+    assert res.tier == "primary" and not res.degraded and res.retries == 1
+    s, _ = index.search(corpus.ids[0], corpus.w[0])
+    np.testing.assert_array_equal(res.scores, np.asarray(s))
+
+
+def test_ladder_exhaustion_sheds_with_fast_fail(index, corpus):
+    chaos = ChaosInjector(ChaosSchedule(
+        fail_launches=frozenset(range(16))))
+
+    async def go():
+        async with EmdServer(index, policy(),
+                             launch_hook=chaos) as server:
+            with pytest.raises(ServerOverloaded, match="ladder"):
+                await server.search(corpus.ids[0], corpus.w[0])
+            return server.stats
+    stats = run(go())
+    assert stats.shed == 1
+    assert stats.launch_failures == 4      # 2 tiers x (1 + max_retries)
+
+
+def test_all_requests_complete_under_random_faults(index, corpus, config):
+    """100% completion, zero wrong results: every request either carries
+    a tier-labeled answer bit-identical to that tier's direct index, or
+    (ladder exhausted) fails FAST with ServerOverloaded."""
+    sched = ChaosSchedule.from_seed(7, horizon=64, p_fail=0.3)
+    chaos = ChaosInjector(sched)
+    n_req = 12
+
+    async def go():
+        async with EmdServer(index, policy(max_batch=2),
+                             launch_hook=chaos) as server:
+            return await asyncio.gather(
+                *[server.search(corpus.ids[k % corpus.n],
+                                corpus.w[k % corpus.n])
+                  for k in range(n_req)], return_exceptions=True)
+    outs = run(go())
+    assert len(outs) == n_req
+    direct = {"primary": index}
+    for k, o in enumerate(outs):
+        if isinstance(o, ServerOverloaded):
+            continue                        # shed = completed, fast-failed
+        assert not isinstance(o, BaseException), o
+        if o.tier not in direct:
+            direct[o.tier] = EmdIndex.build(
+                corpus, _tier_config(config, resolve_tier(o.tier)))
+        s, i = direct[o.tier].search(corpus.ids[k % corpus.n],
+                                     corpus.w[k % corpus.n])
+        np.testing.assert_array_equal(o.scores, np.asarray(s))
+        np.testing.assert_array_equal(o.indices, np.asarray(i))
+        assert o.degraded == (o.tier != "primary")
+
+
+def test_chaos_schedule_deterministic_under_seed(index, corpus):
+    def mix(seed):
+        sched = ChaosSchedule.from_seed(seed, horizon=32, p_fail=0.4)
+        chaos = ChaosInjector(sched)
+
+        async def go():
+            async with EmdServer(index, policy(),
+                                 launch_hook=chaos) as server:
+                outs = []
+                for k in range(6):
+                    try:
+                        r = await server.search(corpus.ids[k], corpus.w[k])
+                        outs.append(r.tier)
+                    except ServerOverloaded:
+                        outs.append("SHED")
+                return outs, chaos.log
+        return run(go())
+
+    tiers_a, log_a = mix(3)
+    tiers_b, log_b = mix(3)
+    assert tiers_a == tiers_b and log_a == log_b
+    assert ChaosSchedule.from_seed(3, 32, p_fail=0.4) == \
+        ChaosSchedule.from_seed(3, 32, p_fail=0.4)
+
+
+def test_deadline_pressure_starts_batch_down_ladder(index, corpus):
+    async def go():
+        async with EmdServer(index, policy(headroom=1.0)) as server:
+            # Warm estimate says primary takes 1s; the request only has
+            # ~50ms of budget left -> the batch starts at the wcd rung.
+            server.stats.tier_latency_ms["primary"] = 1000.0
+            return await server.search(corpus.ids[0], corpus.w[0],
+                                       deadline_ms=50.0)
+    res = run(go())
+    assert res.tier == "wcd" and res.degraded
+
+
+# ----------------------------------------------------- ladder validation
+def test_ladder_validated_before_traffic(index, corpus, config):
+    with pytest.raises(ValueError, match="unknown ladder rung"):
+        EmdServer(index, policy(ladder=("primary", "nope")))
+    with pytest.raises(ValueError, match="duplicate"):
+        EmdServer(index, policy(ladder=("primary", "wcd", "wcd")))
+    # A cascade rung whose budgets cannot resolve fails at construction.
+    with pytest.raises(ValueError, match="cannot serve"):
+        validate_ladder(policy(ladder=("primary", "fast")), config,
+                        n=2, top_l=4)
+
+
+def test_resolve_tier_covers_presets_methods_and_specs():
+    assert resolve_tier("primary").name == "primary"
+    fast = resolve_tier("fast")
+    assert fast.cascade is CASCADES["fast"]
+    assert fast.expected_recall == 0.95
+    wcd = resolve_tier("wcd")
+    assert wcd.method == "wcd" and wcd.cascade is None
+    spec_tier = resolve_tier(CASCADES["chain"])
+    assert spec_tier.cascade is CASCADES["chain"]
+    assert spec_tier.expected_recall == 1.0    # admissible spec
+    with pytest.raises(ValueError, match="both cascade and method"):
+        ServingTier(name="bad", cascade=CASCADES["fast"], method="wcd")
+
+
+def test_cascade_preset_rung_serves_through_cascade(index, corpus, config):
+    chaos = ChaosInjector(ChaosSchedule(fail_launches=frozenset({0, 1})))
+
+    async def go():
+        async with EmdServer(index, policy(ladder=("primary", "chain")),
+                             launch_hook=chaos) as server:
+            return await server.search(corpus.ids[2], corpus.w[2])
+    res = run(go())
+    assert res.tier == "chain" and res.degraded
+    assert res.expected_recall == 1.0          # admissible preset
+    chain = EmdIndex.build(
+        corpus, dataclasses.replace(config, cascade=CASCADES["chain"]))
+    s, i = chain.search(corpus.ids[2], corpus.w[2])
+    np.testing.assert_array_equal(res.scores, np.asarray(s))
+    np.testing.assert_array_equal(res.indices, np.asarray(i))
+
+
+# ----------------------------------------------------- corpus mutation
+def test_append_and_delete_keep_external_ids_stable(index, corpus):
+    async def go():
+        async with EmdServer(index, policy()) as server:
+            new_ids = server.append(np.asarray(corpus.ids[:3]),
+                                    np.asarray(corpus.w[:3]))
+            assert new_ids.tolist() == [24, 25, 26]
+            assert server.generation == 1 and server.corpus.n == 27
+            # Row 0's duplicate now exists at external id 24: searching
+            # for doc 0 must surface BOTH external ids.
+            r = await server.search(corpus.ids[0], corpus.w[0])
+            assert {0, 24} <= set(np.asarray(r.indices).tolist())
+            assert r.generation == 1
+            removed = server.delete([24, 26])
+            assert removed == 2 and server.generation == 2
+            assert server.corpus.n == 25
+            # Survivors keep their ids: 25 still maps to corpus row 1.
+            assert 25 in server.doc_ids.tolist()
+            r2 = await server.search(corpus.ids[1], corpus.w[1])
+            assert {1, 25} <= set(np.asarray(r2.indices).tolist())
+            with pytest.raises(KeyError, match="unknown doc ids"):
+                server.delete([24])             # already gone
+            with pytest.raises(ValueError, match="top_l"):
+                server.delete(server.doc_ids[:-2].tolist())
+            with pytest.raises(ValueError, match="rows"):
+                server.append(np.zeros((2, 5), np.int32),
+                              np.zeros((2, 5), np.float32))
+    run(go())
+
+
+def test_inflight_batch_finishes_on_old_generation(index, corpus):
+    """A mutation between enqueue and flush must not tear the batch: the
+    launch snapshots one generation and answers from it."""
+    async def go():
+        async with EmdServer(index, policy(flush_ms=50.0)) as server:
+            fut = asyncio.ensure_future(
+                server.search(corpus.ids[0], corpus.w[0]))
+            await asyncio.sleep(0)             # enqueued, not yet flushed
+            server.append(np.asarray(corpus.ids[:1]),
+                          np.asarray(corpus.w[:1]))
+            res = await fut
+            # Served on whichever generation the flush snapshotted —
+            # either is correct; the label must match the answer.
+            assert res.generation in (0, 1)
+            if res.generation == 0:
+                s, i = index.search(corpus.ids[0], corpus.w[0])
+                np.testing.assert_array_equal(res.scores, np.asarray(s))
+                np.testing.assert_array_equal(res.indices, np.asarray(i))
+    run(go())
+
+
+# ------------------------------------------------- snapshot / restore
+def test_snapshot_kill_restore_parity(index, corpus, tmp_path):
+    d = str(tmp_path / "snap")
+
+    async def serve_and_snapshot():
+        async with EmdServer(index, policy()) as server:
+            server.append(np.asarray(corpus.ids[:2]),
+                          np.asarray(corpus.w[:2]))
+            server.delete([24])
+            res = await server.search(corpus.ids[0], corpus.w[0])
+            snapshot(server, d)
+            return res
+
+    async def restore_and_serve():
+        server = restore_server(d, policy())
+        async with server:
+            assert server.generation == 2
+            assert server.corpus.n == 25
+            assert 25 in server.doc_ids.tolist()
+            res = await server.search(corpus.ids[0], corpus.w[0])
+            # Restored server keeps assigning fresh ids after the max.
+            assert server.append(np.asarray(corpus.ids[:1]),
+                                 np.asarray(corpus.w[:1])).tolist() == [26]
+            return res
+
+    before = run(serve_and_snapshot())
+    after = run(restore_and_serve())
+    np.testing.assert_array_equal(before.scores, after.scores)
+    np.testing.assert_array_equal(before.indices, after.indices)
+
+
+def test_corrupt_newest_snapshot_falls_back_to_previous(
+        index, corpus, tmp_path):
+    d = str(tmp_path / "snap")
+
+    async def go():
+        async with EmdServer(index, policy()) as server:
+            p0 = snapshot(server, d)                   # generation 0
+            server.append(np.asarray(corpus.ids[:1]),
+                          np.asarray(corpus.w[:1]))
+            p1 = snapshot(server, d)                   # generation 1
+            return p0, p1
+    _, p1 = run(go())
+    corrupt_checkpoint(p1, leaves=("ids",), seed=1)
+    # Direct load of the corrupt generation surfaces the typed error ...
+    with pytest.raises(CheckpointCorrupt):
+        restore_server(d, policy(), generation=1)
+    # ... and the fallback path restores the intact generation 0.
+    snap = restore_latest(d)
+    assert snap.generation == 0 and snap.corpus.n == 24
+
+    async def verify():
+        server = restore_server(d, policy())
+        async with server:
+            assert server.generation == 0
+            res = await server.search(corpus.ids[0], corpus.w[0])
+            s, i = index.search(corpus.ids[0], corpus.w[0])
+            np.testing.assert_array_equal(res.scores, np.asarray(s))
+            np.testing.assert_array_equal(res.indices, np.asarray(i))
+    run(verify())
+
+
+def test_every_snapshot_corrupt_is_a_typed_failure(index, tmp_path):
+    d = str(tmp_path / "snap")
+
+    async def go():
+        async with EmdServer(index, policy()) as server:
+            return snapshot(server, d)
+    p = run(go())
+    corrupt_checkpoint(p, seed=2)                      # every leaf
+    with pytest.raises(CheckpointCorrupt, match="no intact"):
+        restore_latest(d)
+
+
+def test_stop_drains_queued_requests(index, corpus):
+    async def go():
+        server = EmdServer(index, policy(flush_ms=1000.0, max_batch=8))
+        await server.start()
+        futs = [asyncio.ensure_future(
+            server.search(corpus.ids[k], corpus.w[k])) for k in range(2)]
+        await asyncio.sleep(0)
+        await server.stop()                   # must serve, not abandon
+        return await asyncio.gather(*futs)
+    outs = run(go())
+    assert all(o.tier == "primary" for o in outs)
