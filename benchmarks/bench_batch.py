@@ -20,12 +20,10 @@ from __future__ import annotations
 
 import json
 import os
-import time
 
 import jax
-import numpy as np
 
-from benchmarks.common import emit, text_corpus, timeit
+from benchmarks.common import device_kind, emit, paired, text_corpus, timeit
 from repro.api import EmdIndex, EngineConfig
 
 #: (method, iters) cases: the fast relaxation, the overlap fix, the
@@ -46,34 +44,22 @@ def _sizes(smoke: bool) -> dict:
                 hmax=16, nqs=(1, 8, 64), reps=11)
 
 
-def _paired(fn_a, fn_b, reps: int):
-    """Interleaved timing: per-rep (a_us, b_us) pairs after joint warmup.
-    Returns (median_a_us, median_b_us, median of per-rep a/b ratios)."""
-    jax.block_until_ready(fn_a())
-    jax.block_until_ready(fn_b())
-    ta, tb, ratios = [], [], []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn_a())
-        a = (time.perf_counter() - t0) * 1e6
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn_b())
-        b = (time.perf_counter() - t0) * 1e6
-        ta.append(a)
-        tb.append(b)
-        ratios.append(a / b)
-    return (float(np.median(ta)), float(np.median(tb)),
-            float(np.median(ratios)))
-
-
 def run() -> None:
     smoke = os.environ.get("BENCH_SMOKE", "0") not in ("0", "")
     sz = _sizes(smoke)
     nqs, reps = sz.pop("nqs"), sz.pop("reps")
     corpus, _ = text_corpus(**sz, seed=11)
+    # Tile policy: with BENCH_TUNE_CACHE set the indexes apply that
+    # TuneCache's winners ("cached" never times, so runs stay
+    # deterministic); without it the dataclass-default tiles are used.
+    tune_cache = os.environ.get("BENCH_TUNE_CACHE") or None
+    autotune = "cached" if tune_cache else "off"
     report = {"bench": "bench_batch", "smoke": smoke,
               "sizes": dict(sz, nqs=list(nqs)),
               "backend": jax.default_backend(),
+              "device_kind": device_kind(),
+              "autotune": {"mode": autotune, "tune_cache": tune_cache,
+                           "tuned_blocks": {}},
               "entries": [], "speedup_batched_over_scan": {}}
 
     for method, iters in CASES:
@@ -83,7 +69,7 @@ def run() -> None:
                 method=method, iters=iters, batch_engine="scan"))
             batched = EmdIndex.build(corpus, EngineConfig(
                 method=method, iters=iters, batch_engine="batched"))
-            us_s, us_b, speedup = _paired(
+            us_s, us_b, speedup = paired(
                 lambda: scan.scores(q_ids, q_w),
                 lambda: batched.scores(q_ids, q_w), reps)
             for engine, us in (("scan", us_s), ("batched", us_b)):
@@ -108,7 +94,8 @@ def run() -> None:
     for method, iters in DIST_CASES:
         dist = EmdIndex.build(corpus, EngineConfig(
             method=method, iters=iters, backend="distributed",
-            pad_multiple=64))
+            pad_multiple=64, autotune=autotune, tune_cache=tune_cache))
+        report["autotune"]["tuned_blocks"].update(dist.tuned_blocks)
         us = timeit(lambda: dist.scores(q_ids, q_w), n_iter=reps)
         qps = nq_d / (us / 1e6)
         emit(f"bench_batch.{method}.nq{nq_d}.distributed", us,

@@ -28,12 +28,10 @@ from __future__ import annotations
 
 import json
 import os
-import time
 
 import jax
-import numpy as np
 
-from benchmarks.common import emit, text_corpus, timeit
+from benchmarks.common import device_kind, emit, paired, text_corpus, timeit
 from repro import cascade
 from repro.api import EmdIndex, EngineConfig
 from repro.cascade import CascadeSpec, CascadeStage
@@ -64,25 +62,6 @@ def _sizes(smoke: bool) -> dict:
                 hmax=16, nq=64, top_l=16, reps=7)
 
 
-def _paired(fn_a, fn_b, reps: int):
-    """Interleaved timing after joint warmup (see bench_batch)."""
-    jax.block_until_ready(fn_a())
-    jax.block_until_ready(fn_b())
-    ta, tb, ratios = [], [], []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn_a())
-        a = (time.perf_counter() - t0) * 1e6
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn_b())
-        b = (time.perf_counter() - t0) * 1e6
-        ta.append(a)
-        tb.append(b)
-        ratios.append(a / b)
-    return (float(np.median(ta)), float(np.median(tb)),
-            float(np.median(ratios)))
-
-
 def run() -> None:
     smoke = os.environ.get("BENCH_SMOKE", "0") not in ("0", "")
     sz = _sizes(smoke)
@@ -90,9 +69,16 @@ def run() -> None:
     corpus, _ = text_corpus(**sz, seed=11)
     q_ids, q_w = corpus.ids[:nq], corpus.w[:nq]
     n = corpus.n
+    # Tile policy, as in bench_batch: BENCH_TUNE_CACHE applies a
+    # TuneCache's winners deterministically; unset keeps the defaults.
+    tune_cache = os.environ.get("BENCH_TUNE_CACHE") or None
+    autotune = "cached" if tune_cache else "off"
     report = {"bench": "bench_cascade", "smoke": smoke,
               "sizes": dict(sz, nq=nq, top_l=top_l),
               "backend": jax.default_backend(),
+              "device_kind": device_kind(),
+              "autotune": {"mode": autotune, "tune_cache": tune_cache,
+                           "tuned_blocks": {}},
               "full_rows_per_query": n, "entries": []}
 
     full = EmdIndex.build(corpus, EngineConfig(method="act",
@@ -106,10 +92,12 @@ def run() -> None:
             backend = "pallas" if use_kernels else "reference"
             casc = EmdIndex.build(corpus, EngineConfig(
                 method="act", iters=ACT_ITERS, top_l=top_l, cascade=spec,
-                backend=backend))
+                backend=backend, autotune=autotune, tune_cache=tune_cache))
+            if use_kernels:
+                report["autotune"]["tuned_blocks"].update(casc.tuned_blocks)
             _, idx = casc.search(q_ids, q_w)
             recall = cascade.topk_recall(idx, full_idx)
-            us_full, us_casc, speedup = _paired(
+            us_full, us_casc, speedup = paired(
                 lambda: full.search(q_ids, q_w),
                 lambda: casc.search(q_ids, q_w), reps)
             rows = cascade.stage_rows(spec, n, top_l)

@@ -24,6 +24,38 @@ def timeit(fn, *args, n_warmup: int = 1, n_iter: int = 3) -> float:
     return float(np.median(times))
 
 
+def paired(fn_a, fn_b, reps: int):
+    """Interleaved timing: per-rep (a_us, b_us) pairs after joint warmup.
+    Returns (median_a_us, median_b_us, median of per-rep a/b ratios).
+
+    The interleaving cancels slow drift (thermal, background load) that
+    would bias two back-to-back timing loops — the single home of the
+    comparison harness: the bench entry points and the tile autotuner's
+    config tournaments (``repro.kernels.autotune``) all time through
+    here."""
+    jax.block_until_ready(fn_a())
+    jax.block_until_ready(fn_b())
+    ta, tb, ratios = [], [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a())
+        a = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b())
+        b = (time.perf_counter() - t0) * 1e6
+        ta.append(a)
+        tb.append(b)
+        ratios.append(a / b)
+    return (float(np.median(ta)), float(np.median(tb)),
+            float(np.median(ratios)))
+
+
+def device_kind() -> str:
+    """Hardware kind of device 0 (e.g. "cpu", "TPU v4") — recorded into
+    the BENCH JSONs next to ``jax.default_backend()``."""
+    return str(jax.devices()[0].device_kind)
+
+
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
 

@@ -1,13 +1,62 @@
 """Kernel-level microbenchmarks: Pallas (interpret on CPU) vs pure-jnp
-reference, plus the HBM-traffic model that motivates the fusion
-(DESIGN.md section 2: one pass over X instead of k)."""
+reference, the HBM-traffic model that motivates the fusion (DESIGN.md
+section 2: one pass over X instead of k), and a tile-size sweep.
+
+The sweep does NOT hand-roll tile shapes: it enumerates exactly the
+configs ``repro.kernels.autotune.admissible_configs`` admits — the same
+``analysis/vmem.check_launch`` filter the autotuner times through — so
+every timed point is a launch that fits the 16 MiB VMEM budget and the
+bench can never report a number for a config that would OOM a core.
+``BENCH_SMOKE=1`` caps the number of configs timed per family (the cap
+is emitted, never silent).
+"""
 from __future__ import annotations
+
+import os
 
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timeit
-from repro.kernels import ops, ref
+from repro.kernels import autotune, ref
+
+#: (family, launch dims) swept — one per kernel family, at sizes small
+#: enough that CPU interpret mode can time the whole admissible set.
+SWEEPS = (
+    ("dist_topk", dict(nq=2, v=256, h=32, m=16, k=4)),
+    ("act_phase2", dict(nq=2, n=256, h=32, iters=3)),
+    ("cand_pour", dict(nq=2, b=32, h=32, v=256, k=4, iters=3,
+                       mode="pour")),
+    ("cand_dist", dict(nq=2, b=32, h=32, v=256, qh=32, mode="ict")),
+)
+
+
+def _sweep() -> None:
+    smoke = os.environ.get("BENCH_SMOKE", "0") not in ("0", "")
+    cap = 4 if smoke else None
+    for family, dims in SWEEPS:
+        cfgs = autotune.admissible_configs(family, dims)
+        dtag = ",".join(f"{k}={v}" for k, v in sorted(dims.items()))
+        emit(f"kernels.sweep.{family}.admissible", float(len(cfgs)),
+             f"dims[{dtag}] configs admitted by vmem.check_launch")
+        # Smoke cap samples evenly across the admissible list so both
+        # tiny and large tiles stay covered, not just the slow small ones.
+        timed = (cfgs if cap is None
+                 else cfgs[::max(1, len(cfgs) // cap)][:cap])
+        if len(timed) < len(cfgs):
+            emit(f"kernels.sweep.{family}.capped", float(len(timed)),
+                 f"timing {len(timed)}/{len(cfgs)} admissible "
+                 "(BENCH_SMOKE=1)")
+        make_run = autotune._runner(family, dims)
+        best_cfg, best_us = None, float("inf")
+        for cfg in timed:
+            us = timeit(make_run(cfg))
+            ctag = ",".join(f"{k}={v}" for k, v in sorted(cfg.items()))
+            emit(f"kernels.sweep.{family}[{ctag}]", us, f"dims[{dtag}]")
+            if us < best_us:
+                best_cfg, best_us = cfg, us
+        ctag = ",".join(f"{k}={v}" for k, v in sorted(best_cfg.items()))
+        emit(f"kernels.sweep.{family}.best", best_us, ctag)
 
 
 def run() -> None:
@@ -35,6 +84,8 @@ def run() -> None:
     emit("kernels.act_phase2_traffic_model", float(fused_traffic),
          f"paper k-pass bytes={paper_traffic} fused bytes={fused_traffic} "
          f"cut={paper_traffic/fused_traffic:.2f}x")
+
+    _sweep()
 
 
 if __name__ == "__main__":

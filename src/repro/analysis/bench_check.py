@@ -10,12 +10,15 @@ artifacts.
 Validated:
 
 * ``BENCH_batch.json`` — non-empty ``entries``, at least one entry from
-  the distributed engine, every entry carrying the throughput fields.
+  the distributed engine, every entry carrying the throughput fields;
+  provenance fields (``device_kind`` plus an ``autotune`` record with
+  the mode and the tuned tile picks) so a perf number is never divorced
+  from the hardware and tile configuration that produced it.
 * ``BENCH_cascade.json`` — non-empty ``entries`` each with
   ``recall_at_l`` / ``queries_per_sec`` / ``use_kernels``; BOTH kernel
   settings present (the kernel path must not silently drop out of the
   bench matrix); a ``distributed_step`` record with recall + qps; all
-  recalls inside [0, 1].
+  recalls inside [0, 1]; the same provenance fields as BENCH_batch.
 * ``BENCH_serve.json`` — non-empty per-load ``entries`` each carrying
   latency percentiles (``p50_ms <= p99_ms``), a served-tier mix, and
   100% request completion (served + shed == offered — the runtime never
@@ -47,10 +50,34 @@ def _load(path: str) -> tuple[dict | None, list[Violation]]:
         return None, [Violation("bench", path, f"unparseable JSON: {e}")]
 
 
+def _check_provenance(r: dict, path: str) -> list[Violation]:
+    """Hardware/tile provenance every perf artifact must carry."""
+    out = []
+    if not isinstance(r.get("device_kind"), str) or not r["device_kind"]:
+        out.append(Violation(
+            "bench", path,
+            "no device_kind — perf numbers must name their hardware"))
+    tune = r.get("autotune")
+    if not isinstance(tune, dict):
+        out.append(Violation("bench", path, "no autotune record"))
+        return out
+    if tune.get("mode") not in ("off", "cached", "force"):
+        out.append(Violation(
+            "bench", path,
+            f"autotune mode {tune.get('mode')!r} not one of "
+            "('off', 'cached', 'force')"))
+    if not isinstance(tune.get("tuned_blocks"), dict):
+        out.append(Violation(
+            "bench", path,
+            "autotune record has no tuned_blocks mapping"))
+    return out
+
+
 def check_batch(path: str = BATCH_PATH) -> list[Violation]:
     r, out = _load(path)
     if r is None:
         return out
+    out += _check_provenance(r, path)
     entries = r.get("entries") or []
     if not entries:
         out.append(Violation("bench", path, "no benchmark entries"))
@@ -71,6 +98,7 @@ def check_cascade(path: str = CASCADE_PATH) -> list[Violation]:
     r, out = _load(path)
     if r is None:
         return out
+    out += _check_provenance(r, path)
     entries = r.get("entries") or []
     if not entries:
         out.append(Violation("bench", path, "no benchmark entries"))

@@ -15,13 +15,14 @@ Two checked profiles:
 * ``bench`` — the tile sizes and shapes the test/bench suites actually
   launch; these must fit with the default knobs.
 * ``paper`` — 20News scale (n=18.8k, v=69.7k, h=500) with the tuned-down
-  candidate tiles that fit. The profile is the static half of the future
-  tile autotuner (ROADMAP): :func:`footprint` is the model it will sweep.
-  ``cand_dist`` is deliberately ABSENT from the paper profile: its
-  layout rides the query's full (v, h) Phase-1 distance slab into every
-  cell, which no tile size fits at 20News scale — a known rework item,
-  recorded in ROADMAP.md, that this pass will start guarding the moment
-  the layout is tiled.
+  candidate tiles that fit. The profile is the static half of the tile
+  autotuner (``repro.kernels.autotune``): :func:`footprint` is the model
+  it sweeps, and ``autotune.admissible_configs`` enumerates only tile
+  choices :func:`check_launch` admits. ``cand_dist`` is guarded here at
+  paper scale since its blocked-vocab rework: the grid streams the
+  query's (v, h) distance handoff one ``block_v`` slab at a time into a
+  persistent gather accumulator, so its per-cell residency is
+  tile-sized, not corpus-sized.
 """
 from __future__ import annotations
 
@@ -76,6 +77,14 @@ def check_configs() -> list[tuple[str, str, dict]]:
          dict(nq=8, b=512, h=PAPER.hmax, v=PAPER.vocab, k=k,
               iters=PAPER.iters, block_n=8)),
     ]
+    # cand_dist at paper scale: the blocked-vocab rework streams the
+    # (v, h) handoff in block_v slabs, but the (block_n*h, h) gather
+    # accumulator + reduce temporaries still force block_n down to 2 at
+    # h = qh = 500 (ict's ladder scratch is the binding constraint).
+    for mode in ("rev_min", "ict"):
+        out.append((f"paper:cand_dist:{mode}", "cand_dist",
+                    dict(nq=8, b=512, h=PAPER.hmax, v=PAPER.vocab,
+                         qh=PAPER.hmax, mode=mode, block_n=2)))
     return out
 
 

@@ -34,7 +34,10 @@ class EngineConfig:
                   reference compute), or ``distributed`` (mesh-sharded
                   method-generic multi-query step from
                   ``launch/search.py`` — every registered method and all
-                  batch knobs apply there too).
+                  batch knobs apply there too; kernel-capable methods run
+                  the fused kernels inside the ``kernels/partition``
+                  shard_map shims when ``batch_engine="batched"``, so the
+                  kernel path compiles on the mesh).
     symmetric:    score queries with the paper's symmetric measure
                   (max of the two directional bounds; needs a method with
                   a registered reverse, i.e. rwmd). Valid on every
@@ -48,7 +51,20 @@ class EngineConfig:
                   bit-for-bit equal to a loop of single-query calls, for
                   verification.
     block_v/block_h/block_n: Pallas kernel tile sizes (vocabulary rows,
-                  histogram slots, database rows).
+                  histogram slots, database rows). Explicit values always
+                  win over autotuned picks.
+    autotune:     tile-size policy applied at ``EmdIndex.build``
+                  (``repro.kernels.autotune``): ``off`` (default — the
+                  knobs above are used verbatim), ``cached`` (apply the
+                  ``tune_cache`` winner for each kernel launch shape;
+                  cache misses keep the defaults, so builds stay
+                  deterministic and never time anything), or ``force``
+                  (time the VMEM-admissible configs now with the paired
+                  bench harness and overwrite the cache). Only knobs
+                  still at their dataclass defaults are replaced.
+    tune_cache:   path of the ``TuneCache`` JSON file backing
+                  ``autotune`` (``None`` = in-memory only: ``cached``
+                  sees an empty cache, ``force`` does not persist).
     block_q:      query-block size of the batched engine's Phase-2
                   schedule (queries gathered/poured per tile).
     rev_block:    row-block size of the streamed reverse-RWMD scorer.
@@ -78,6 +94,8 @@ class EngineConfig:
     rev_block: int = 256
     pad_multiple: int = 512
     cascade: CascadeSpec | str | None = None
+    autotune: str = "off"
+    tune_cache: str | None = None
 
     def __post_init__(self) -> None:
         if self.method not in METHODS:
@@ -93,6 +111,9 @@ class EngineConfig:
         if self.batch_engine not in ("batched", "scan"):
             raise ValueError(f"unknown batch_engine {self.batch_engine!r}; "
                              "one of ('batched', 'scan')")
+        if self.autotune not in ("off", "cached", "force"):
+            raise ValueError(f"unknown autotune mode {self.autotune!r}; "
+                             "one of ('off', 'cached', 'force')")
         if min(self.block_v, self.block_h, self.block_n, self.block_q,
                self.rev_block, self.pad_multiple) < 1:
             raise ValueError("block sizes and pad_multiple must be >= 1")
@@ -131,13 +152,23 @@ class EngineConfig:
         """Phase-2 rounds actually run (0 for non-ACT methods)."""
         return self.iters if self.spec.uses_iters else 0
 
+    def _kernel_backend(self) -> bool:
+        """True when this config's backend runs the fused kernels: the
+        single-host pallas backend, or the distributed backend's batched
+        pipeline — there the launches run inside the
+        ``kernels/partition`` shard_map shims, which is what makes
+        compiled ``pallas_call`` legal on the mesh (the scan engine
+        replays per-query graphs and keeps kernels off)."""
+        return (self.backend == "pallas"
+                or (self.backend == "distributed"
+                    and self.batch_engine == "batched"))
+
     def score_kwargs(self) -> dict:
         """Static kwargs for the uniform ``retrieval`` scorer signature."""
         return dict(
             method=self.method,
             iters=self.effective_iters,
-            use_kernels=(self.backend == "pallas"
-                         and self.spec.supports_kernels),
+            use_kernels=self._kernel_backend() and self.spec.supports_kernels,
             block_v=self.block_v, block_h=self.block_h,
             block_n=self.block_n, rev_block=self.rev_block,
             block_q=self.block_q,
@@ -162,14 +193,15 @@ class EngineConfig:
         ``use_kernels`` is keyed off the backend alone — NOT off
         ``config.method``'s kernel support, which the cascade never
         runs; methods without kernels simply ignore the flag. On
-        ``backend="pallas"`` it reaches every layer of the ladder: the
-        Phase-1/2 kernels for stage-1 scoring and the fused candidate
-        kernels (``kernels/cand_pour``) for the compacted stages and
-        jittable rescorers."""
+        ``backend="pallas"`` and the distributed backend's batched
+        pipeline it reaches every layer of the ladder: the Phase-1/2
+        kernels for stage-1 scoring and the fused candidate kernels
+        (``kernels/cand_pour``) for the compacted stages and jittable
+        rescorers."""
         kw = self.score_kwargs()
         kw.pop("method")
         kw.pop("iters")
-        kw["use_kernels"] = self.backend == "pallas"
+        kw["use_kernels"] = self._kernel_backend()
         return kw
 
     def cascade_step_kwargs(self) -> dict:

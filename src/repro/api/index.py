@@ -52,6 +52,7 @@ class EmdIndex:
     _scores_step: Any = None
     _padded_corpus: Corpus | None = None
     _cascade_step: Any = None
+    _tuned: Any = None
 
     def __repr__(self) -> str:
         mesh = "" if self._mesh is None else f", mesh={dict(self._mesh.shape)}"
@@ -69,10 +70,22 @@ class EmdIndex:
         ``mesh``: distributed backend only — the device mesh to shard
         over; defaults to a single-device (1, 1) data x model mesh so
         single-host callers and multi-host launchers run the same code.
+
+        With ``config.autotune != "off"`` the kernel tile knobs are
+        resolved here, once, through ``repro.kernels.autotune`` (cached
+        winners under ``"cached"``, a timed sweep of VMEM-admissible
+        configs under ``"force"``); the applied picks are recorded on
+        :attr:`tuned_blocks` and the jitted steps below compile with
+        them baked in.
         """
         config = EngineConfig() if config is None else config
+        tuned: dict = {}
+        if config.autotune != "off":
+            from repro.kernels import autotune
+            config, tuned = autotune.resolve_config(corpus, config)
         if config.backend != "distributed":
-            return cls(corpus=jax.device_put(corpus), config=config)
+            return cls(corpus=jax.device_put(corpus), config=config,
+                       _tuned=tuned)
 
         from repro.configs.emd_20news import EMDWorkload
         from repro.launch import mesh as mesh_mod
@@ -101,7 +114,7 @@ class EmdIndex:
                         coords=jax.device_put(padded.coords, in_sh[2]))
         return cls(corpus=corpus, config=config, _mesh=mesh,
                    _scores_step=step, _padded_corpus=padded,
-                   _cascade_step=cascade_step)
+                   _cascade_step=cascade_step, _tuned=tuned)
 
     # --------------------------------------------------------- properties
     @property
@@ -117,6 +130,14 @@ class EmdIndex:
     def mesh(self):
         """The device mesh (distributed backend), else ``None``."""
         return self._mesh
+
+    @property
+    def tuned_blocks(self) -> dict:
+        """Autotuned tile picks applied at build: {kernel family ->
+        {block knob: tile}}. Empty when ``config.autotune="off"`` or
+        nothing was eligible (benches record this next to their
+        timings)."""
+        return dict(self._tuned or {})
 
     # ------------------------------------------------------------ scoring
     @staticmethod

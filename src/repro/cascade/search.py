@@ -37,7 +37,7 @@ from repro.sharding import annotate
 Array = jax.Array
 
 _KNOBS = ("use_kernels", "block_v", "block_h", "block_n", "rev_block",
-          "block_q")
+          "block_q", "mesh")
 
 
 class CascadeResult(NamedTuple):
@@ -152,7 +152,7 @@ def cascade_search(corpus: lc.Corpus, Q_ids: Array, Q_w: Array,
                    engine: str = "batched", use_kernels: bool = False,
                    block_v: int = 256, block_h: int = 256,
                    block_n: int = 256, rev_block: int = 256,
-                   block_q: int = 8) -> CascadeResult:
+                   block_q: int = 8, mesh=None) -> CascadeResult:
     """Cascaded top-l search of a ``(nq, h)`` query batch.
 
     ``spec`` is a :class:`~repro.cascade.spec.CascadeSpec` or a preset
@@ -166,12 +166,15 @@ def cascade_search(corpus: lc.Corpus, Q_ids: Array, Q_w: Array,
     fused candidate kernels (``kernels/cand_pour`` — per-query gather and
     reduction in one launch, matching the reference candidate engines to
     within a few ulps, so an admissible cascade's exact-top-l guarantee is
-    unchanged; ``block_n``/``block_v`` tile them).
+    unchanged; ``block_n``/``block_v`` tile them). ``mesh`` (static,
+    hashable) routes the kernel path of every stage through the
+    ``kernels/partition`` shard_map shims when its axes divide — this is
+    how the distributed step runs the kernel cascade COMPILED.
     """
     spec = resolve_spec(spec)
     knobs = dict(engine=engine, use_kernels=use_kernels, block_v=block_v,
                  block_h=block_h, block_n=block_n, rev_block=rev_block,
-                 block_q=block_q)
+                 block_q=block_q, mesh=mesh)
     if rescore.resolve(spec.rescorer).jittable:
         return _cascade_device(corpus, Q_ids, Q_w, spec, top_l,
                                n_valid=n_valid, topk_blocks=topk_blocks,

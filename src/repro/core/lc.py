@@ -450,11 +450,20 @@ def _map_query_blocks(fn, arrays, nq: int, block_q: int):
 
 def _phase1_batched_dispatch(corpus: Corpus, Q_ids: Array, Q_w: Array,
                              k: int, use_kernels: bool, block_v: int,
-                             block_h: int):
+                             block_h: int, mesh=None):
     """Batched Phase 1 via the fused Pallas kernel or the jnp reference.
-    Returns query-major Z, W of shape (nq, v, k) on the handoff layout."""
+    Returns query-major Z, W of shape (nq, v, k) on the handoff layout.
+    On a ``mesh`` whose axes divide (queries over DP, vocabulary over
+    "model") the kernel runs inside a ``shard_map`` partitioning shim."""
     if use_kernels:
         from repro.kernels import ops as kops
+        if mesh is not None:
+            from repro.kernels import partition
+            if partition.phase1_shardable(mesh, Q_ids.shape[0], corpus.v):
+                Z, W = partition.dist_topk_sharded(
+                    mesh, corpus.coords, corpus.coords[Q_ids], Q_w, k,
+                    block_v=block_v, block_h=block_h)
+                return annotate.emd_ladder(Z), annotate.emd_ladder(W)
         Z, S = kops.dist_topk_batched(corpus.coords, corpus.coords[Q_ids], k,
                                       qmask=(Q_w > 0.0), block_v=block_v,
                                       block_h=block_h)
@@ -474,12 +483,14 @@ def pour_min_blocked(corpus: Corpus, Z0: Array, block_q: int) -> Array:
 
 def pour_blocked(corpus: Corpus, Z: Array, W: Array, iters: int,
                  block_q: int, *, use_kernels: bool = False,
-                 block_n: int = 256, block_h: int = 256) -> Array:
+                 block_n: int = 256, block_h: int = 256, mesh=None) -> Array:
     """Query-blocked Phase 2/3 pour: (nq, v, k) handoff ladders ->
     (nq, n) lower bounds. Each block of ``block_q`` queries gathers its
     (bq, n, hmax, k) cost/capacity ladders once and pours (fused Pallas
     kernel when ``use_kernels``); ``iters=0`` degenerates to the
-    nearest-cost dump of Phase 3."""
+    nearest-cost dump of Phase 3. On a ``mesh`` whose axes divide, the
+    kernel path runs inside a ``shard_map`` shim with the query blocking
+    per shard (queries over DP, database rows over "model")."""
     nq = Z.shape[0]
     x = corpus.w
     if iters == 0:
@@ -489,6 +500,12 @@ def pour_blocked(corpus: Corpus, Z: Array, W: Array, iters: int,
     W = W[..., :iters]
     if use_kernels:
         from repro.kernels import ops as kops
+        if mesh is not None:
+            from repro.kernels import partition
+            if partition.rows_shardable(mesh, nq, corpus.n):
+                return partition.act_pour_sharded(
+                    mesh, corpus.ids, corpus.w, Z, W, iters,
+                    block_q=block_q, block_n=block_n, block_h=block_h)
 
         def blk_k(Zb, Wb):
             Zg = Zb[:, corpus.ids]                       # (bq, n, hmax, k)
@@ -571,32 +588,36 @@ def rev_min_full(corpus: Corpus, Dq: Array, Q_w: Array,
 
 @functools.partial(jax.jit, static_argnames=("iters", "use_kernels",
                                              "block_q", "block_v", "block_h",
-                                             "block_n"))
+                                             "block_n", "mesh"))
 def lc_act_scores_batched(corpus: Corpus, Q_ids: Array, Q_w: Array,
                           iters: int = 1, *, use_kernels: bool = False,
                           block_q: int = 8, block_v: int = 256,
-                          block_h: int = 256, block_n: int = 256) -> Array:
+                          block_h: int = 256, block_n: int = 256,
+                          mesh=None) -> Array:
     """Batched LC-ACT: (nq, h) query batch -> (nq, n) lower bounds
-    (stage-1 ranked Phase 1 composed with the query-blocked pour)."""
+    (stage-1 ranked Phase 1 composed with the query-blocked pour).
+    ``mesh`` (static, hashable) routes the kernel path through the
+    ``kernels/partition`` shard_map shims when its axes divide."""
     if iters == 0 and not use_kernels:
         Z0 = phase1_min_batched(corpus.coords, Q_ids, Q_w)
         return pour_min_blocked(corpus, Z0, block_q)
     Z, W = _phase1_batched_dispatch(corpus, Q_ids, Q_w, iters + 1,
-                                    use_kernels, block_v, block_h)
+                                    use_kernels, block_v, block_h, mesh)
     return pour_blocked(corpus, Z, W, iters, block_q,
                         use_kernels=use_kernels, block_n=block_n,
-                        block_h=block_h)
+                        block_h=block_h, mesh=mesh)
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernels", "block_q",
-                                             "block_v", "block_h"))
+                                             "block_v", "block_h", "mesh"))
 def lc_rwmd_scores_batched(corpus: Corpus, Q_ids: Array, Q_w: Array, *,
                            use_kernels: bool = False, block_q: int = 8,
-                           block_v: int = 256, block_h: int = 256) -> Array:
+                           block_v: int = 256, block_h: int = 256,
+                           mesh=None) -> Array:
     """Batched LC-RWMD db -> query (== batched LC-ACT with zero rounds)."""
     return lc_act_scores_batched(corpus, Q_ids, Q_w, iters=0,
                                  use_kernels=use_kernels, block_q=block_q,
-                                 block_v=block_v, block_h=block_h)
+                                 block_v=block_v, block_h=block_h, mesh=mesh)
 
 
 def _rows_model_sharded() -> bool:
@@ -636,14 +657,15 @@ def lc_rwmd_scores_rev_dist(corpus: Corpus, Q_ids: Array, Q_w: Array, *,
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernels", "block_q",
-                                             "block_v", "block_h"))
+                                             "block_v", "block_h", "mesh"))
 def lc_omr_scores_batched(corpus: Corpus, Q_ids: Array, Q_w: Array, *,
                           use_kernels: bool = False, block_q: int = 8,
-                          block_v: int = 256, block_h: int = 256) -> Array:
+                          block_v: int = 256, block_h: int = 256,
+                          mesh=None) -> Array:
     """Batched LC-OMR: shared batched Phase 1 (top-2 per vocabulary row),
     query-blocked Algorithm-1 reduction."""
     Z, W = _phase1_batched_dispatch(corpus, Q_ids, Q_w, 2, use_kernels,
-                                    block_v, block_h)
+                                    block_v, block_h, mesh)
     return omr_reduce_blocked(corpus, Z, W[..., 0], block_q)
 
 
@@ -789,13 +811,26 @@ def gather_per_query(A: Array, idx: Array) -> Array:
 
 def pour_min_cand_blocked(corpus: Corpus, Z0: Array, cand: Array,
                           block_q: int, *, use_kernels: bool = False,
-                          block_n: int = 128, block_v: int = 256) -> Array:
+                          block_n: int = 128, block_v: int = 256,
+                          mesh=None) -> Array:
     """Candidate-compacted zero-round pour: Z0 (nq, v), cand (nq, b)
     -> (nq, b) scores at the candidate rows. ``use_kernels`` fuses the
     gather + dump into one ``kernels/cand_pour`` launch (block_n
-    candidate rows x block_v vocabulary rows per tile)."""
+    candidate rows x block_v vocabulary rows per tile); on a ``mesh``
+    whose DP axes divide the query batch, the launch runs inside a
+    ``shard_map`` shim with the sub-corpus gather kept outside."""
     if use_kernels:
         from repro.kernels import ops as kops
+        if mesh is not None:
+            from repro.kernels import partition
+            if partition.queries_shardable(mesh, Z0.shape[0]):
+                idsg, xg = corpus.ids[cand], corpus.w[cand]
+
+                def sh_k(idsb, xb, Zb):
+                    return kops.cand_pour(idsb, xb, Zb[..., None], None, 0,
+                                          block_n=block_n, block_v=block_v)
+                return partition.cand_sharded(mesh, sh_k, (idsg, xg, Z0),
+                                              block_q)
 
         def blk_k(Zb, cb):                               # (bq, v), (bq, b)
             return kops.cand_pour(corpus.ids[cb], corpus.w[cb],
@@ -812,18 +847,30 @@ def pour_min_cand_blocked(corpus: Corpus, Z0: Array, cand: Array,
 def pour_cand_blocked(corpus: Corpus, Z: Array, W: Array, cand: Array,
                       iters: int, block_q: int, *,
                       use_kernels: bool = False, block_n: int = 128,
-                      block_v: int = 256) -> Array:
+                      block_v: int = 256, mesh=None) -> Array:
     """Candidate-compacted Phase 2/3 pour: (nq, v, k) handoff ladders +
     (nq, b) candidate rows -> (nq, b) lower bounds. ``use_kernels`` fuses
-    gather + pour into one ``kernels/cand_pour`` launch."""
+    gather + pour into one ``kernels/cand_pour`` launch (``shard_map``
+    shim on a dividing ``mesh``)."""
     nq = Z.shape[0]
     if iters == 0:
         return pour_min_cand_blocked(corpus, Z[..., 0], cand, block_q,
                                      use_kernels=use_kernels,
-                                     block_n=block_n, block_v=block_v)
+                                     block_n=block_n, block_v=block_v,
+                                     mesh=mesh)
     W = W[..., :iters]
     if use_kernels:
         from repro.kernels import ops as kops
+        if mesh is not None:
+            from repro.kernels import partition
+            if partition.queries_shardable(mesh, nq):
+                idsg, xg = corpus.ids[cand], corpus.w[cand]
+
+                def sh_k(idsb, xb, Zb, Wb):
+                    return kops.cand_pour(idsb, xb, Zb, Wb, iters,
+                                          block_n=block_n, block_v=block_v)
+                return partition.cand_sharded(mesh, sh_k, (idsg, xg, Z, W),
+                                              block_q)
 
         def blk_k(Zb, Wb, cb):
             return kops.cand_pour(corpus.ids[cb], corpus.w[cb], Zb, Wb,
@@ -841,12 +888,23 @@ def pour_cand_blocked(corpus: Corpus, Z: Array, W: Array, cand: Array,
 def omr_reduce_cand_blocked(corpus: Corpus, Z: Array, W0: Array,
                             cand: Array, block_q: int, *,
                             use_kernels: bool = False, block_n: int = 128,
-                            block_v: int = 256) -> Array:
+                            block_v: int = 256, mesh=None) -> Array:
     """Candidate-compacted Algorithm-1 reduction: Z (nq, v, 2), W0 (nq, v),
     cand (nq, b) -> (nq, b) LC-OMR bounds. ``use_kernels`` fuses gather +
-    reduce into one ``kernels/cand_pour`` launch (mode "omr")."""
+    reduce into one ``kernels/cand_pour`` launch (mode "omr";
+    ``shard_map`` shim on a dividing ``mesh``)."""
     if use_kernels:
         from repro.kernels import ops as kops
+        if mesh is not None:
+            from repro.kernels import partition
+            if partition.queries_shardable(mesh, Z.shape[0]):
+                idsg, xg = corpus.ids[cand], corpus.w[cand]
+
+                def sh_k(idsb, xb, Zb, W0b):
+                    return kops.cand_omr(idsb, xb, Zb, W0b,
+                                         block_n=block_n, block_v=block_v)
+                return partition.cand_sharded(mesh, sh_k, (idsg, xg, Z, W0),
+                                              block_q)
 
         def blk_k(Zb, W0b, cb):
             return kops.cand_omr(corpus.ids[cb], corpus.w[cb], Zb, W0b,
@@ -868,12 +926,24 @@ def omr_reduce_cand_blocked(corpus: Corpus, Z: Array, W0: Array,
 def rev_min_cand_blocked(corpus: Corpus, Dq: Array, Q_w: Array,
                          cand: Array, block_q: int, *,
                          use_kernels: bool = False, block_n: int = 128,
-                         block_v: int = 256) -> Array:
+                         block_v: int = 256, mesh=None) -> Array:
     """Candidate-compacted reverse masked (min,+) reduction: Dq (nq, v, h),
     cand (nq, b) -> (nq, b) reverse-RWMD bounds. ``use_kernels`` fuses
-    gather + reduce into one ``kernels/cand_pour`` launch."""
+    gather + reduce into one ``kernels/cand_pour`` launch (``shard_map``
+    shim on a dividing ``mesh``)."""
     if use_kernels:
         from repro.kernels import ops as kops
+        if mesh is not None:
+            from repro.kernels import partition
+            if partition.queries_shardable(mesh, Dq.shape[0]):
+                idsg, xg = corpus.ids[cand], corpus.w[cand]
+
+                def sh_k(idsb, xb, Db, Wb):
+                    return kops.cand_rev_min(idsb, xb, Db, Wb,
+                                             block_n=block_n,
+                                             block_v=block_v)
+                return partition.cand_sharded(mesh, sh_k,
+                                              (idsg, xg, Dq, Q_w), block_q)
 
         def blk_k(Db, Wb, cb):
             return kops.cand_rev_min(corpus.ids[cb], corpus.w[cb], Db, Wb,
@@ -899,14 +969,25 @@ def rev_min_cand_blocked(corpus: Corpus, Dq: Array, Q_w: Array,
 def ict_reduce_cand_blocked(corpus: Corpus, Dq: Array, Q_w: Array,
                             cand: Array, block_q: int, *,
                             use_kernels: bool = False, block_n: int = 128,
-                            block_v: int = 256) -> Array:
+                            block_v: int = 256, mesh=None) -> Array:
     """Candidate-compacted Algorithm-2 reduction: Dq (nq, v, h),
     cand (nq, b) -> (nq, b) LC-ICT bounds. ``use_kernels`` fuses gather +
-    full-ladder pour into one ``kernels/cand_pour`` launch; both paths
-    run :func:`ict_pour`, so the remainder dump stays at the max FINITE
-    cost (a PAD_DIST dump would explode float residue — see its doc)."""
+    full-ladder pour into one ``kernels/cand_pour`` launch (``shard_map``
+    shim on a dividing ``mesh``); both paths run :func:`ict_pour`, so the
+    remainder dump stays at the max FINITE cost (a PAD_DIST dump would
+    explode float residue — see its doc)."""
     if use_kernels:
         from repro.kernels import ops as kops
+        if mesh is not None:
+            from repro.kernels import partition
+            if partition.queries_shardable(mesh, Dq.shape[0]):
+                idsg, xg = corpus.ids[cand], corpus.w[cand]
+
+                def sh_k(idsb, xb, Db, Wb):
+                    return kops.cand_ict(idsb, xb, Db, Wb, block_n=block_n,
+                                         block_v=block_v)
+                return partition.cand_sharded(mesh, sh_k,
+                                              (idsg, xg, Dq, Q_w), block_q)
 
         def blk_k(Db, Wb, cb):
             return kops.cand_ict(corpus.ids[cb], corpus.w[cb], Db, Wb,
@@ -947,17 +1028,19 @@ def _pin_handoff(*arrays):
     return out[0] if len(arrays) == 1 else out
 
 
-_CAND_STATIC = ("use_kernels", "block_q", "block_n", "block_v")
+_CAND_STATIC = ("use_kernels", "block_q", "block_n", "block_v", "mesh")
 
 
 @functools.partial(jax.jit, static_argnames=("iters",) + _CAND_STATIC)
 def lc_act_scores_cand(corpus: Corpus, Q_ids: Array, Q_w: Array,
                        cand: Array, iters: int = 1, *,
                        use_kernels: bool = False, block_q: int = 8,
-                       block_n: int = 128, block_v: int = 256) -> Array:
+                       block_n: int = 128, block_v: int = 256,
+                       mesh=None) -> Array:
     """Candidate-compacted batched LC-ACT: (nq, h) queries scored against
     each query's own (b,) candidate rows -> (nq, b)."""
-    kw = dict(use_kernels=use_kernels, block_n=block_n, block_v=block_v)
+    kw = dict(use_kernels=use_kernels, block_n=block_n, block_v=block_v,
+              mesh=mesh)
     if iters == 0:
         Z0 = _pin_handoff(phase1_min_batched(corpus.coords, Q_ids, Q_w))
         return pour_min_cand_blocked(corpus, Z0, cand, block_q, **kw)
@@ -970,46 +1053,46 @@ def lc_act_scores_cand(corpus: Corpus, Q_ids: Array, Q_w: Array,
 def lc_rwmd_scores_cand(corpus: Corpus, Q_ids: Array, Q_w: Array,
                         cand: Array, *, use_kernels: bool = False,
                         block_q: int = 8, block_n: int = 128,
-                        block_v: int = 256) -> Array:
+                        block_v: int = 256, mesh=None) -> Array:
     """Candidate-compacted batched LC-RWMD db -> query."""
     return lc_act_scores_cand(corpus, Q_ids, Q_w, cand, iters=0,
                               use_kernels=use_kernels, block_q=block_q,
-                              block_n=block_n, block_v=block_v)
+                              block_n=block_n, block_v=block_v, mesh=mesh)
 
 
 @functools.partial(jax.jit, static_argnames=_CAND_STATIC)
 def lc_rwmd_scores_rev_cand(corpus: Corpus, Q_ids: Array, Q_w: Array,
                             cand: Array, *, use_kernels: bool = False,
                             block_q: int = 8, block_n: int = 128,
-                            block_v: int = 256) -> Array:
+                            block_v: int = 256, mesh=None) -> Array:
     """Candidate-compacted batched LC-RWMD query -> db."""
     Dq = _pin_handoff(_rev_handoff(phase1_stacked_dist(corpus.coords,
                                                        Q_ids, Q_w)))
     return rev_min_cand_blocked(corpus, Dq, Q_w, cand, block_q,
                                 use_kernels=use_kernels, block_n=block_n,
-                                block_v=block_v)
+                                block_v=block_v, mesh=mesh)
 
 
 @functools.partial(jax.jit, static_argnames=_CAND_STATIC)
 def lc_omr_scores_cand(corpus: Corpus, Q_ids: Array, Q_w: Array,
                        cand: Array, *, use_kernels: bool = False,
                        block_q: int = 8, block_n: int = 128,
-                       block_v: int = 256) -> Array:
+                       block_v: int = 256, mesh=None) -> Array:
     """Candidate-compacted batched LC-OMR."""
     Z, W = _pin_handoff(*phase1_batched(corpus.coords, Q_ids, Q_w, 2))
     return omr_reduce_cand_blocked(corpus, Z, W[..., 0], cand, block_q,
                                    use_kernels=use_kernels, block_n=block_n,
-                                   block_v=block_v)
+                                   block_v=block_v, mesh=mesh)
 
 
 @functools.partial(jax.jit, static_argnames=_CAND_STATIC)
 def lc_ict_scores_cand(corpus: Corpus, Q_ids: Array, Q_w: Array,
                        cand: Array, *, use_kernels: bool = False,
                        block_q: int = 8, block_n: int = 128,
-                       block_v: int = 256) -> Array:
+                       block_v: int = 256, mesh=None) -> Array:
     """Candidate-compacted batched LC-ICT (the cascade's tight rescorer)."""
     Dq = _pin_handoff(_rev_handoff(phase1_stacked_dist(corpus.coords,
                                                        Q_ids, Q_w)))
     return ict_reduce_cand_blocked(corpus, Dq, Q_w, cand, block_q,
                                    use_kernels=use_kernels, block_n=block_n,
-                                   block_v=block_v)
+                                   block_v=block_v, mesh=mesh)

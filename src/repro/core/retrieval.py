@@ -171,11 +171,11 @@ def _rwmd(corpus, q_ids, q_w, *, use_kernels=False, block_v=256,
 
 @_register_batch("rwmd")
 def _rwmd_batch(corpus, q_ids, q_w, *, use_kernels=False, block_v=256,
-                block_h=256, block_q=8, **_):
+                block_h=256, block_q=8, mesh=None, **_):
     return lc.lc_rwmd_scores_batched(corpus, q_ids, q_w,
                                      use_kernels=use_kernels,
                                      block_q=block_q, block_v=block_v,
-                                     block_h=block_h)
+                                     block_h=block_h, mesh=mesh)
 
 
 @_register("rwmd_rev", paper_name="LC-RWMD (query -> db)", reverse="rwmd")
@@ -197,19 +197,20 @@ def _rwmd_rev_dist(corpus, q_ids, q_w, *, rev_block=256, block_q=8, **_):
 
 @_register_cand("rwmd")
 def _rwmd_cand(corpus, q_ids, q_w, cand, *, block_q=8, use_kernels=False,
-               block_n=256, block_v=256, **_):
+               block_n=256, block_v=256, mesh=None, **_):
     return lc.lc_rwmd_scores_cand(corpus, q_ids, q_w, cand, block_q=block_q,
                                   use_kernels=use_kernels, block_n=block_n,
-                                  block_v=block_v)
+                                  block_v=block_v, mesh=mesh)
 
 
 @_register_cand("rwmd_rev")
 def _rwmd_rev_cand(corpus, q_ids, q_w, cand, *, block_q=8, use_kernels=False,
-                   block_n=256, block_v=256, **_):
+                   block_n=256, block_v=256, mesh=None, **_):
     return lc.lc_rwmd_scores_rev_cand(corpus, q_ids, q_w, cand,
                                       block_q=block_q,
                                       use_kernels=use_kernels,
-                                      block_n=block_n, block_v=block_v)
+                                      block_n=block_n, block_v=block_v,
+                                      mesh=mesh)
 
 
 @_register_symmetric_batch("rwmd", "rwmd_rev")
@@ -232,18 +233,19 @@ def _omr(corpus, q_ids, q_w, *, use_kernels=False, block_v=256,
 
 @_register_batch("omr")
 def _omr_batch(corpus, q_ids, q_w, *, use_kernels=False, block_v=256,
-               block_h=256, block_q=8, **_):
+               block_h=256, block_q=8, mesh=None, **_):
     return lc.lc_omr_scores_batched(corpus, q_ids, q_w,
                                     use_kernels=use_kernels, block_q=block_q,
-                                    block_v=block_v, block_h=block_h)
+                                    block_v=block_v, block_h=block_h,
+                                    mesh=mesh)
 
 
 @_register_cand("omr")
 def _omr_cand(corpus, q_ids, q_w, cand, *, block_q=8, use_kernels=False,
-              block_n=256, block_v=256, **_):
+              block_n=256, block_v=256, mesh=None, **_):
     return lc.lc_omr_scores_cand(corpus, q_ids, q_w, cand, block_q=block_q,
                                  use_kernels=use_kernels, block_n=block_n,
-                                 block_v=block_v)
+                                 block_v=block_v, mesh=mesh)
 
 
 @_register("act", paper_name="LC-ACT-k", uses_iters=True,
@@ -257,19 +259,20 @@ def _act(corpus, q_ids, q_w, *, iters=1, use_kernels=False, block_v=256,
 
 @_register_batch("act")
 def _act_batch(corpus, q_ids, q_w, *, iters=1, use_kernels=False,
-               block_v=256, block_h=256, block_n=256, block_q=8, **_):
+               block_v=256, block_h=256, block_n=256, block_q=8, mesh=None,
+               **_):
     return lc.lc_act_scores_batched(corpus, q_ids, q_w, iters=iters,
                                     use_kernels=use_kernels, block_q=block_q,
                                     block_v=block_v, block_h=block_h,
-                                    block_n=block_n)
+                                    block_n=block_n, mesh=mesh)
 
 
 @_register_cand("act")
 def _act_cand(corpus, q_ids, q_w, cand, *, iters=1, block_q=8,
-              use_kernels=False, block_n=256, block_v=256, **_):
+              use_kernels=False, block_n=256, block_v=256, mesh=None, **_):
     return lc.lc_act_scores_cand(corpus, q_ids, q_w, cand, iters=iters,
                                  block_q=block_q, use_kernels=use_kernels,
-                                 block_n=block_n, block_v=block_v)
+                                 block_n=block_n, block_v=block_v, mesh=mesh)
 
 
 @_register("ict", paper_name="LC-ICT (db -> query)")
@@ -288,10 +291,10 @@ def _ict_batch(corpus, q_ids, q_w, *, block_q=8, **_):
 
 @_register_cand("ict")
 def _ict_cand(corpus, q_ids, q_w, cand, *, block_q=8, use_kernels=False,
-              block_n=256, block_v=256, **_):
+              block_n=256, block_v=256, mesh=None, **_):
     return lc.lc_ict_scores_cand(corpus, q_ids, q_w, cand, block_q=block_q,
                                  use_kernels=use_kernels, block_n=block_n,
-                                 block_v=block_v)
+                                 block_v=block_v, mesh=mesh)
 
 
 @_register("bow", paper_name="BoW cosine baseline", symmetric=True)
@@ -391,14 +394,14 @@ def query_scores(corpus: lc.Corpus, q_ids: Array, q_w: Array, *,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("method", "symmetric", "engine")
+                   static_argnames=("method", "symmetric", "engine", "mesh")
                    + _STATIC_KW[1:])
 def batch_scores(corpus: lc.Corpus, q_ids: Array, q_w: Array, *,
                  method: str = "act", symmetric: bool = False,
                  engine: str = "batched", iters: int = 1,
                  use_kernels: bool = False, block_v: int = 256,
                  block_h: int = 256, block_n: int = 256,
-                 rev_block: int = 256, block_q: int = 8) -> Array:
+                 rev_block: int = 256, block_q: int = 8, mesh=None) -> Array:
     """Batch of queries ``(nq, h)`` -> ``(nq, n)`` score matrix.
 
     ``engine="batched"`` (default) dispatches to the method's multi-query
@@ -408,7 +411,11 @@ def batch_scores(corpus: lc.Corpus, q_ids: Array, q_w: Array, *,
     with mesh-specialized overrides where registered (``spec.dist_fn``);
     it is what the distributed step in ``launch/search.py`` traces — the
     pipeline stages carry their own sharding constraints, so on a single
-    host it scores identically to ``batched``. ``engine="scan"`` is the
+    host it scores identically to ``batched``. ``mesh`` (static, hashable)
+    additionally routes the kernel path through the ``kernels/partition``
+    shard_map shims when its axes divide the problem — required for
+    COMPILED ``pallas_call`` on a mesh, which has no SPMD partitioning
+    rule of its own. ``engine="scan"`` is the
     fallback that runs each query through the exact single-query compute
     graph via ``lax.map``, matching a Python loop of ``query_scores``
     calls bit-for-bit; use it to verify the batched engine or on methods
@@ -424,7 +431,7 @@ def batch_scores(corpus: lc.Corpus, q_ids: Array, q_w: Array, *,
                 else s.batch_fn
         kw = dict(iters=iters, use_kernels=use_kernels, block_v=block_v,
                   block_h=block_h, block_n=block_n, rev_block=rev_block,
-                  block_q=block_q)
+                  block_q=block_q, mesh=mesh)
         if symmetric and not spec.symmetric:
             if spec.reverse is None:
                 raise ValueError(
@@ -501,12 +508,13 @@ def all_pairs_scores(corpus: lc.Corpus, method: str = "act",
     return lc.symmetric_scores(asym)
 
 
-@functools.partial(jax.jit, static_argnames=("method",) + _STATIC_KW[1:])
+@functools.partial(jax.jit,
+                   static_argnames=("method", "mesh") + _STATIC_KW[1:])
 def cand_scores(corpus: lc.Corpus, q_ids: Array, q_w: Array, cand: Array, *,
                 method: str = "act", iters: int = 1,
                 use_kernels: bool = False, block_v: int = 256,
                 block_h: int = 256, block_n: int = 256,
-                rev_block: int = 256, block_q: int = 8) -> Array:
+                rev_block: int = 256, block_q: int = 8, mesh=None) -> Array:
     """Candidate-compacted scoring: ``(nq, h)`` queries against each
     query's own ``(b,)`` candidate rows -> ``(nq, b)`` scores.
 
@@ -525,7 +533,7 @@ def cand_scores(corpus: lc.Corpus, q_ids: Array, q_w: Array, cand: Array, *,
     return spec.cand_fn(corpus, q_ids, q_w, cand, iters=iters,
                         use_kernels=use_kernels, block_v=block_v,
                         block_h=block_h, block_n=block_n,
-                        rev_block=rev_block, block_q=block_q)
+                        rev_block=rev_block, block_q=block_q, mesh=mesh)
 
 
 def _mask_self(scores: Array) -> Array:

@@ -43,6 +43,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.lc import PAD_DIST, ict_pour, pour
 
@@ -100,28 +101,58 @@ def _cand_pour_kernel(idsg_ref, xg_ref, table_ref, t_ref, *, k: int,
     t_ref[...] = t[None]
 
 
-def _cand_dist_kernel(idsg_ref, xg_ref, dq_ref, qw_ref, t_ref, *, mode: str,
-                      block_v: int):
-    """Grid = (nq, cand_blocks). Gathers the (bb, hmax, h) per-entry cost
-    rows from the query's (v, h) distance handoff, then reduces:
-    masked (min,+) . q_w ("rev_min") or the full sorted ladder ("ict")."""
+def _cand_dist_kernel(idsg_ref, xg_ref, dq_ref, qw_ref, t_ref, acc_ref, *,
+                      mode: str):
+    """Grid = (nq, cand_blocks, vocab_blocks). The vocabulary axis is the
+    INNERMOST (fastest) grid dimension: each step sees one (block_v, h)
+    slab of the query's distance handoff, accumulates its one-hot-matmul
+    gather contribution into the persistent VMEM scratch ``acc_ref``, and
+    on the last slab reduces the completed (bb, hmax, h) cost tensor:
+    masked (min,+) . q_w ("rev_min") or the full sorted ladder ("ict").
+
+    Streaming keeps the per-launch dq residency at one ``block_v`` slab
+    instead of the full (vp, h) table, so paper-scale handoffs (20News:
+    vp ~ 70k, h = 500) fit the 16 MiB double-buffered VMEM budget. Each
+    entry id matches exactly one slab, so the running sum adds exact
+    zeros elsewhere and the gathered ladder stays BITWISE the XLA
+    gather's result (values are non-negative; +0 init is exact)."""
     ids = idsg_ref[0]                                    # (bb, hmax)
     bb, hmax = ids.shape
-    qw = qw_ref[0].astype(jnp.float32)                   # (h,)
-    C = _gather_rows(ids.reshape(-1), dq_ref[0], block_v)
-    C = C.reshape(bb, hmax, qw.shape[0])
-    x = xg_ref[0].astype(jnp.float32)
-    if mode == "rev_min":
-        big = jnp.asarray(PAD_DIST, C.dtype)
-        Dg = jnp.where((x > 0.0)[..., None], C, big)
-        cmin = jnp.min(Dg, axis=1)                       # (bb, h)
-        # multiply + reduce, matching lc.rev_min_cand_blocked bit-for-bit
-        # (a dot op's accumulation varies with the tile's row count)
-        t = jnp.sum(cmin * qw[None, :], axis=-1)
-    else:                                                # "ict"
-        cap = jnp.broadcast_to(qw[None, None, :], C.shape)
-        t = ict_pour(x, cap, C)
-    t_ref[...] = t[None]
+    u = pl.program_id(2)
+    blk = dq_ref[0]                                      # (block_v, h)
+    block_v = blk.shape[0]
+    r = bb * hmax
+    col = jax.lax.broadcasted_iota(jnp.int32, (r, block_v), 1)
+    onehot = (ids.reshape(-1)[:, None] - u * block_v == col
+              ).astype(jnp.float32)
+    contrib = jax.lax.dot_general(onehot, blk, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    @pl.when(u == 0)
+    def _init():
+        acc_ref[...] = contrib
+
+    @pl.when(u > 0)
+    def _accumulate():
+        acc_ref[...] = acc_ref[...] + contrib
+
+    @pl.when(u == pl.num_programs(2) - 1)
+    def _reduce():
+        qw = qw_ref[0].astype(jnp.float32)               # (h,)
+        C = acc_ref[...].reshape(bb, hmax, qw.shape[0])
+        x = xg_ref[0].astype(jnp.float32)
+        if mode == "rev_min":
+            big = jnp.asarray(PAD_DIST, C.dtype)
+            Dg = jnp.where((x > 0.0)[..., None], C, big)
+            cmin = jnp.min(Dg, axis=1)                   # (bb, h)
+            # multiply + reduce, matching lc.rev_min_cand_blocked
+            # bit-for-bit (a dot op's accumulation varies with the
+            # tile's row count)
+            t = jnp.sum(cmin * qw[None, :], axis=-1)
+        else:                                            # "ict"
+            cap = jnp.broadcast_to(qw[None, None, :], C.shape)
+            t = ict_pour(x, cap, C)
+        t_ref[...] = t[None]
 
 
 def _check_cand(idsg, xg, block_n: int):
@@ -187,22 +218,31 @@ def cand_dist_pallas(idsg: jax.Array, xg: jax.Array, dq: jax.Array,
       qw:   (nq, h) query weights (0 at padded bins).
     Returns t: (nq, b) scores at the candidate rows.
     Caller guarantees b % block_n == 0 and vp % block_v == 0 (see ops.py).
+
+    Unlike ``cand_pour_pallas`` (whose narrow Z|W table fits VMEM whole),
+    the (vp, h) distance handoff is streamed: the grid carries a third,
+    innermost vocabulary axis delivering one (block_v, h) slab per step,
+    with the gather accumulated in a VMEM scratch and the reduction run
+    once on the final slab. The output block's index map ignores the
+    vocab axis, so the (1, block_n) tile is written exactly once — on the
+    last slab, just before the candidate index advances.
     """
     assert mode in DIST_MODES, mode
     nq, b, hmax = _check_cand(idsg, xg, block_n)
     vp, h = dq.shape[1], dq.shape[2]
     assert vp % block_v == 0 and qw.shape == (nq, h), (dq.shape, qw.shape)
-    kernel = functools.partial(_cand_dist_kernel, mode=mode, block_v=block_v)
+    kernel = functools.partial(_cand_dist_kernel, mode=mode)
     return pl.pallas_call(
         kernel,
-        grid=(nq, b // block_n),
+        grid=(nq, b // block_n, vp // block_v),
         in_specs=[
-            pl.BlockSpec((1, block_n, hmax), lambda q, i: (q, i, 0)),
-            pl.BlockSpec((1, block_n, hmax), lambda q, i: (q, i, 0)),
-            pl.BlockSpec((1, vp, h), lambda q, i: (q, 0, 0)),
-            pl.BlockSpec((1, h), lambda q, i: (q, 0)),
+            pl.BlockSpec((1, block_n, hmax), lambda q, i, u: (q, i, 0)),
+            pl.BlockSpec((1, block_n, hmax), lambda q, i, u: (q, i, 0)),
+            pl.BlockSpec((1, block_v, h), lambda q, i, u: (q, u, 0)),
+            pl.BlockSpec((1, h), lambda q, i, u: (q, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_n), lambda q, i: (q, i)),
+        out_specs=pl.BlockSpec((1, block_n), lambda q, i, u: (q, i)),
         out_shape=jax.ShapeDtypeStruct((nq, b), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_n * hmax, h), jnp.float32)],
         interpret=interpret,
     )(idsg, xg, dq, qw)

@@ -392,7 +392,10 @@ def _cand_dist_layout(*, nq: int, b: int, h: int, v: int, qh: int,
     r = block_n * h
     scratch = [
         BlockBuffer("onehot", (r, block_v), role="scratch"),
-        BlockBuffer("gathered", (r, qh), role="scratch"),
+        # the running gather accumulator: persists across the streamed
+        # vocabulary slabs, holds the completed (r, qh) cost tensor on
+        # the last one
+        BlockBuffer("acc", (r, qh), role="scratch"),
         # rev_min: the PAD_DIST-masked copy; ict: ict_pour's sorted
         # ladder + cumsum, ~2 extra copies of the gathered cost tile
         BlockBuffer("reduce_tmp",
@@ -401,11 +404,13 @@ def _cand_dist_layout(*, nq: int, b: int, h: int, v: int, qh: int,
     ]
     return KernelBlocks(
         family="cand_dist",
-        grid=(nq, bp // block_n),
+        grid=(nq, bp // block_n, vp // block_v),
         buffers=(
             BlockBuffer("idsg", (1, block_n, h), "int32"),
             BlockBuffer("xg", (1, block_n, h)),
-            BlockBuffer("dq", (1, vp, qh)),
+            # one streamed slab per grid step — NOT the full (vp, qh)
+            # handoff; this is what fits cand_dist at 20News dims
+            BlockBuffer("dq", (1, block_v, qh)),
             BlockBuffer("qw", (1, qh)),
             BlockBuffer("t", (1, block_n), role="out"),
             *scratch,

@@ -70,7 +70,7 @@ def make_scores_step(iters: int = 1, *, method: str = "act",
                      symmetric: bool = False, engine: str = "dist",
                      use_kernels: bool = False, block_q: int = 8,
                      block_v: int = 256, block_h: int = 256,
-                     block_n: int = 256, rev_block: int = 256):
+                     block_n: int = 256, rev_block: int = 256, mesh=None):
     """Returns scores_step(corpus_ids, corpus_w, coords, q_ids, q_w)
     -> full (nq, n) score matrix for ``method``.
 
@@ -79,7 +79,9 @@ def make_scores_step(iters: int = 1, *, method: str = "act",
     method's mesh-specialized scorer where one is registered and its
     plain batched scorer otherwise; ``engine="scan"`` replays the exact
     single-query graphs (verification). All the batch knobs of the
-    single-host engine apply unchanged.
+    single-host engine apply unchanged. ``mesh`` routes the kernel path
+    through the ``kernels/partition`` shard_map shims (the jit_* helpers
+    pass their mesh themselves).
     """
     def scores_step(corpus_ids, corpus_w, coords, q_ids, q_w):
         corpus = lc.Corpus(ids=corpus_ids, w=corpus_w, coords=coords)
@@ -87,7 +89,7 @@ def make_scores_step(iters: int = 1, *, method: str = "act",
             corpus, q_ids, q_w, method=method, symmetric=symmetric,
             engine=engine, iters=iters, use_kernels=use_kernels,
             block_v=block_v, block_h=block_h, block_n=block_n,
-            rev_block=rev_block, block_q=block_q)
+            rev_block=rev_block, block_q=block_q, mesh=mesh)
 
     return scores_step
 
@@ -169,7 +171,7 @@ def jit_search_step(workload, mesh, top_l: int = 16, iters: int | None = None,
     n_valid = workload.n_db if n_valid is None else n_valid
     method = workload_method(workload) if method is None else method
     step = make_search_step(iters, top_l, n_valid=n_valid, method=method,
-                            **score_kw)
+                            mesh=mesh, **score_kw)
     in_sh, out_sh = search_shardings(mesh, workload)
     return jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
 
@@ -179,7 +181,7 @@ def jit_scores_step(workload, mesh, iters: int | None = None, *,
     """Jitted full-score-matrix step on ``mesh`` (``repro.api`` backend)."""
     iters = workload.iters if iters is None else iters
     method = workload_method(workload) if method is None else method
-    step = make_scores_step(iters, method=method, **score_kw)
+    step = make_scores_step(iters, method=method, mesh=mesh, **score_kw)
     in_sh, out_sh = scores_shardings(mesh, workload, method=method)
     return jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
 
@@ -203,7 +205,8 @@ def make_cascade_search_step(spec, top_l: int = 16,
                              topk_blocks: int = 1, engine: str = "dist",
                              use_kernels: bool = False, block_q: int = 8,
                              block_v: int = 256, block_h: int = 256,
-                             block_n: int = 256, rev_block: int = 256):
+                             block_n: int = 256, rev_block: int = 256,
+                             mesh=None):
     """Returns cascade_step(corpus_ids, corpus_w, coords, q_ids, q_w)
     -> (top-l rescorer scores, top-l global row indices), each (nq, top_l).
 
@@ -212,10 +215,13 @@ def make_cascade_search_step(spec, top_l: int = 16,
     cannot run inside a mesh step. ``n_valid`` masks zero-weight pad rows
     out of candidacy before the stage-1 top-budget. ``use_kernels``
     routes stage-1 AND the candidate stages/rescorer through the fused
-    kernels; in interpret mode they lower to plain HLO and shard like any
-    other op (the 8-device conformance test), but COMPILED Pallas calls
-    have no SPMD partitioning rule, so ``EmdIndex`` keeps the flag off on
-    the distributed backend until a shard_map wrapping lands.
+    kernels. Compiled ``pallas_call`` has no SPMD partitioning rule of
+    its own, so on the mesh the kernel launches must run inside the
+    ``kernels/partition`` shard_map shims — pass ``mesh`` (the jit_*
+    helpers do) and the cascade's kernel path partitions explicitly,
+    compiled on TPU and interpreted on the host-mesh conformance oracle
+    alike. Without ``mesh`` the kernel path is only shardable in
+    interpret mode, where the kernels lower to plain HLO.
     """
     from repro import cascade as Cx
 
@@ -234,7 +240,7 @@ def make_cascade_search_step(spec, top_l: int = 16,
             corpus, q_ids, q_w, rspec, top_l, n_valid=n_valid,
             topk_blocks=topk_blocks, engine=engine, use_kernels=use_kernels,
             block_v=block_v, block_h=block_h, block_n=block_n,
-            rev_block=rev_block, block_q=block_q))
+            rev_block=rev_block, block_q=block_q, mesh=mesh))
 
     return cascade_step
 
@@ -255,7 +261,8 @@ def jit_cascade_search_step(workload, mesh, spec, top_l: int = 16,
     if n_padded % max(blocks, 1):
         blocks = 1                       # uneven split: plain global top-k
     step = make_cascade_search_step(spec, top_l, n_valid,
-                                    topk_blocks=blocks, **score_kw)
+                                    topk_blocks=blocks, mesh=mesh,
+                                    **score_kw)
     in_sh, out_sh = search_shardings(mesh, workload)
     return jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
 
@@ -289,6 +296,12 @@ class StepCase:
                    scores — the cascade step exists to avoid exactly
                    that) and for fractional-budget cascades (candidate
                    counts scale with n BY DESIGN).
+    use_kernels:   True routes the case through the fused Pallas kernels
+                   inside the ``kernels/partition`` shard_map shims (the
+                   checker passes its mesh, so the shims engage) — the
+                   kernel cases extend the scaling guard to the shimmed
+                   programs, pinning the "candidate gather stays outside
+                   the shard_map" contract.
     """
     name: str
     kind: str
@@ -296,6 +309,7 @@ class StepCase:
     engine: str
     cascade: object = None
     scale_guarded: bool = False
+    use_kernels: bool = False
 
 
 def step_cases(*, engines: tuple[str, ...] = ("dist", "scan"),
@@ -328,6 +342,16 @@ def step_cases(*, engines: tuple[str, ...] = ("dist", "scan"),
             rescorer="ict")
         cases.append(StepCase("cascade:pinned:dist", "cascade", None,
                               "dist", cascade=pinned, scale_guarded=True))
+        cases.append(StepCase("cascade:pinned:dist:kernels", "cascade",
+                              None, "dist", cascade=pinned,
+                              scale_guarded=True, use_kernels=True))
+    if "dist" in engines:
+        cases += [
+            StepCase(f"scores:{method}:dist:kernels", "scores", method,
+                     "dist", scale_guarded=True, use_kernels=True)
+            for method in sorted(m for m, s in retrieval.METHODS.items()
+                                 if s.supports_kernels)
+        ]
     return tuple(cases)
 
 
@@ -337,6 +361,7 @@ def build_step(case: StepCase, workload, mesh=None, *, top_l: int = 4,
     when ``mesh`` is given (collective checker), the raw traceable
     callable when it is ``None`` (jaxpr hazard walker — no devices
     needed). ``score_kw`` are the usual batch knobs."""
+    score_kw.setdefault("use_kernels", case.use_kernels)
     if case.kind == "scores":
         if mesh is not None:
             return jit_scores_step(workload, mesh, method=case.method,

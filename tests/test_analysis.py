@@ -299,11 +299,14 @@ def test_build_step_rejects_unknown_kind():
 # ------------------------------------------------------------------ bench
 
 def test_bench_check_clean_on_valid_artifacts(tmp_path):
+    provenance = {"device_kind": "cpu",
+                  "autotune": {"mode": "cached", "tune_cache": None,
+                               "tuned_blocks": {"cand_dist": {"block_n": 2}}}}
     batch = tmp_path / "b.json"
     batch.write_text(json.dumps({"entries": [
         {"engine": "batched", "queries_per_sec": 10.0},
         {"engine": "distributed", "queries_per_sec": 5.0},
-    ]}))
+    ], **provenance}))
     cascade = tmp_path / "c.json"
     cascade.write_text(json.dumps({
         "entries": [
@@ -313,6 +316,7 @@ def test_bench_check_clean_on_valid_artifacts(tmp_path):
              "use_kernels": True},
         ],
         "distributed_step": {"recall_at_l": 1.0, "queries_per_sec": 4.0},
+        **provenance,
     }))
     serve = tmp_path / "s.json"
     serve.write_text(json.dumps(_valid_serve()))
@@ -344,6 +348,8 @@ def test_bench_check_rejects_seeded_defects(tmp_path):
     cascade.write_text(json.dumps({
         "entries": [{"recall_at_l": 1.4, "queries_per_sec": 9.0,
                      "use_kernels": False}],
+        "device_kind": "cpu",
+        "autotune": {"mode": "sometimes", "tuned_blocks": {}},
     }))
     serve = tmp_path / "s.json"
     serve.write_text(json.dumps({
@@ -359,6 +365,9 @@ def test_bench_check_rejects_seeded_defects(tmp_path):
                                     cascade_path=str(cascade),
                                     serve_path=str(serve))
     msgs = "\n".join(v.message for v in violations)
+    assert "no device_kind" in msgs             # batch artifact lacks it
+    assert "no autotune record" in msgs
+    assert "autotune mode 'sometimes'" in msgs  # cascade's bad mode
     assert "no distributed-engine entry" in msgs
     assert "outside [0, 1]" in msgs
     assert "use_kernels both ways" in msgs
