@@ -23,18 +23,33 @@ Results append to the CSV stream and land in ``BENCH_cascade.json``
 entry (the mesh cascade step with its shard-blocked top-budget, on a
 single-device mesh here) carrying the same recall + queries/sec fields.
 ``BENCH_SMOKE=1`` shrinks everything to CI smoke sizes.
+
+The CORPUS-SIZE SWEEP (``sweep`` in the report) is the candidate-source
+subsystem's acceptance axis: at each n in {4k, 64k, 1M} (smoke: {256,
+512}) a clustered corpus is searched through ``EmdIndex`` with the
+full-scan cascade (the reference ranking AND the qps bar) and with each
+sublinear source (``centroid_lsh``, ``cluster_tree``), recording
+recall@l vs the full-scan top-l, queries/sec, index build seconds, and
+probed rows per query. The full-scan stage 1 reads all n rows, so its
+qps falls linearly with n; the sourced entries read only their probed
+rows, which is what must show as flat latency and a widening speedup at
+1M (recall@16 >= 0.9 is the acceptance bar; ``analysis/bench_check``
+enforces both).
 """
 from __future__ import annotations
 
 import json
 import os
+import time
 
 import jax
 
 from benchmarks.common import device_kind, emit, paired, text_corpus, timeit
 from repro import cascade
 from repro.api import EmdIndex, EngineConfig
+from repro.candidates import CentroidLSHSpec, ClusterTreeSpec
 from repro.cascade import CascadeSpec, CascadeStage
+from repro.data.synth import make_clustered_text
 
 #: Rescore budgets as fractions of n (the acceptance grid).
 BUDGETS = (0.01, 0.05, 0.20)
@@ -60,6 +75,120 @@ def _sizes(smoke: bool) -> dict:
                     hmax=16, nq=8, top_l=4, reps=3)
     return dict(n_docs=1024, n_classes=8, vocab=512, m=16, doc_len=20,
                 hmax=16, nq=64, top_l=16, reps=7)
+
+
+def _sweep_plan(smoke: bool) -> list[dict]:
+    """Per-n sweep rungs: the full-scan reference ladder (absolute
+    budgets so the scan cost is the only thing growing with n) and the
+    two sublinear sources sized to the corpus. Every source sets
+    ``refine`` to the reference's wcd scan budget: the probed rows are
+    re-ranked by exact centroid distance so the downstream rwmd stage
+    sees the same wcd-prefix geometry the reference cascade does —
+    without it, probed rows outside that prefix crowd true neighbors
+    out of the prune budget (~0.10 recall lost at 64k). Probe counts
+    target ~12% of buckets (the measured recall@16 >= 0.9 operating
+    point); caps carry ~2x headroom over mean occupancy so overflow
+    drops stay in the low percent."""
+    if smoke:
+        return [
+            dict(n=256, scan=64, prune=32,
+                 lsh=CentroidLSHSpec(n_buckets=16, probes=6, bucket_cap=32,
+                                     refine=64),
+                 tree=ClusterTreeSpec(branching=4, depth=2, beam=4,
+                                      probes=3, leaf_cap=32, refine=64)),
+            dict(n=512, scan=128, prune=32,
+                 lsh=CentroidLSHSpec(n_buckets=16, probes=6, bucket_cap=64,
+                                     refine=128),
+                 tree=ClusterTreeSpec(branching=4, depth=2, beam=4,
+                                      probes=3, leaf_cap=64, refine=128)),
+        ]
+    return [
+        dict(n=4096, scan=512, prune=128,
+             lsh=CentroidLSHSpec(n_buckets=64, probes=8, bucket_cap=128,
+                                 refine=512),
+             tree=ClusterTreeSpec(branching=8, depth=2, beam=8, probes=6,
+                                  leaf_cap=128, refine=512)),
+        dict(n=65536, scan=2048, prune=256,
+             lsh=CentroidLSHSpec(n_buckets=256, probes=32, bucket_cap=512,
+                                 refine=2048),
+             tree=ClusterTreeSpec(branching=16, depth=2, beam=16,
+                                  probes=16, leaf_cap=512, refine=2048)),
+        dict(n=1_000_000, scan=4096, prune=256,
+             lsh=CentroidLSHSpec(n_buckets=1024, probes=128,
+                                 bucket_cap=2048, refine=4096),
+             tree=ClusterTreeSpec(branching=16, depth=2, beam=16,
+                                  probes=16, leaf_cap=8192, refine=4096)),
+    ]
+
+
+def _sweep(report: dict, smoke: bool, top_l: int) -> None:
+    """The corpus-size sweep: full-scan reference vs each sublinear
+    source at every n, through ``EmdIndex.search``."""
+    nq = 8 if smoke else 16
+    report["sweep"] = []
+    for rung in _sweep_plan(smoke):
+        n = rung["n"]
+        reps = 2 if (smoke or n >= 1_000_000) else 3
+        # min_len=20: WCD prefetch (and therefore centroid bucketing)
+        # needs documents long enough for centroids to carry topic
+        # signal — at zipf-minimum lengths of 4 the wcd rank of true
+        # neighbors degrades ~10x and no probe budget recovers it.
+        corpus, _ = make_clustered_text(
+            n, n_topics=8 if smoke else 64,
+            vocab=256 if smoke else 2048, m=16, hmax=32, min_len=20,
+            seed=17)
+        q_ids, q_w = corpus.ids[:nq], corpus.w[:nq]
+        full_spec = CascadeSpec(
+            stages=(CascadeStage("wcd", rung["scan"]),
+                    CascadeStage("rwmd", rung["prune"])),
+            rescorer="act", rescorer_iters=ACT_ITERS)
+        entries = []
+        t0 = time.perf_counter()
+        ref = EmdIndex.build(corpus, EngineConfig(
+            method="act", iters=ACT_ITERS, top_l=top_l,
+            cascade=full_spec))
+        build_ref = time.perf_counter() - t0
+        _, ref_idx = ref.search(q_ids, q_w)
+        us_ref = timeit(lambda: ref.search(q_ids, q_w), n_iter=reps)
+        qps_ref = nq / (us_ref / 1e6)
+        emit(f"bench_cascade.sweep.n{n}.full_scan", us_ref,
+             f"qps={qps_ref:.1f}")
+        entries.append(dict(
+            source="full_scan", spec=full_spec.describe(),
+            admissible=full_spec.admissible, recall_at_l=1.0,
+            top_l=top_l, queries_per_sec=round(qps_ref, 2),
+            probed_rows_per_query=n,
+            build_seconds=round(build_ref, 2)))
+        for key in ("lsh", "tree"):
+            src_spec = rung[key]
+            spec = CascadeSpec(
+                stages=(CascadeStage("rwmd", rung["prune"]),),
+                rescorer="act", rescorer_iters=ACT_ITERS,
+                source=src_spec)
+            t0 = time.perf_counter()
+            ix = EmdIndex.build(corpus, EngineConfig(
+                method="act", iters=ACT_ITERS, top_l=top_l,
+                cascade=spec))
+            build_s = time.perf_counter() - t0
+            _, idx = ix.search(q_ids, q_w)
+            recall = cascade.topk_recall(idx, ref_idx)
+            us = timeit(lambda: ix.search(q_ids, q_w), n_iter=reps)
+            qps = nq / (us / 1e6)
+            emit(f"bench_cascade.sweep.n{n}.{src_spec.kind}", us,
+                 f"recall@{top_l}={recall:.3f} qps={qps:.1f} "
+                 f"full_qps={qps_ref:.1f}")
+            probed = src_spec.probes * ix.source.rows.shape[1]
+            entries.append(dict(
+                source=src_spec.kind, spec=spec.describe(),
+                admissible=spec.admissible,
+                recall_at_l=round(recall, 4), top_l=top_l,
+                queries_per_sec=round(qps, 2),
+                probed_rows_per_query=probed,
+                emitted_rows_per_query=ix.source.width,
+                dropped_rows=int(ix.source.dropped_rows),
+                build_seconds=round(build_s, 2),
+                speedup_over_full_scan=round(qps / qps_ref, 2)))
+        report["sweep"].append(dict(n=n, nq=nq, entries=entries))
 
 
 def run() -> None:
@@ -136,6 +265,8 @@ def run() -> None:
         budget_pct=pct, spec=_spec(pct).describe(),
         recall_at_l=round(recall_d, 4), top_l=top_l,
         queries_per_sec=round(qps_d, 1))
+
+    _sweep(report, smoke, top_l)
 
     path = os.environ.get("BENCH_CASCADE_JSON", "BENCH_cascade.json")
     with open(path, "w") as f:

@@ -19,6 +19,11 @@ Validated:
   settings present (the kernel path must not silently drop out of the
   bench matrix); a ``distributed_step`` record with recall + qps; all
   recalls inside [0, 1]; the same provenance fields as BENCH_batch.
+  The corpus-size ``sweep`` (candidate sources): every rung pairs the
+  full-scan reference with at least one sublinear source, recalls and
+  throughputs are well-formed, and — full (non-smoke) runs only — at
+  the largest corpus some sublinear source beats the full scan's qps
+  at recall@l >= 0.9 (the subsystem's acceptance bar).
 * ``BENCH_serve.json`` — non-empty per-load ``entries`` each carrying
   latency percentiles (``p50_ms <= p99_ms``), a served-tier mix, and
   100% request completion (served + shed == offered — the runtime never
@@ -129,6 +134,65 @@ def check_cascade(path: str = CASCADE_PATH) -> list[Violation]:
             if key not in dist:
                 out.append(Violation(
                     "bench", path, f"distributed_step missing {key!r}"))
+    out += _check_sweep(r, path)
+    return out
+
+
+#: Full (non-smoke) sweep acceptance: at the largest corpus, some
+#: sublinear source must beat the full scan's qps at this recall@l.
+SWEEP_MIN_RECALL = 0.9
+
+
+def _check_sweep(r: dict, path: str) -> list[Violation]:
+    """The corpus-size sweep of the candidate-source subsystem."""
+    out = []
+    sweep = r.get("sweep")
+    if not isinstance(sweep, list) or not sweep:
+        return [Violation(
+            "bench", path,
+            "no corpus-size sweep — the candidate-source rungs fell out "
+            "of the bench matrix")]
+    for rung in sweep:
+        n = rung.get("n")
+        tag = f"sweep rung n={n}"
+        entries = rung.get("entries") or []
+        kinds = [e.get("source") for e in entries]
+        if "full_scan" not in kinds:
+            out.append(Violation(
+                "bench", path,
+                f"{tag} has no full_scan reference entry"))
+        if not any(k not in (None, "full_scan") for k in kinds):
+            out.append(Violation(
+                "bench", path, f"{tag} has no sublinear source entry"))
+        for e in entries:
+            rec, qps = e.get("recall_at_l"), e.get("queries_per_sec")
+            if not isinstance(rec, (int, float)) or not 0.0 <= rec <= 1.0:
+                out.append(Violation(
+                    "bench", path,
+                    f"{tag} {e.get('source')} recall_at_l={rec!r} "
+                    "outside [0, 1]"))
+            if not isinstance(qps, (int, float)) or qps <= 0:
+                out.append(Violation(
+                    "bench", path,
+                    f"{tag} {e.get('source')} queries_per_sec={qps!r} "
+                    "not a positive number"))
+    if not r.get("smoke"):
+        largest = max(sweep, key=lambda rung: rung.get("n") or 0)
+        entries = largest.get("entries") or []
+        full_qps = max((e.get("queries_per_sec", 0.0) for e in entries
+                        if e.get("source") == "full_scan"), default=None)
+        ok = full_qps is not None and any(
+            e.get("source") not in (None, "full_scan")
+            and e.get("recall_at_l", 0.0) >= SWEEP_MIN_RECALL
+            and e.get("queries_per_sec", 0.0) > full_qps
+            for e in entries)
+        if not ok:
+            out.append(Violation(
+                "bench", path,
+                f"sweep largest rung (n={largest.get('n')}): no "
+                f"sublinear source with recall@l >= {SWEEP_MIN_RECALL} "
+                "AND queries_per_sec above the full scan — the "
+                "subsystem's acceptance bar"))
     return out
 
 

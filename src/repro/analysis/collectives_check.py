@@ -76,9 +76,11 @@ def step_collectives(case: S.StepCase, workload, mesh, *,
                      step_fn=None) -> dict[str, float]:
     """Compile one case on ``mesh`` and return its per-kind collective
     wire bytes. ``step_fn`` overrides the registry-built jitted step —
-    the seeded-violation tests inject through it."""
-    specs = S.search_input_specs(workload,
-                                 pad_multiple=CHECK_PAD_MULTIPLE)
+    the seeded-violation tests inject through it. Input specs are
+    per-case (``S.case_input_specs``): sourced cascades take their
+    candidate-index state as trailing operands."""
+    specs = S.case_input_specs(case, workload,
+                               pad_multiple=CHECK_PAD_MULTIPLE)
     fn = S.build_step(case, workload, mesh,
                       pad_multiple=CHECK_PAD_MULTIPLE) \
         if step_fn is None else step_fn

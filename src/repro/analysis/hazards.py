@@ -116,15 +116,21 @@ def run(*, workload=None, pad_multiple: int = 8,
     from repro.launch import search as S
 
     workload = check_workload() if workload is None else workload
-    specs = S.search_input_specs(workload, pad_multiple=pad_multiple)
+    base_specs = S.search_input_specs(workload, pad_multiple=pad_multiple)
     out: list[Violation] = []
     checked = 0
     for case in S.step_cases():
         fn = S.build_step(case, workload)
+        # Per-case specs: sourced cascades append their candidate-index
+        # state operands (which ALSO puts the big-constant scan on that
+        # state — it must arrive as an argument, never baked in).
+        specs = S.case_input_specs(case, workload,
+                                   pad_multiple=pad_multiple)
         out += check_fn(case.name, fn, specs,
                         max_const_bytes=max_const_bytes)
         checked += 1
     for name, fn in (extra_fns or {}).items():
-        out += check_fn(name, fn, specs, max_const_bytes=max_const_bytes)
+        out += check_fn(name, fn, base_specs,
+                        max_const_bytes=max_const_bytes)
         checked += 1
     return out, checked

@@ -135,6 +135,12 @@ class EngineConfig:
                         f"cascade rescorer {cspec.rescorer!r} runs on the "
                         "host; the distributed backend needs a jittable "
                         "rescorer (act/ict/sinkhorn/...)")
+                if cspec.sourced and cspec.source.width is None:
+                    raise ValueError(
+                        "the distributed cascade step needs a candidate "
+                        "source with an explicit capacity (bucket_cap/"
+                        "leaf_cap) so its state shapes are static; "
+                        f"{cspec.source.describe()} sizes to the data")
 
     @property
     def spec(self):
@@ -146,6 +152,14 @@ class EngineConfig:
         """The resolved :class:`~repro.cascade.CascadeSpec` (preset names
         looked up in ``repro.cascade.CASCADES``), or ``None``."""
         return None if self.cascade is None else resolve_spec(self.cascade)
+
+    @property
+    def source_spec(self):
+        """The cascade's candidate-source spec (``repro.candidates``),
+        or ``None`` when unsourced / no cascade — the build parameters
+        ``EmdIndex.build`` constructs the stage-1 index from."""
+        cspec = self.cascade_spec
+        return None if cspec is None else cspec.source
 
     @property
     def effective_iters(self) -> int:

@@ -53,6 +53,7 @@ class EmdIndex:
     _padded_corpus: Corpus | None = None
     _cascade_step: Any = None
     _tuned: Any = None
+    _source: Any = None
 
     def __repr__(self) -> str:
         mesh = "" if self._mesh is None else f", mesh={dict(self._mesh.shape)}"
@@ -64,12 +65,19 @@ class EmdIndex:
     # ------------------------------------------------------------- build
     @classmethod
     def build(cls, corpus: Corpus, config: EngineConfig | None = None, *,
-              mesh=None) -> "EmdIndex":
+              mesh=None, source=None) -> "EmdIndex":
         """Precompute everything reusable across queries of ``corpus``.
 
         ``mesh``: distributed backend only — the device mesh to shard
         over; defaults to a single-device (1, 1) data x model mesh so
         single-host callers and multi-host launchers run the same code.
+
+        When the config's cascade names a sublinear candidate source
+        (``repro.candidates``), its index is built here too — the
+        host-side quantization/tree fit runs once per build, and
+        ``search`` consumes the built arrays afterwards. ``source``
+        injects an already-built source instead (checkpoint restore;
+        must match ``config.source_spec``).
 
         With ``config.autotune != "off"`` the kernel tile knobs are
         resolved here, once, through ``repro.kernels.autotune`` (cached
@@ -83,9 +91,21 @@ class EmdIndex:
         if config.autotune != "off":
             from repro.kernels import autotune
             config, tuned = autotune.resolve_config(corpus, config)
+        src_spec = config.source_spec
+        if src_spec is not None and not src_spec.full_scan:
+            if source is None:
+                source = src_spec.build(corpus)
+            elif source.spec != src_spec:
+                raise ValueError(
+                    f"injected source {source.spec.describe()} does not "
+                    f"match config's {src_spec.describe()}")
+        else:
+            source = None
         if config.backend != "distributed":
+            if source is not None:
+                source = jax.device_put(source)
             return cls(corpus=jax.device_put(corpus), config=config,
-                       _tuned=tuned)
+                       _tuned=tuned, _source=source)
 
         from repro.configs.emd_20news import EMDWorkload
         from repro.launch import mesh as mesh_mod
@@ -112,9 +132,16 @@ class EmdIndex:
         padded = Corpus(ids=jax.device_put(padded.ids, in_sh[0]),
                         w=jax.device_put(padded.w, in_sh[1]),
                         coords=jax.device_put(padded.coords, in_sh[2]))
+        if source is not None:
+            # Small index state, probed at arbitrary buckets: replicated
+            # (matches the step's trailing in_shardings).
+            from jax.sharding import NamedSharding, PartitionSpec
+            source = jax.device_put(source,
+                                    NamedSharding(mesh, PartitionSpec()))
         return cls(corpus=corpus, config=config, _mesh=mesh,
                    _scores_step=step, _padded_corpus=padded,
-                   _cascade_step=cascade_step, _tuned=tuned)
+                   _cascade_step=cascade_step, _tuned=tuned,
+                   _source=source)
 
     # --------------------------------------------------------- properties
     @property
@@ -130,6 +157,12 @@ class EmdIndex:
     def mesh(self):
         """The device mesh (distributed backend), else ``None``."""
         return self._mesh
+
+    @property
+    def source(self):
+        """The built candidate source feeding cascade stage 1 (``None``
+        when the config's cascade is unsourced or full-scan)."""
+        return self._source
 
     @property
     def tuned_blocks(self) -> dict:
@@ -155,10 +188,11 @@ class EmdIndex:
         return ((q_ids[None], q_w[None], True) if single
                 else (q_ids, q_w, False))
 
-    def _run_dist_step(self, step, qi: Array, qw: Array):
+    def _run_dist_step(self, step, qi: Array, qw: Array, *extra):
         """Run a jitted mesh step on a query batch padded to the data-axis
         size (so any nq shards); returns the outputs with pad-query rows
-        still attached — callers slice ``[:nq]``."""
+        still attached — callers slice ``[:nq]``. ``extra`` operands
+        (e.g. candidate-source state leaves) append after the queries."""
         from repro.launch.mesh import data_axes
         nq = qi.shape[0]
         dp = int(np.prod([self._mesh.shape[a]
@@ -167,7 +201,7 @@ class EmdIndex:
         qw = _pad_rows(qw, -(-nq // dp) * dp)
         p = self._padded_corpus
         with _mesh_context(self._mesh):
-            return step(p.ids, p.w, p.coords, qi, qw)
+            return step(p.ids, p.w, p.coords, qi, qw, *extra)
 
     def scores(self, q_ids: Array, q_w: Array) -> Array:
         """Directional bound of every database row vs the query/queries.
@@ -236,12 +270,16 @@ class EmdIndex:
                     f"top_l={self.config.top_l}; rebuild with "
                     "EngineConfig(top_l=...) to change it")
             nq = qi.shape[0]
-            scores, idx = self._run_dist_step(self._cascade_step, qi, qw)
+            leaves = (jax.tree_util.tree_leaves(self._source)
+                      if self._source is not None else ())
+            scores, idx = self._run_dist_step(self._cascade_step, qi, qw,
+                                              *leaves)
             scores, idx = scores[:nq], idx[:nq]
         else:
             res = cascade_mod.cascade_search(
                 self.corpus, qi, qw, spec, top_l,
                 engine=self.config.batch_engine,
+                source=self._source if spec.sourced else None,
                 **self.config.cascade_knobs())
             scores, idx = res.scores, res.indices
         return (scores[0], idx[0]) if single else (scores, idx)
@@ -297,7 +335,12 @@ class EmdIndex:
                                      top_l, exclude_self=True)
 
     def with_config(self, **changes) -> "EmdIndex":
-        """Rebuild this index with ``dataclasses.replace``d config."""
-        return EmdIndex.build(self.corpus,
-                              dataclasses.replace(self.config, **changes),
-                              mesh=self._mesh)
+        """Rebuild this index with ``dataclasses.replace``d config. An
+        already-built candidate source is reused when the new config
+        keeps the same source spec (the expensive host-side fit does not
+        rerun for an unrelated knob change)."""
+        config = dataclasses.replace(self.config, **changes)
+        reuse = (self._source if self._source is not None
+                 and config.source_spec == self._source.spec else None)
+        return EmdIndex.build(self.corpus, config, mesh=self._mesh,
+                              source=reuse)

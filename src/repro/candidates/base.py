@@ -1,0 +1,225 @@
+"""The ``CandidateSource`` protocol: pluggable cascade stage-0.
+
+Every cascade used to score the FULL corpus with its cheapest bound —
+an O(n) wall no ladder quality could move. A candidate source breaks it:
+a build-time index over the corpus (arrays, built host-side at
+``EmdIndex.build``) plus a jittable ``candidates(corpus, q_ids, q_w,
+budget) -> (ids, mask)`` step that emits each query's candidate rows
+with traffic proportional to the rows PROBED, never to the corpus. The
+cascade's first stage then scores only the sourced candidates through
+the registry's candidate-compacted engines (``retrieval.cand_scores``).
+
+Two halves, mirroring ``CascadeSpec`` vs the built index:
+
+* a **SourceSpec** — a frozen, hashable dataclass of build parameters
+  (``FullScanSpec``, ``CentroidLSHSpec``, ``ClusterTreeSpec``). It rides
+  in ``CascadeSpec.source``, keys jit caches, and JSON-round-trips
+  through the serving snapshot codec. ``spec.build(corpus)`` produces
+* a **source** — the spec plus its built index arrays, registered as a
+  jax pytree (arrays = leaves, spec = static aux data) so it passes
+  through ``jax.jit`` as an ordinary argument and its state serializes
+  through the checkpoint store like any other leaf tree.
+
+Admissibility: only the full scan sees every row, so only
+``FullScanSpec`` is admissible — any sublinear source can miss a true
+neighbor, which forces the owning ``CascadeSpec.admissible`` to False
+and the recall number to be MEASURED (``cascade.topk_recall``,
+``bench_cascade``'s sweep), never assumed.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lc
+
+#: Sentinel coordinate of empty buckets / empty tree nodes: their
+#: distance to any real query centroid overflows to +inf, so they are
+#: probed only after every non-empty bucket (and their candidate slots
+#: are masked anyway).
+EMPTY_CENTER = 1e30
+
+#: Registered source-spec classes by ``kind`` (filled by the concrete
+#: modules at import; ``CascadeSpec.source`` accepts these names).
+SOURCES: dict[str, type] = {}
+
+
+def register_source(cls):
+    """Class decorator: register a SourceSpec subclass under its
+    ``kind`` and return it unchanged."""
+    SOURCES[cls.kind] = cls
+    return cls
+
+
+def resolve_source(spec):
+    """A SourceSpec passes through; a string resolves to its registered
+    spec class built with defaults (``"centroid_lsh"`` etc.)."""
+    if isinstance(spec, SourceSpec):
+        return spec
+    if isinstance(spec, str):
+        if spec not in SOURCES:
+            raise ValueError(f"unknown candidate source {spec!r}; "
+                             f"registered: {sorted(SOURCES)}")
+        return SOURCES[spec]()
+    raise TypeError(f"expected a SourceSpec or a registered source name, "
+                    f"got {type(spec).__name__}")
+
+
+@dataclasses.dataclass(frozen=True)
+class SourceSpec:
+    """Base class of the frozen build-parameter dataclasses. Concrete
+    subclasses set the class attributes and implement :meth:`build` /
+    :meth:`state_structs` / :meth:`wrap`."""
+
+    #: registry key (``CascadeSpec.source`` accepts it as a string).
+    kind = "abstract"
+    #: True only for the full scan: every row is a candidate, so an
+    #: otherwise-admissible cascade keeps its exact-top-l guarantee.
+    admissible = False
+    #: True when the cascade driver should run the original full-corpus
+    #: stage-1 path instead of candidate compaction.
+    full_scan = False
+
+    def build(self, corpus, *, n_valid: int | None = None):
+        """Build the index state over ``corpus`` (host-side numpy; rows
+        at index >= ``n_valid`` are padding and never enter a bucket)."""
+        raise NotImplementedError
+
+    def state_structs(self, m: int) -> tuple:
+        """``jax.ShapeDtypeStruct`` of every state array, in the field
+        order :meth:`wrap` consumes — what the static checkers compile
+        the mesh step against without building anything. Requires the
+        capacity knobs to be explicit (data-dependent ``None`` caps have
+        no static shape)."""
+        raise NotImplementedError
+
+    def wrap(self, leaves):
+        """Reassemble the built source from its state arrays (the mesh
+        step passes them as trailing operands)."""
+        raise NotImplementedError
+
+    def describe(self) -> str:
+        return self.kind
+
+
+# --------------------------------------------------------------------------
+# Host-side build helpers (numpy, shared by the concrete sources).
+# --------------------------------------------------------------------------
+
+
+def corpus_centroids(corpus, *, n_valid: int | None = None,
+                     block: int = 131072) -> np.ndarray:
+    """(n, m) float32 WCD centroid of every real corpus row, computed in
+    ``block``-row shards so a 1M-row corpus never materializes the
+    (n, hmax, m) gather."""
+    ids = np.asarray(corpus.ids)
+    w = np.asarray(corpus.w)
+    coords = np.asarray(corpus.coords, np.float32)
+    n = ids.shape[0] if n_valid is None else min(n_valid, ids.shape[0])
+    out = np.empty((n, corpus.m), np.float32)
+    for s in range(0, n, block):
+        e = min(s + block, n)
+        out[s:e] = np.einsum("bh,bhm->bm", w[s:e].astype(np.float32),
+                             coords[ids[s:e]], optimize=True)
+    return out
+
+
+def kmeans(x: np.ndarray, k: int, iters: int, rng: np.random.Generator,
+           *, block: int = 131072) -> tuple[np.ndarray, np.ndarray]:
+    """Blocked Lloyd k-means: (k, m) float32 centers + (n,) assignment.
+
+    Assignment passes stream ``block`` rows at a time (the distance
+    matrix never exceeds block x k), center updates are per-dimension
+    bincounts, and empty clusters reseed to random points — O(n k m)
+    per iteration with O(block * k) extra memory, which is what lets
+    ``EmdIndex.build`` quantize a 1M-row centroid table."""
+    n, m = x.shape
+    x = np.ascontiguousarray(x, np.float32)
+    if n == 0:
+        return np.full((k, m), EMPTY_CENTER, np.float32), \
+            np.zeros((0,), np.int64)
+    init = rng.choice(n, size=min(k, n), replace=False)
+    c = x[init].copy()
+    if len(init) < k:                      # fewer points than centers
+        c = np.concatenate([c, x[rng.integers(0, n, k - len(init))]])
+    assign = np.zeros(n, np.int64)
+
+    def assign_pass():
+        c2 = 0.5 * (c * c).sum(axis=1)
+        for s in range(0, n, block):
+            e = min(s + block, n)
+            # argmin of ||x-c||^2 == argmin of c.c/2 - x.c (x^2 constant)
+            assign[s:e] = np.argmin(c2[None, :] - x[s:e] @ c.T, axis=1)
+
+    for _ in range(max(iters, 1)):
+        assign_pass()
+        counts = np.bincount(assign, minlength=k)
+        sums = np.empty((k, m), np.float64)
+        for j in range(m):
+            sums[:, j] = np.bincount(assign, weights=x[:, j], minlength=k)
+        live = counts > 0
+        c[live] = (sums[live] / counts[live, None]).astype(np.float32)
+        dead = int((~live).sum())
+        if dead:
+            c[~live] = x[rng.integers(0, n, dead)]
+    assign_pass()                          # final labels match centers
+    return c, assign
+
+
+def pack_table(assign: np.ndarray, n_buckets: int, cap: int | None,
+               ) -> tuple[np.ndarray, np.ndarray, int]:
+    """Dense (n_buckets, cap) row table + validity mask from a bucket
+    assignment. ``cap=None`` sizes to the fullest bucket (lossless);
+    an explicit cap keeps each bucket's FIRST ``cap`` rows (assignment
+    order) and reports the overflow drop count."""
+    n = assign.shape[0]
+    order = np.argsort(assign, kind="stable")
+    sorted_a = assign[order]
+    counts = np.bincount(assign, minlength=n_buckets)
+    starts = np.zeros(n_buckets + 1, np.int64)
+    np.cumsum(counts, out=starts[1:])
+    within = np.arange(n, dtype=np.int64) - starts[sorted_a]
+    cap_eff = max(int(counts.max()) if cap is None else int(cap), 1)
+    keep = within < cap_eff
+    rows = np.zeros((n_buckets, cap_eff), np.int32)
+    mask = np.zeros((n_buckets, cap_eff), bool)
+    rows[sorted_a[keep], within[keep]] = order[keep].astype(np.int32)
+    mask[sorted_a[keep], within[keep]] = True
+    return rows, mask, int(n - keep.sum())
+
+
+def slot_centroids(x: np.ndarray, rows: np.ndarray, mask: np.ndarray,
+                   ) -> np.ndarray:
+    """(n_buckets, cap, m) float32 per-slot row centroids matching a
+    :func:`pack_table` layout — the exact-WCD refine table. Dead slots
+    are zero; the query-side refine masks them before ranking."""
+    return (x[rows] * mask[..., None]).astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# Query-side (jittable) helpers.
+# --------------------------------------------------------------------------
+
+
+def refine_by_centroid(qc, rows, mask, cents, k: int):
+    """Exact-WCD refine of gathered candidates: rank the (nq, W) probed
+    rows by true centroid distance (``cents`` is their (nq, W, m) slot
+    centroid gather) and keep the smallest ``k`` — the reference
+    cascade's full-scan WCD stage, restricted to probed rows. Returned
+    columns are ascending-distance, so any later budget truncation keeps
+    the best.
+
+    Selection is ``lax.top_k`` (sort-based), not the streaming register
+    merge: ``k`` here is a stage-budget-scale count (hundreds to
+    thousands) where the register merge's unrolled network blows up
+    compile time, and the ranked width is fixed by the spec — never
+    corpus-sized — so the unshardable sort costs probed-rows traffic
+    only."""
+    d = jnp.linalg.norm(cents - qc[:, None, :], axis=-1)
+    d = jnp.where(mask, d, lc.PAD_DIST)
+    neg, pos = jax.lax.top_k(-d, k)
+    return (jnp.take_along_axis(rows, pos, axis=-1),
+            jnp.take_along_axis(mask, pos, axis=-1))

@@ -2,7 +2,10 @@
 
 One search is a ladder of ``(method, budget)`` stages (``CascadeSpec``):
 stage 1 scores the FULL corpus through the registry's batched multi-query
-engine and keeps its ``budget`` best rows per query; every later stage
+engine — or, when the spec names a sublinear candidate source
+(``repro.candidates``), only the rows the built source emits, which is
+what breaks the O(n) stage-1 wall — and keeps its ``budget`` best rows
+per query; every later stage
 scores only the surviving candidate set through the method's
 candidate-compacted engine (``retrieval.cand_scores`` — Phase 1 unchanged,
 Phase 2/3 gather-compacted to a ``(nq, budget)`` sub-corpus); the final
@@ -84,12 +87,30 @@ def topk_smallest(scores: Array, k: int, blocks: int = 1):
     return -neg, idx
 
 
+def _source_budgets(spec: CascadeSpec, budgets: tuple[int, ...],
+                    width: int, top_l: int) -> tuple[int, ...]:
+    """Clamp the resolved budget ladder to a sourced stage 1's candidate
+    ``width`` — the source already pruned below any larger budget."""
+    if width < top_l:
+        raise ValueError(
+            f"candidate source emits {width} rows per query, fewer than "
+            f"top_l={top_l} ({spec.describe()})")
+    return tuple(min(b, width) for b in budgets)
+
+
 def stage_rows(spec: CascadeSpec, n: int, top_l: int) -> dict[str, int]:
     """Rows scored per query by each stage of ``spec`` on an ``n``-row
-    corpus: stage 1 reads the full corpus, later stages and the rescorer
-    read the previous stage's survivors (the budget ladder)."""
+    corpus: stage 1 reads the full corpus — or, sourced, only the
+    source's candidate width — later stages and the rescorer read the
+    previous stage's survivors (the budget ladder)."""
     budgets = spec.resolve_budgets(n, top_l)
-    rows, prev = {}, n
+    prev = n
+    if spec.sourced:
+        width = spec.source.width
+        if width is not None:
+            prev = min(width, n)
+            budgets = _source_budgets(spec, budgets, prev, top_l)
+    rows = {}
     for i, s in enumerate(spec.stages):
         rows[f"stage{i + 1}.{s.method}"] = prev
         prev = budgets[i]
@@ -99,21 +120,60 @@ def stage_rows(spec: CascadeSpec, n: int, top_l: int) -> dict[str, int]:
 
 def _prune(corpus: lc.Corpus, Q_ids: Array, Q_w: Array, spec: CascadeSpec,
            budgets: tuple[int, ...], *, n_valid, topk_blocks, engine,
-           **knobs) -> Array:
-    """Run the pruning ladder; returns the (nq, budgets[-1]) global row
-    ids surviving every stage (traced under jit by the callers)."""
+           source=None, **knobs):
+    """Run the pruning ladder; returns ``(cand, cmask)``: the
+    (nq, budgets[-1]) global row ids surviving every stage, plus their
+    validity mask when stage 1 was fed by a sublinear source (``None``
+    on the full-scan path, where every survivor is real). Traced under
+    jit by the callers.
+
+    Full scan keeps the original path BITWISE: full-corpus
+    ``batch_scores`` + (shard-blocked) top-budget. A sourced stage 1
+    instead scores only the source's candidate rows through the
+    method's candidate-compacted engine, with the source's invalid
+    slots (under-full buckets) pushed to ``lc.PAD_DIST`` so they rank
+    last; the mask rides along the ladder because a later gather can
+    still select one when a query's probed buckets hold fewer real rows
+    than the final budget.
+    """
     first = spec.stages[0]
-    s = retrieval.batch_scores(corpus, Q_ids, Q_w, method=first.method,
-                               iters=first.iters, engine=engine, **knobs)
-    _, cand = topk_smallest(lc.mask_pad_rows(s, n_valid), budgets[0],
-                            topk_blocks)
+    if source is None or source.spec.full_scan:
+        s = retrieval.batch_scores(corpus, Q_ids, Q_w, method=first.method,
+                                   iters=first.iters, engine=engine,
+                                   **knobs)
+        _, cand = topk_smallest(lc.mask_pad_rows(s, n_valid), budgets[0],
+                                topk_blocks)
+        cmask = None
+    else:
+        cand, cmask = source.candidates(corpus, Q_ids, Q_w)
+        sc = retrieval.cand_scores(corpus, Q_ids, Q_w, cand,
+                                   method=first.method, iters=first.iters,
+                                   **knobs)
+        sc = jnp.where(cmask, sc, lc.PAD_DIST)
+        _, pos = topk_smallest(sc, budgets[0])
+        cand = jnp.take_along_axis(cand, pos, axis=1)
+        cmask = jnp.take_along_axis(cmask, pos, axis=1)
     for stage, b in zip(spec.stages[1:], budgets[1:], strict=True):
         sc = retrieval.cand_scores(corpus, Q_ids, Q_w, cand,
                                    method=stage.method, iters=stage.iters,
                                    **knobs)
+        if cmask is not None:
+            sc = jnp.where(cmask, sc, lc.PAD_DIST)
         _, pos = topk_smallest(sc, b)
         cand = jnp.take_along_axis(cand, pos, axis=1)
-    return cand
+        if cmask is not None:
+            cmask = jnp.take_along_axis(cmask, pos, axis=1)
+    return cand, cmask
+
+
+def _resolved_budgets(spec: CascadeSpec, source, n: int,
+                      top_l: int) -> tuple[int, ...]:
+    """Budget ladder for one search: fraction resolution + sourced
+    clamping to the built source's (static) candidate width."""
+    budgets = spec.resolve_budgets(n, top_l)
+    if source is not None and not source.spec.full_scan:
+        budgets = _source_budgets(spec, budgets, source.width, top_l)
+    return budgets
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "top_l", "n_valid",
@@ -122,15 +182,20 @@ def _prune(corpus: lc.Corpus, Q_ids: Array, Q_w: Array, spec: CascadeSpec,
 def _cascade_device(corpus: lc.Corpus, Q_ids: Array, Q_w: Array,
                     spec: CascadeSpec, top_l: int, *, n_valid=None,
                     topk_blocks: int = 1, engine: str = "batched",
-                    **knobs) -> CascadeResult:
-    """Whole ladder + jittable rescorer as ONE jitted program."""
+                    source=None, **knobs) -> CascadeResult:
+    """Whole ladder + jittable rescorer as ONE jitted program. ``source``
+    is a built candidate source (a pytree argument — its spec rides in
+    the treedef, so distinct indexes of the same spec share a compile)."""
     n = n_valid if n_valid is not None else corpus.n
-    budgets = spec.resolve_budgets(n, top_l)
-    cand = _prune(corpus, Q_ids, Q_w, spec, budgets, n_valid=n_valid,
-                  topk_blocks=topk_blocks, engine=engine, **knobs)
+    budgets = _resolved_budgets(spec, source, n, top_l)
+    cand, cmask = _prune(corpus, Q_ids, Q_w, spec, budgets,
+                         n_valid=n_valid, topk_blocks=topk_blocks,
+                         engine=engine, source=source, **knobs)
     fn = rescore.resolve(spec.rescorer).fn
     rescored = fn(corpus, Q_ids, Q_w, cand, iters=spec.rescorer_iters,
                   **knobs)
+    if cmask is not None:
+        rescored = jnp.where(cmask, rescored, lc.PAD_DIST)
     vals, pos = topk_smallest(rescored, top_l)
     return CascadeResult(vals, jnp.take_along_axis(cand, pos, axis=1))
 
@@ -139,11 +204,12 @@ def _cascade_device(corpus: lc.Corpus, Q_ids: Array, Q_w: Array,
                                              "topk_blocks", "engine")
                    + _KNOBS)
 def _prune_jit(corpus, Q_ids, Q_w, spec, top_l, *, n_valid=None,
-               topk_blocks=1, engine="batched", **knobs) -> Array:
+               topk_blocks=1, engine="batched", source=None, **knobs):
     n = n_valid if n_valid is not None else corpus.n
-    budgets = spec.resolve_budgets(n, top_l)
+    budgets = _resolved_budgets(spec, source, n, top_l)
     return _prune(corpus, Q_ids, Q_w, spec, budgets, n_valid=n_valid,
-                  topk_blocks=topk_blocks, engine=engine, **knobs)
+                  topk_blocks=topk_blocks, engine=engine, source=source,
+                  **knobs)
 
 
 def cascade_search(corpus: lc.Corpus, Q_ids: Array, Q_w: Array,
@@ -152,7 +218,8 @@ def cascade_search(corpus: lc.Corpus, Q_ids: Array, Q_w: Array,
                    engine: str = "batched", use_kernels: bool = False,
                    block_v: int = 256, block_h: int = 256,
                    block_n: int = 256, rev_block: int = 256,
-                   block_q: int = 8, mesh=None) -> CascadeResult:
+                   block_q: int = 8, mesh=None,
+                   source=None) -> CascadeResult:
     """Cascaded top-l search of a ``(nq, h)`` query batch.
 
     ``spec`` is a :class:`~repro.cascade.spec.CascadeSpec` or a preset
@@ -170,21 +237,44 @@ def cascade_search(corpus: lc.Corpus, Q_ids: Array, Q_w: Array,
     hashable) routes the kernel path of every stage through the
     ``kernels/partition`` shard_map shims when its axes divide — this is
     how the distributed step runs the kernel cascade COMPILED.
+
+    ``source`` is a BUILT candidate source (``spec.source.build(corpus)``
+    or the one ``EmdIndex.build`` stores) and is required when
+    ``spec.sourced``: stage 1 then scores only the sourced candidates,
+    breaking the O(n) stage-1 wall — at the price of measured recall.
     """
     spec = resolve_spec(spec)
+    if spec.sourced:
+        if source is None:
+            raise ValueError(
+                f"cascade {spec.describe()} is sourced but no built "
+                "candidate source was passed; build one with "
+                "spec.source.build(corpus) (EmdIndex does this for you)")
+        if source.spec != spec.source:
+            raise ValueError(
+                f"built source {source.spec.describe()} does not match "
+                f"the cascade's source spec {spec.source.describe()}")
+    elif source is not None and not source.spec.full_scan:
+        raise ValueError(
+            f"a {source.spec.describe()} source was passed but cascade "
+            f"{spec.describe()} does not declare one (set "
+            "CascadeSpec.source so admissibility accounting sees it)")
     knobs = dict(engine=engine, use_kernels=use_kernels, block_v=block_v,
                  block_h=block_h, block_n=block_n, rev_block=rev_block,
                  block_q=block_q, mesh=mesh)
     if rescore.resolve(spec.rescorer).jittable:
         return _cascade_device(corpus, Q_ids, Q_w, spec, top_l,
                                n_valid=n_valid, topk_blocks=topk_blocks,
-                               **knobs)
+                               source=source, **knobs)
     # Host rescorer (exact emd): device pruning, numpy rescoring.
-    cand = np.asarray(_prune_jit(corpus, Q_ids, Q_w, spec, top_l,
-                                 n_valid=n_valid, topk_blocks=topk_blocks,
-                                 **knobs))
+    cand, cmask = _prune_jit(corpus, Q_ids, Q_w, spec, top_l,
+                             n_valid=n_valid, topk_blocks=topk_blocks,
+                             source=source, **knobs)
+    cand = np.asarray(cand)
     rescored = rescore.resolve(spec.rescorer).host_fn(corpus, Q_ids, Q_w,
                                                       cand)
+    if cmask is not None:
+        rescored = np.where(np.asarray(cmask), rescored, lc.PAD_DIST)
     pos = np.argsort(rescored, axis=1, kind="stable")[:, :top_l]
     return CascadeResult(
         jnp.asarray(np.take_along_axis(rescored, pos, axis=1),

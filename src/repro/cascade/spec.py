@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.candidates import SourceSpec, resolve_source
 from repro.core.retrieval import METHODS
 
 #: The paper's directional bound chain, loosest to tightest (Theorem 2:
@@ -120,6 +121,13 @@ class CascadeSpec:
                     ``repro.cascade.rescore`` (``sinkhorn``, exact
                     ``emd``; the latter runs host-side).
     rescorer_iters: LC-ACT rounds when the rescorer is ``act``.
+    source:         where stage 1's candidates come from: ``None`` or a
+                    full-scan source = the whole corpus (the original
+                    O(n) path, bitwise unchanged); a sublinear
+                    ``SourceSpec`` (``repro.candidates``; registered
+                    names like ``"centroid_lsh"`` resolve with their
+                    defaults) = stage 1 scores only the rows the built
+                    index emits, which forces measured-recall reporting.
 
     Hashable, so it keys jit caches and rides inside
     ``repro.api.EngineConfig`` unchanged.
@@ -127,19 +135,27 @@ class CascadeSpec:
     stages: tuple[CascadeStage, ...]
     rescorer: str = "act"
     rescorer_iters: int = 1
+    source: SourceSpec | str | None = None
 
     def __post_init__(self) -> None:
         from repro.cascade import rescore      # late: avoids import cycle
+        if self.source is not None:
+            object.__setattr__(self, "source", resolve_source(self.source))
         if not self.stages:
             raise ValueError("a cascade needs at least one pruning stage")
         # Stage 1 scores the full corpus through batch_scores; only the
-        # later stages run candidate-compacted.
-        for s in self.stages[1:]:
+        # later stages run candidate-compacted — unless a sublinear
+        # source feeds stage 1, which then compacts too.
+        sourced = self.sourced
+        for s in self.stages[1:] if not sourced else self.stages:
             if METHODS[s.method].cand_fn is None:
                 raise ValueError(
                     f"stage method {s.method!r} has no candidate-compacted "
                     "scorer (MethodSpec.cand_fn); it cannot prune "
-                    "survivors (only the first stage scores full-corpus)")
+                    + ("sourced candidates (a sublinear source makes "
+                       "EVERY stage candidate-compacted)" if sourced else
+                       "survivors (only the first stage scores "
+                       "full-corpus)"))
         rescore.resolve(self.rescorer)         # raises on unknown rescorer
         if self.rescorer_iters < 0:
             raise ValueError("rescorer_iters must be >= 0, "
@@ -154,10 +170,21 @@ class CascadeSpec:
                     f"prunes), got {[s.budget for s in self.stages]}")
 
     @property
+    def sourced(self) -> bool:
+        """True when stage 1 consumes a sublinear candidate source
+        instead of scanning the corpus."""
+        return self.source is not None and not self.source.full_scan
+
+    @property
     def admissible(self) -> bool:
         """True when EVERY stage provably lower-bounds the rescorer —
         the precondition for the exact-top-l guarantee (budgets
-        permitting); False means recall must be measured, not assumed."""
+        permitting); False means recall must be measured, not assumed.
+        A sublinear source can drop a true neighbor before any stage
+        scores it, so only full-scan (or unsourced) cascades can be
+        admissible."""
+        if self.source is not None and not self.source.admissible:
+            return False
         return all(is_lower_bound(s.method, s.iters, self.rescorer,
                                   self.rescorer_iters)
                    for s in self.stages)
@@ -211,13 +238,17 @@ class CascadeSpec:
         self.resolve_budgets(n, top_l)
 
     def describe(self) -> str:
-        """``wcd(20%) -> rwmd(5%) -> act-3`` style one-liner."""
+        """``wcd(20%) -> rwmd(5%) -> act-3`` style one-liner; sourced
+        cascades prefix the source, e.g. ``centroid_lsh[...] ~> ...``."""
         def fmt(b):
             return f"{100 * b:g}%" if isinstance(b, float) else str(b)
         parts = [f"{s.method}({fmt(s.budget)})" for s in self.stages]
         final = self.rescorer + (f"-{self.rescorer_iters}"
                                  if self.rescorer == "act" else "")
-        return " -> ".join(parts + [final])
+        chain = " -> ".join(parts + [final])
+        if self.sourced:
+            return f"{self.source.describe()} ~> {chain}"
+        return chain
 
 
 #: Named cascade presets (``EngineConfig.cascade`` accepts these keys).

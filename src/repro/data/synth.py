@@ -44,6 +44,67 @@ def make_text_like(n_docs: int = 64, n_classes: int = 4, vocab: int = 512,
     return corpus, labels
 
 
+def make_clustered_text(n_docs: int, n_topics: int = 64, vocab: int = 2048,
+                        m: int = 16, hmax: int = 32, zipf_a: float = 1.3,
+                        min_len: int = 4, seed: int = 0,
+                        shard_docs: int = 16384) -> tuple[Corpus, np.ndarray]:
+    """Large-corpus generator: mixture-of-topics documents with zipfian
+    lengths, built in memory-bounded shards so ``n_docs`` can reach 1M+.
+
+    Unlike :func:`make_text_like` (a per-document Python loop with an
+    explicit multinomial draw — fine at thousands of rows, hours at a
+    million), each shard here is fully vectorized: a document's ``hmax``
+    candidate words are the top-``hmax`` of Gumbel-perturbed topic
+    log-probabilities (the Gumbel-top-k trick — equivalent to sampling
+    ``hmax`` DISTINCT words ``p``-proportionally), its length is a
+    clipped Zipf draw (many short docs, a heavy tail), and its weights
+    are normalized exponentials over the first ``length`` slots. Peak
+    extra memory is O(``shard_docs`` x ``vocab``) regardless of
+    ``n_docs``, and rows land directly in the preallocated dense-bucket
+    arrays — no intermediate doc list.
+
+    Topic structure matches the paper's text workloads: ``n_topics``
+    anchors in the embedding space, softmax word affinities, one topic
+    per document (the returned labels) — which is exactly the clustered
+    geometry that gives IVF/tree candidate sources something to index.
+    """
+    if n_docs < 1 or not 1 <= min_len <= hmax:
+        raise ValueError(f"need n_docs >= 1 and 1 <= min_len <= hmax, got "
+                         f"{n_docs}/{min_len}/{hmax}")
+    rng = np.random.default_rng(seed)
+    coords = rng.normal(size=(vocab, m)).astype(np.float32)
+    coords /= np.linalg.norm(coords, axis=1, keepdims=True)
+    anchors = rng.normal(size=(n_topics, m))
+    anchors /= np.linalg.norm(anchors, axis=1, keepdims=True)
+    logits = 6.0 * (coords @ anchors.T)                # (vocab, n_topics)
+    logp = logits - logits.max(axis=0)
+    logp = (logp - np.log(np.exp(logp).sum(axis=0))).T  # (n_topics, vocab)
+    labels = rng.integers(0, n_topics, size=n_docs)
+    ids = np.zeros((n_docs, hmax), np.int32)
+    w = np.zeros((n_docs, hmax), np.float32)
+    for s in range(0, n_docs, shard_docs):
+        e = min(s + shard_docs, n_docs)
+        k = e - s
+        gumbel = rng.gumbel(size=(k, vocab))
+        scores = logp[labels[s:e]] + gumbel
+        # top-hmax by perturbed score = hmax distinct p-weighted words;
+        # descending-score order so truncating to a doc's length keeps a
+        # correctly-distributed size-``length`` Gumbel-top-k sample.
+        top = np.argpartition(scores, vocab - hmax,
+                              axis=1)[:, vocab - hmax:]
+        order = np.argsort(-np.take_along_axis(scores, top, axis=1),
+                           axis=1)
+        top = np.take_along_axis(top, order, axis=1)
+        lens = np.clip(rng.zipf(zipf_a, size=k), min_len, hmax)
+        slot = np.arange(hmax)[None, :]
+        live = slot < lens[:, None]
+        wt = rng.exponential(size=(k, hmax)).astype(np.float32) * live
+        wt /= wt.sum(axis=1, keepdims=True)
+        ids[s:e] = np.where(live, top, 0)
+        w[s:e] = wt
+    return Corpus(ids=ids, w=w, coords=coords), labels
+
+
 def make_image_like(n_images: int = 64, n_classes: int = 4, side: int = 12,
                     include_background: bool = False,
                     seed: int = 0) -> tuple[Corpus, np.ndarray]:

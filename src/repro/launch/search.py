@@ -161,6 +161,23 @@ def search_input_specs(workload,
     )
 
 
+def case_input_specs(case, workload,
+                     pad_multiple: int = DEFAULT_ROW_PAD_MULTIPLE) -> tuple:
+    """ShapeDtypeStruct stand-ins for one registry :class:`StepCase`: the
+    five search operands, plus — for a cascade whose spec names a
+    sublinear candidate source — the source's state arrays (the trailing
+    operands ``make_cascade_search_step`` expects). This is what the
+    static checkers (collectives, hazards) must trace a case with; the
+    plain ``search_input_specs`` is only correct for unsourced cases."""
+    specs = search_input_specs(workload, pad_multiple)
+    if case.kind == "cascade":
+        from repro import cascade as Cx
+        rspec = Cx.resolve_spec(case.cascade)
+        if rspec.sourced:
+            specs = specs + tuple(rspec.source.state_structs(workload.dim))
+    return specs
+
+
 def jit_search_step(workload, mesh, top_l: int = 16, iters: int | None = None,
                     n_valid: int | None = None, *, method: str | None = None,
                     **score_kw):
@@ -234,13 +251,18 @@ def make_cascade_search_step(spec, top_l: int = 16,
             "(act/ict/sinkhorn/...) or run the cascade through "
             "repro.cascade.cascade_search on a single host")
 
-    def cascade_step(corpus_ids, corpus_w, coords, q_ids, q_w):
+    def cascade_step(corpus_ids, corpus_w, coords, q_ids, q_w, *src_leaves):
+        # Sourced cascades take their index state as trailing operands
+        # (``case_input_specs`` / ``EmdIndex`` supply them) so the built
+        # arrays ride through jit as arguments, not baked constants.
+        source = rspec.source.wrap(src_leaves) if rspec.sourced else None
         corpus = lc.Corpus(ids=corpus_ids, w=corpus_w, coords=coords)
         return tuple(Cx.cascade_search(
             corpus, q_ids, q_w, rspec, top_l, n_valid=n_valid,
             topk_blocks=topk_blocks, engine=engine, use_kernels=use_kernels,
             block_v=block_v, block_h=block_h, block_n=block_n,
-            rev_block=rev_block, block_q=block_q, mesh=mesh))
+            rev_block=rev_block, block_q=block_q, mesh=mesh,
+            source=source))
 
     return cascade_step
 
@@ -264,6 +286,13 @@ def jit_cascade_search_step(workload, mesh, spec, top_l: int = 16,
                                     topk_blocks=blocks, mesh=mesh,
                                     **score_kw)
     in_sh, out_sh = search_shardings(mesh, workload)
+    from repro import cascade as Cx
+    rspec = Cx.resolve_spec(spec)
+    if rspec.sourced:
+        # Source state is small (buckets/nodes, not corpus rows) and
+        # every query probes arbitrary buckets: replicate it.
+        n_leaves = len(rspec.source.state_structs(workload.dim))
+        in_sh = in_sh + (NamedSharding(mesh, P()),) * n_leaves
     return jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
 
 
@@ -345,6 +374,33 @@ def step_cases(*, engines: tuple[str, ...] = ("dist", "scan"),
         cases.append(StepCase("cascade:pinned:dist:kernels", "cascade",
                               None, "dist", cascade=pinned,
                               scale_guarded=True, use_kernels=True))
+        # Sourced ladders: stage 1 reads only the candidate source's
+        # probed rows, so the mesh traffic of the WHOLE step — index
+        # state in, candidate gathers through — must stay flat as the
+        # corpus grows. That is the subsystem's core promise and these
+        # cases put it under the scaling guard.
+        from repro import candidates as candidates_mod
+        sourced_lsh = Cx.CascadeSpec(
+            stages=(Cx.CascadeStage("rwmd", 24),
+                    Cx.CascadeStage("act", 8, iters=2)),
+            rescorer="ict",
+            source=candidates_mod.CentroidLSHSpec(
+                n_buckets=16, probes=4, bucket_cap=8, refine=16))
+        sourced_tree = Cx.CascadeSpec(
+            stages=(Cx.CascadeStage("rwmd", 24),
+                    Cx.CascadeStage("act", 8, iters=2)),
+            rescorer="ict",
+            source=candidates_mod.ClusterTreeSpec(
+                branching=4, depth=2, beam=4, probes=2, leaf_cap=8))
+        cases.append(StepCase("cascade:sourced:lsh:dist", "cascade", None,
+                              "dist", cascade=sourced_lsh,
+                              scale_guarded=True))
+        cases.append(StepCase("cascade:sourced:lsh:dist:kernels", "cascade",
+                              None, "dist", cascade=sourced_lsh,
+                              scale_guarded=True, use_kernels=True))
+        cases.append(StepCase("cascade:sourced:tree:dist", "cascade", None,
+                              "dist", cascade=sourced_tree,
+                              scale_guarded=True))
     if "dist" in engines:
         cases += [
             StepCase(f"scores:{method}:dist:kernels", "scores", method,

@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.api.config import EngineConfig
 from repro.api.index import EmdIndex
+from repro.candidates import SOURCES, SourceSpec
 from repro.cascade.spec import CascadeSpec, CascadeStage
 from repro.checkpoint import store
 from repro.checkpoint.store import CheckpointCorrupt
@@ -50,11 +51,16 @@ def config_to_dict(config: EngineConfig) -> dict:
          for f in dataclasses.fields(config)}
     c = d["cascade"]
     if isinstance(c, CascadeSpec):
+        source = None
+        if isinstance(c.source, SourceSpec):
+            source = dict(kind=c.source.kind,
+                          **dataclasses.asdict(c.source))
         d["cascade"] = {
             "stages": [{"method": s.method, "budget": s.budget,
                         "iters": s.iters} for s in c.stages],
             "rescorer": c.rescorer,
             "rescorer_iters": c.rescorer_iters,
+            "source": source,
         }
     return d
 
@@ -63,10 +69,15 @@ def config_from_dict(d: dict) -> EngineConfig:
     d = dict(d)
     c = d.get("cascade")
     if isinstance(c, dict):
+        source = c.get("source")
+        if isinstance(source, dict):
+            source = dict(source)
+            source = SOURCES[source.pop("kind")](**source)
         d["cascade"] = CascadeSpec(
             stages=tuple(CascadeStage(**s) for s in c["stages"]),
             rescorer=c["rescorer"],
-            rescorer_iters=c["rescorer_iters"])
+            rescorer_iters=c["rescorer_iters"],
+            source=source)
     return EngineConfig(**d)
 
 
@@ -78,6 +89,18 @@ def snapshot(server: EmdServer, ckpt_dir: str) -> str:
     gen = server._gen
     tree = {"ids": gen.corpus.ids, "w": gen.corpus.w,
             "coords": gen.corpus.coords, "doc_ids": gen.doc_ids}
+    # The primary tier's built candidate-source state checkpoints too:
+    # restore then skips the host-side index fit (and byte-identical
+    # state survives even a seed-behavior change across versions).
+    source_leaves = 0
+    primary = next((t.index for t in gen.tiers
+                    if t.tier.name == "primary"), None)
+    if primary is not None and primary.source is not None:
+        import jax
+        leaves = jax.tree_util.tree_leaves(primary.source)
+        for i, leaf in enumerate(leaves):
+            tree[f"source/{i}"] = np.asarray(leaf)
+        source_leaves = len(leaves)
     extra = {
         "kind": "emd-serving-snapshot",
         "generation": gen.gen,
@@ -85,6 +108,7 @@ def snapshot(server: EmdServer, ckpt_dir: str) -> str:
         "config": config_to_dict(server.config),
         "corpus_manifest": {"n": gen.corpus.n, "hmax": gen.corpus.hmax,
                             "v": gen.corpus.v, "m": gen.corpus.m},
+        "source_leaves": source_leaves,
     }
     return store.save(ckpt_dir, gen.gen, tree, extra=extra)
 
@@ -97,11 +121,17 @@ class RestoredSnapshot:
     config: EngineConfig
     generation: int
     next_doc_id: int
+    #: The built candidate-source (stage-1 index) checkpointed with the
+    #: primary tier, ``None`` for unsourced configs — feed it to
+    #: ``EmdIndex.build(source=...)`` so restore skips the host-side fit.
+    source: Any = None
 
 
 def _like_from_manifest(manifest: dict) -> dict[str, Any]:
     like = {}
-    for name in SNAPSHOT_LEAVES:
+    n_src = int(manifest.get("extra", {}).get("source_leaves", 0))
+    names = SNAPSHOT_LEAVES + tuple(f"source/{i}" for i in range(n_src))
+    for name in names:
         try:
             meta = manifest["leaves"][name]
         except KeyError as e:
@@ -131,12 +161,24 @@ def restore_snapshot(ckpt_dir: str,
             f"snapshot (kind={extra.get('kind')!r})")
     tree = store.restore(ckpt_dir, generation,
                          _like_from_manifest(manifest))
+    config = config_from_dict(extra["config"])
+    source = None
+    n_src = int(extra.get("source_leaves", 0))
+    if n_src:
+        src_spec = config.source_spec
+        if src_spec is None:
+            raise CheckpointCorrupt(
+                f"step {generation} carries {n_src} candidate-source "
+                "leaves but its config declares no source")
+        source = src_spec.wrap(tuple(tree[f"source/{i}"]
+                                     for i in range(n_src)))
     return RestoredSnapshot(
         corpus=Corpus(ids=tree["ids"], w=tree["w"], coords=tree["coords"]),
         doc_ids=np.asarray(tree["doc_ids"], np.int64),
-        config=config_from_dict(extra["config"]),
+        config=config,
         generation=generation,
-        next_doc_id=int(extra["next_doc_id"]))
+        next_doc_id=int(extra["next_doc_id"]),
+        source=source)
 
 
 def restore_latest(ckpt_dir: str) -> RestoredSnapshot:
@@ -165,7 +207,8 @@ def restore_server(ckpt_dir: str, policy: ServingPolicy | None = None, *,
     backend's steps on a different mesh (recovery on mesh change)."""
     snap = (restore_latest(ckpt_dir) if generation is None
             else restore_snapshot(ckpt_dir, generation))
-    index = EmdIndex.build(snap.corpus, snap.config, mesh=mesh)
+    index = EmdIndex.build(snap.corpus, snap.config, mesh=mesh,
+                           source=snap.source)
     return EmdServer(index, policy, launch_hook=launch_hook,
                      doc_ids=snap.doc_ids, generation=snap.generation,
                      next_doc_id=snap.next_doc_id)

@@ -316,6 +316,15 @@ def test_bench_check_clean_on_valid_artifacts(tmp_path):
              "use_kernels": True},
         ],
         "distributed_step": {"recall_at_l": 1.0, "queries_per_sec": 4.0},
+        "smoke": False,
+        "sweep": [
+            {"n": 4096, "entries": [
+                {"source": "full_scan", "recall_at_l": 1.0,
+                 "queries_per_sec": 5.0},
+                {"source": "centroid_lsh", "recall_at_l": 0.95,
+                 "queries_per_sec": 20.0},
+            ]},
+        ],
         **provenance,
     }))
     serve = tmp_path / "s.json"
@@ -376,6 +385,63 @@ def test_bench_check_rejects_seeded_defects(tmp_path):
     assert "completed 6/8" in msgs
     assert "tier_mix totals 4 != served 5" in msgs
     assert "not deterministic" in msgs
+    assert "no corpus-size sweep" in msgs       # cascade artifact lacks it
+
+
+def test_bench_check_sweep_acceptance_bar(tmp_path):
+    """Full (non-smoke) sweeps must show a sublinear source beating the
+    full scan's qps at recall >= 0.9 on the LARGEST rung; smoke sweeps
+    are exempt; malformed rungs are flagged individually."""
+    def artifact(sweep, smoke):
+        return {"entries": [
+            {"recall_at_l": 1.0, "queries_per_sec": 9.0,
+             "use_kernels": False},
+            {"recall_at_l": 1.0, "queries_per_sec": 9.0,
+             "use_kernels": True}],
+            "distributed_step": {"recall_at_l": 1.0,
+                                 "queries_per_sec": 4.0},
+            "device_kind": "cpu",
+            "autotune": {"mode": "off", "tuned_blocks": {}},
+            "smoke": smoke, "sweep": sweep}
+
+    def check(sweep, smoke=False):
+        p = tmp_path / "c.json"
+        p.write_text(json.dumps(artifact(sweep, smoke)))
+        return "\n".join(v.message
+                         for v in bench_check.check_cascade(str(p)))
+
+    good = [{"n": 256, "entries": [
+        {"source": "full_scan", "recall_at_l": 1.0,
+         "queries_per_sec": 50.0},
+        {"source": "cluster_tree", "recall_at_l": 0.99,
+         "queries_per_sec": 80.0}]}]
+    assert check(good) == ""
+    # sublinear slower than the scan at the largest rung: bar missed
+    slow = [{"n": 1024, "entries": [
+        {"source": "full_scan", "recall_at_l": 1.0,
+         "queries_per_sec": 50.0},
+        {"source": "centroid_lsh", "recall_at_l": 0.99,
+         "queries_per_sec": 30.0}]}]
+    assert "acceptance bar" in check(slow)
+    # high qps but recall below 0.9: bar missed too
+    lossy = [{"n": 1024, "entries": [
+        {"source": "full_scan", "recall_at_l": 1.0,
+         "queries_per_sec": 50.0},
+        {"source": "centroid_lsh", "recall_at_l": 0.6,
+         "queries_per_sec": 300.0}]}]
+    assert "acceptance bar" in check(lossy)
+    # ... but only the LARGEST rung carries the bar, and smoke is exempt
+    good_big = [dict(good[0], n=4096)]
+    assert "acceptance bar" not in check(slow + good_big)
+    assert check(lossy, smoke=True) == ""
+    # structural defects per rung
+    bad = [{"n": 64, "entries": [
+        {"source": "cluster_tree", "recall_at_l": 1.4,
+         "queries_per_sec": -3.0}]}]
+    msgs = check(bad + good)
+    assert "no full_scan reference" in msgs
+    assert "outside [0, 1]" in msgs
+    assert "not a positive number" in msgs
 
 
 def test_bench_check_serve_requires_chaos_record(tmp_path):

@@ -1,0 +1,357 @@
+"""The candidate-source subsystem (``repro.candidates``).
+
+Covers: the spec layer (validation, registry resolution, measured-recall
+labeling through ``CascadeSpec``), the FullScan bitwise-identity
+property (a full-scan-sourced cascade IS the unsourced cascade), the
+build helpers (pack_table accounting, kmeans shape/assignment
+invariants), the two sublinear sources' candidate contracts (valid ids,
+mask semantics, budget truncation, exact-centroid refine ordering), the
+cluster tree's clamped triangle-inequality bound (a true lower bound on
+member centroid distances), ``state_structs``/``wrap`` round-trips, and
+end-to-end recall sanity on a clustered corpus. Mesh parity for the
+sourced step lives in tests/test_distributed.py.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import candidates as cs
+from repro import cascade
+from repro.candidates import (EMPTY_CENTER, SOURCES, CentroidLSHSpec,
+                              ClusterTreeSpec, FullScanSpec, SourceSpec,
+                              corpus_centroids, kmeans, pack_table,
+                              resolve_source)
+from repro.cascade import CascadeSpec, CascadeStage
+from repro.data.synth import make_clustered_text, make_text_like
+
+
+@pytest.fixture(scope="module")
+def corpus_labels():
+    # Clustered geometry (what the sources index) with pad slots in play.
+    return make_clustered_text(192, n_topics=4, vocab=128, m=8, hmax=16,
+                               min_len=8, seed=7)
+
+
+# ----------------------------------------------------------- spec layer
+
+def test_registry_and_resolution():
+    assert set(SOURCES) >= {"full_scan", "centroid_lsh", "cluster_tree"}
+    assert isinstance(resolve_source("full_scan"), FullScanSpec)
+    spec = CentroidLSHSpec(n_buckets=8, probes=2, bucket_cap=4)
+    assert resolve_source(spec) is spec
+    with pytest.raises(ValueError, match="unknown candidate source"):
+        resolve_source("nope")
+    with pytest.raises(TypeError):
+        resolve_source(42)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="probes"):
+        CentroidLSHSpec(n_buckets=4, probes=5)
+    with pytest.raises(ValueError, match="power-of-two"):
+        CentroidLSHSpec(quantizer="hyperplane", n_buckets=6, probes=2)
+    with pytest.raises(ValueError, match="unknown quantizer"):
+        CentroidLSHSpec(quantizer="nope")
+    with pytest.raises(ValueError, match="refine"):
+        CentroidLSHSpec(n_buckets=8, probes=2, bucket_cap=4, refine=0)
+    with pytest.raises(ValueError, match="exceeds the probed width"):
+        CentroidLSHSpec(n_buckets=8, probes=2, bucket_cap=4, refine=9)
+    with pytest.raises(ValueError, match="beam"):
+        ClusterTreeSpec(branching=4, beam=5)
+    with pytest.raises(ValueError, match="probes"):
+        ClusterTreeSpec(branching=4, beam=2, probes=3)
+    with pytest.raises(ValueError, match="exceeds the probed width"):
+        ClusterTreeSpec(branching=4, depth=1, beam=2, probes=2,
+                        leaf_cap=4, refine=16)
+    # hashable + dataclasses.replace-able (ride in CascadeSpec / jit keys)
+    spec = ClusterTreeSpec(branching=4, depth=2, beam=2, probes=2,
+                           leaf_cap=8)
+    assert hash(spec) == hash(dataclasses.replace(spec))
+    assert spec.n_leaves == 16 and spec.n_nodes == 20
+    assert spec.width == 16
+    assert CentroidLSHSpec(n_buckets=8, probes=2, bucket_cap=4,
+                           refine=6).width == 6
+    assert CentroidLSHSpec(n_buckets=8, probes=2).width is None
+
+
+def test_measured_recall_labeling():
+    """Sublinear sources force admissible=False (recall must be
+    MEASURED); the full scan preserves the cascade's own label."""
+    stages = (CascadeStage("rwmd", 16),)
+    unsourced = CascadeSpec(stages=stages, rescorer="act")
+    lsh = CascadeSpec(stages=stages, rescorer="act",
+                      source=CentroidLSHSpec(n_buckets=8, probes=2,
+                                             bucket_cap=8))
+    fullscan = CascadeSpec(stages=stages, rescorer="act",
+                           source="full_scan")
+    assert unsourced.admissible and not unsourced.sourced
+    assert not lsh.admissible and lsh.sourced
+    assert fullscan.admissible and not fullscan.sourced
+    assert lsh.source.describe() in lsh.describe()
+    # string kinds resolve through the registry at spec construction
+    named = CascadeSpec(stages=stages, source="centroid_lsh")
+    assert isinstance(named.source, CentroidLSHSpec)
+
+
+# -------------------------------------------------------- build helpers
+
+def test_pack_table_lossless_and_capped():
+    assign = np.array([0, 2, 0, 2, 2, 1])
+    rows, mask, dropped = pack_table(assign, 3, None)
+    assert dropped == 0 and rows.shape == (3, 3)
+    assert rows[mask].size == 6
+    np.testing.assert_array_equal(sorted(rows[2][mask[2]]), [1, 3, 4])
+    # explicit cap keeps each bucket's FIRST rows and counts the drop
+    rows_c, mask_c, dropped_c = pack_table(assign, 3, 2)
+    assert dropped_c == 1 and rows_c.shape == (3, 2)
+    np.testing.assert_array_equal(rows_c[2][mask_c[2]], [1, 3])
+    # singleton bucket: one valid slot, rest masked
+    assert mask[1].sum() == 1 and rows[1][mask[1]][0] == 5
+
+
+def test_kmeans_invariants(rng):
+    x = rng.normal(size=(200, 6)).astype(np.float32)
+    c, a = kmeans(x, 8, 3, rng)
+    assert c.shape == (8, 6) and a.shape == (200,)
+    assert a.min() >= 0 and a.max() < 8
+    # final assignment is the argmin against the returned centers
+    d = np.linalg.norm(x[:, None, :] - c[None, :, :], axis=-1)
+    np.testing.assert_array_equal(a, np.argmin(d, axis=1))
+
+
+def test_corpus_centroids_blocked_matches_direct(corpus_labels):
+    corpus, _ = corpus_labels
+    got = corpus_centroids(corpus, block=17)      # force many partials
+    ref = np.einsum("bh,bhm->bm", np.asarray(corpus.w, np.float32),
+                    np.asarray(corpus.coords,
+                               np.float32)[np.asarray(corpus.ids)])
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+
+
+# ----------------------------------------- full-scan bitwise identity
+
+def test_fullscan_source_bitwise_identity(corpus_labels):
+    """A cascade sourced with FullScanSpec takes the ORIGINAL stage-1
+    path: indices AND scores are bitwise those of the unsourced spec."""
+    corpus, _ = corpus_labels
+    q_ids, q_w = corpus.ids[:6], corpus.w[:6]
+    stages = (CascadeStage("wcd", 64), CascadeStage("rwmd", 16))
+    plain = CascadeSpec(stages=stages, rescorer="act", rescorer_iters=2)
+    sourced = CascadeSpec(stages=stages, rescorer="act",
+                          rescorer_iters=2, source="full_scan")
+    src = sourced.source.build(corpus)
+    r0 = cascade.cascade_search(corpus, q_ids, q_w, plain, 4)
+    r1 = cascade.cascade_search(corpus, q_ids, q_w, sourced, 4,
+                                source=src)
+    np.testing.assert_array_equal(np.asarray(r0.indices),
+                                  np.asarray(r1.indices))
+    np.testing.assert_array_equal(np.asarray(r0.scores),
+                                  np.asarray(r1.scores))
+
+
+def test_fullscan_bitwise_hypothesis_property():
+    """Derandomized hypothesis sweep of the same identity over corpus
+    shapes, budgets, and seeds."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None, derandomize=True)
+    @given(n=st.integers(12, 40), seed=st.integers(0, 5),
+           budget=st.integers(4, 12))
+    def prop(n, seed, budget):
+        corpus, _ = make_text_like(n_docs=n, n_classes=3, vocab=48, m=6,
+                                   doc_len=8, hmax=8, seed=seed)
+        q_ids, q_w = corpus.ids[:3], corpus.w[:3]
+        stages = (CascadeStage("rwmd", budget),)
+        plain = CascadeSpec(stages=stages, rescorer="act",
+                            rescorer_iters=1)
+        sourced = dataclasses.replace(plain, source="full_scan")
+        r0 = cascade.cascade_search(corpus, q_ids, q_w, plain, 3)
+        r1 = cascade.cascade_search(corpus, q_ids, q_w, sourced, 3,
+                                    source=sourced.source.build(corpus))
+        np.testing.assert_array_equal(np.asarray(r0.indices),
+                                      np.asarray(r1.indices))
+        np.testing.assert_array_equal(np.asarray(r0.scores),
+                                      np.asarray(r1.scores))
+
+    prop()
+
+
+# ------------------------------------------------- candidate contracts
+
+SUBLINEAR_SPECS = [
+    CentroidLSHSpec(n_buckets=8, probes=3, bucket_cap=32),
+    CentroidLSHSpec(n_buckets=8, probes=3, bucket_cap=32, refine=48),
+    CentroidLSHSpec(quantizer="hyperplane", n_buckets=8, probes=3,
+                    bucket_cap=48),
+    ClusterTreeSpec(branching=4, depth=2, beam=3, probes=2, leaf_cap=24),
+    ClusterTreeSpec(branching=4, depth=2, beam=3, probes=2, leaf_cap=24,
+                    refine=32),
+]
+
+
+@pytest.mark.parametrize("spec", SUBLINEAR_SPECS,
+                         ids=lambda s: s.describe())
+def test_candidate_contract(corpus_labels, spec):
+    """Valid ids, mask semantics, width, budget truncation, and jit
+    parity for every sublinear source."""
+    corpus, _ = corpus_labels
+    src = spec.build(corpus)
+    q_ids, q_w = corpus.ids[:5], corpus.w[:5]
+    ids, mask = src.candidates(corpus, q_ids, q_w)
+    ids, mask = np.asarray(ids), np.asarray(mask)
+    assert ids.shape == (5, src.width) and mask.shape == ids.shape
+    assert ids.min() >= 0 and ids.max() < corpus.n
+    assert mask.any(axis=1).all()           # every query sees candidates
+    # masked-valid candidates are unique per query
+    for q in range(5):
+        live = ids[q][mask[q]]
+        assert len(set(live.tolist())) == live.size
+    # budget truncation keeps a prefix
+    bids, bmask = src.candidates(corpus, q_ids, q_w, budget=7)
+    np.testing.assert_array_equal(np.asarray(bids), ids[:, :7])
+    np.testing.assert_array_equal(np.asarray(bmask), mask[:, :7])
+    # the step jits with the source as a pytree argument
+    jcorpus = dataclasses.replace(
+        corpus, ids=jnp.asarray(corpus.ids), w=jnp.asarray(corpus.w),
+        coords=jnp.asarray(corpus.coords))
+    jids, jmask = jax.jit(
+        lambda s, qi, qw: s.candidates(jcorpus, qi, qw))(
+            src, jnp.asarray(np.asarray(q_ids)),
+            jnp.asarray(np.asarray(q_w)))
+    np.testing.assert_array_equal(np.asarray(jids), ids)
+    np.testing.assert_array_equal(np.asarray(jmask), mask)
+
+
+@pytest.mark.parametrize("spec", SUBLINEAR_SPECS,
+                         ids=lambda s: s.describe())
+def test_state_structs_match_build_and_wrap(corpus_labels, spec):
+    corpus, _ = corpus_labels
+    src = spec.build(corpus)
+    leaves = jax.tree_util.tree_leaves(src)
+    structs = spec.state_structs(corpus.m)
+    assert len(leaves) == len(structs)
+    for leaf, struct in zip(leaves, structs, strict=True):
+        assert leaf.shape == struct.shape, spec.describe()
+        assert leaf.dtype == struct.dtype
+    rebuilt = spec.wrap(leaves)
+    for a, b in zip(leaves, jax.tree_util.tree_leaves(rebuilt),
+                    strict=True):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_refine_is_exact_centroid_topk(corpus_labels):
+    """Under ``refine`` the emitted candidates are exactly the
+    ``refine`` centroid-nearest of the probed rows, ascending."""
+    corpus, _ = corpus_labels
+    base = CentroidLSHSpec(n_buckets=8, probes=3, bucket_cap=32)
+    refined = dataclasses.replace(base, refine=24)
+    q_ids, q_w = corpus.ids[:4], corpus.w[:4]
+    raw_ids, raw_mask = base.build(corpus).candidates(corpus, q_ids, q_w)
+    ids, mask = refined.build(corpus).candidates(corpus, q_ids, q_w)
+    raw_ids, raw_mask = np.asarray(raw_ids), np.asarray(raw_mask)
+    ids, mask = np.asarray(ids), np.asarray(mask)
+    cents = corpus_centroids(corpus)
+    qc = np.einsum("qh,qhm->qm", np.asarray(q_w, np.float32),
+                   np.asarray(corpus.coords)[np.asarray(q_ids)])
+    for q in range(4):
+        live = raw_ids[q][raw_mask[q]]
+        d = np.linalg.norm(cents[live] - qc[q], axis=-1)
+        want = set(live[np.argsort(d, kind="stable")[:24]].tolist())
+        got = ids[q][mask[q]]
+        dg = np.linalg.norm(cents[got] - qc[q], axis=-1)
+        assert set(got.tolist()) == want
+        assert (np.diff(dg) >= -1e-6).all()        # ascending order
+
+
+def test_cluster_tree_ti_bound_is_admissible(corpus_labels):
+    """The CLAMPED bound max(d(q, center) - radius, 0) lower-bounds the
+    centroid distance from the query to EVERY row under the node — the
+    triangle-inequality pruning invariant."""
+    corpus, _ = corpus_labels
+    spec = ClusterTreeSpec(branching=4, depth=2, beam=4, probes=4,
+                           leaf_cap=None)
+    src = spec.build(corpus)
+    cents = corpus_centroids(corpus)
+    qc = np.einsum("qh,qhm->qm", np.asarray(corpus.w[:6], np.float32),
+                   np.asarray(corpus.coords)[np.asarray(corpus.ids[:6])])
+    nodes = np.asarray(src.nodes)
+    radii = np.asarray(src.radii)
+    rows = np.asarray(src.rows)
+    mask = np.asarray(src.mask)
+    off = cs.cluster_tree._level_offset(spec.branching, spec.depth)
+    for leaf in range(spec.n_leaves):
+        member = rows[leaf][mask[leaf]]
+        if member.size == 0:
+            continue
+        node = off + leaf
+        d = np.linalg.norm(nodes[node] - qc, axis=-1)
+        bound = np.maximum(d - radii[node], 0.0)
+        true = np.linalg.norm(cents[member][None, :, :]
+                              - qc[:, None, :], axis=-1).min(axis=1)
+        assert (bound <= true + 1e-5).all()
+
+
+def test_empty_bucket_sentinel(rng):
+    """More buckets than rows: empty buckets keep the far sentinel and
+    never show up as masked-valid candidates."""
+    corpus, _ = make_text_like(n_docs=10, n_classes=2, vocab=32, m=4,
+                               doc_len=6, hmax=8, seed=1)
+    spec = CentroidLSHSpec(n_buckets=16, probes=16, bucket_cap=4)
+    src = spec.build(corpus)
+    cents = np.asarray(src.centroids)
+    empty = ~np.asarray(src.mask).any(axis=1)
+    assert empty.any()
+    assert (cents[empty] == EMPTY_CENTER).all()
+    ids, mask = src.candidates(corpus, corpus.ids[:3], corpus.w[:3])
+    assert int(np.asarray(mask).sum(axis=1).max()) <= 10
+
+
+# --------------------------------------------------- cascade integration
+
+def test_sourced_cascade_requires_matching_source(corpus_labels):
+    corpus, _ = corpus_labels
+    spec = CascadeSpec(stages=(CascadeStage("rwmd", 16),),
+                       rescorer="act",
+                       source=CentroidLSHSpec(n_buckets=8, probes=2,
+                                              bucket_cap=16))
+    q_ids, q_w = corpus.ids[:3], corpus.w[:3]
+    with pytest.raises(ValueError, match="spec.source.build"):
+        cascade.cascade_search(corpus, q_ids, q_w, spec, 4)
+    other = CentroidLSHSpec(n_buckets=4, probes=2,
+                            bucket_cap=16).build(corpus)
+    with pytest.raises(ValueError, match="does not match"):
+        cascade.cascade_search(corpus, q_ids, q_w, spec, 4, source=other)
+    unsourced = CascadeSpec(stages=(CascadeStage("rwmd", 16),),
+                            rescorer="act")
+    with pytest.raises(ValueError, match="does not declare"):
+        cascade.cascade_search(corpus, q_ids, q_w, unsourced, 4,
+                               source=other)
+
+
+def test_sourced_cascade_recall_and_traffic(corpus_labels):
+    """End-to-end: generous probes on the clustered corpus recover most
+    of the full cascade's top-l while scoring strictly fewer stage-1
+    rows; stage_rows reports the sourced width."""
+    corpus, _ = corpus_labels
+    q_ids, q_w = corpus.ids[:8], corpus.w[:8]
+    full = CascadeSpec(stages=(CascadeStage("wcd", 96),
+                               CascadeStage("rwmd", 32)),
+                       rescorer="act", rescorer_iters=2)
+    ref = cascade.cascade_search(corpus, q_ids, q_w, full, 8)
+    spec = CascadeSpec(
+        stages=(CascadeStage("rwmd", 32),), rescorer="act",
+        rescorer_iters=2,
+        source=CentroidLSHSpec(n_buckets=8, probes=4, bucket_cap=48,
+                               refine=96))
+    src = spec.source.build(corpus)
+    got = cascade.cascade_search(corpus, q_ids, q_w, spec, 8, source=src)
+    assert cascade.topk_recall(got.indices, ref.indices) >= 0.8
+    rows = cascade.stage_rows(spec, corpus.n, 8)
+    # stage-1 scores the sourced width (96 probed rows), not the corpus
+    assert rows["stage1.rwmd"] == 96
+    assert rows["rescore.act"] == 32
+    assert spec.source.width == 96 < corpus.n

@@ -619,6 +619,78 @@ print("RESHARD LIVE OK")
 
 
 @pytest.mark.slow
+def test_distributed_sourced_cascade_matches_single_host():
+    """Sourced cascades (both sublinear sources) on the 8-device (4, 2)
+    mesh: the source state rides into the SPMD step as replicated
+    trailing operands, and the distributed top-l matches the single-host
+    reference backend fed the SAME built source — for the IVF/LSH source
+    with the exact-centroid refine path on and for the cluster tree."""
+    out = _run("""
+import dataclasses, jax, numpy as np
+from repro.api import EmdIndex, EngineConfig
+from repro.candidates import CentroidLSHSpec, ClusterTreeSpec
+from repro.cascade import CascadeSpec, CascadeStage
+from repro.data.synth import make_clustered_text
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+corpus, _ = make_clustered_text(90, n_topics=4, vocab=128, m=8, hmax=16,
+                                min_len=8, seed=3)
+q_ids, q_w = corpus.ids[:5], corpus.w[:5]       # odd nq: padded to the mesh
+for src_spec in (CentroidLSHSpec(n_buckets=8, probes=4, bucket_cap=24,
+                                 refine=48),
+                 ClusterTreeSpec(branching=4, depth=2, beam=4, probes=3,
+                                 leaf_cap=16)):
+    spec = CascadeSpec(stages=(CascadeStage("rwmd", 16),),
+                       rescorer="act", rescorer_iters=2, source=src_spec)
+    cfg = EngineConfig(method="act", iters=2, top_l=4, cascade=spec,
+                       backend="distributed", pad_multiple=16, block_q=3)
+    dst = EmdIndex.build(corpus, cfg, mesh=mesh)
+    assert dst._padded_corpus.n > corpus.n          # pad rows in play
+    ref = EmdIndex.build(corpus,
+                         dataclasses.replace(cfg, backend="reference"),
+                         source=dst.source)         # same built source
+    s_d, i_d = dst.search(q_ids, q_w)
+    s_r, i_r = ref.search(q_ids, q_w)
+    np.testing.assert_array_equal(np.sort(np.asarray(i_d), 1),
+                                  np.sort(np.asarray(i_r), 1))
+    np.testing.assert_allclose(np.sort(np.asarray(s_d), 1),
+                               np.sort(np.asarray(s_r), 1),
+                               rtol=1e-5, atol=1e-6)
+    assert int(np.asarray(i_d).max()) < corpus.n    # pads masked
+    print("SOURCED MESH OK", src_spec.kind)
+print("ALL SOURCED OK")
+""")
+    assert "ALL SOURCED OK" in out
+    assert "SOURCED MESH OK centroid_lsh" in out
+    assert "SOURCED MESH OK cluster_tree" in out
+
+
+@pytest.mark.slow
+def test_sourced_cascade_traffic_stays_flat():
+    """The subsystem's core promise under the scaling guard: compiling
+    the sourced cascade steps at the guard's two corpus sizes, cross-mesh
+    traffic and FLOPs must NOT grow with the corpus (only the replicated
+    source state and probed gathers may appear) — for the LSH source
+    (refine on), its kernel variant, and the cluster tree."""
+    out = _run("""
+from repro.analysis import collectives_check as C
+from repro.launch import search as S
+
+mesh = C.make_mesh()
+cases = {c.name: c for c in S.step_cases()}
+for name in ("cascade:sourced:lsh:dist", "cascade:sourced:lsh:dist:kernels",
+             "cascade:sourced:tree:dist"):
+    case = cases[name]
+    assert case.scale_guarded
+    assert C.check_scaling(case, mesh) == [], name
+    print("FLAT OK", name)
+print("ALL FLAT OK")
+""")
+    assert "ALL FLAT OK" in out
+    assert "FLAT OK cascade:sourced:tree:dist" in out
+
+
+@pytest.mark.slow
 def test_emd_server_recovers_on_mesh_change():
     """Serving-level recovery on mesh change: a live EmdServer over a
     distributed-backend index rebuilds every tier on the surviving mesh
