@@ -23,12 +23,20 @@ import os
 
 import jax
 
+import jax.numpy as jnp
+
 from benchmarks.common import device_kind, emit, paired, text_corpus, timeit
 from repro.api import EmdIndex, EngineConfig
+from repro.core import retrieval
+from repro.core.precision import resolve
 
 #: (method, iters) cases: the fast relaxation, the overlap fix, the
 #: tight bound.
 CASES = (("rwmd", 0), ("omr", 0), ("act", 3))
+
+#: The mixed-precision frontier: every policy is swept for recall drift
+#: against the f32 ranking, handoff bytes, and throughput.
+PRECISION_POLICIES = ("f32", "bf16", "bf16_agg")
 
 #: (method, iters) cases for the distributed-step smoke entry (the
 #: method-generic mesh pipeline; single-host mesh here, so this tracks
@@ -42,6 +50,47 @@ def _sizes(smoke: bool) -> dict:
                     hmax=16, nqs=(1, 4), reps=3)
     return dict(n_docs=512, n_classes=8, vocab=512, m=16, doc_len=20,
                 hmax=16, nqs=(1, 8, 64), reps=11)
+
+
+def _precision_sweep(report: dict, corpus, nq: int, reps: int,
+                     top_l: int) -> None:
+    """The precision-vs-recall frontier: the batched ACT engine under
+    each precision policy, recording recall@top_l against the float32
+    ranking (delta 0 for f32 by construction), the Phase-1 handoff bytes
+    per (query, vocab-row) pair implied by the policy's storage dtype —
+    the Z/W ladders hold ``2 * iters + 1`` entries per pair — and the
+    measured queries/sec. ``analysis.bench_check`` requires all three
+    policies present, the bf16 bytes exactly halved, and the bf16 recall
+    delta within the acceptance band."""
+    iters = 3
+    q_ids, q_w = corpus.ids[:nq], corpus.w[:nq]
+    entries = []
+    ref_scores = None
+    for policy in PRECISION_POLICIES:
+        ix = EmdIndex.build(corpus, EngineConfig(
+            method="act", iters=iters, top_l=top_l, precision=policy))
+        scores = ix.scores(q_ids, q_w)
+        if ref_scores is None:                       # f32 runs first
+            ref_scores = scores
+        _, ref_idx = jax.lax.top_k(-ref_scores, top_l)
+        _, idx = jax.lax.top_k(-scores, top_l)
+        recall = retrieval.topl_overlap(idx, ref_idx)
+        maxerr = float(jnp.abs(scores.astype(jnp.float32)
+                               - ref_scores).max())
+        us = timeit(lambda: ix.scores(q_ids, q_w), n_iter=reps)
+        qps = nq / (us / 1e6)
+        storage = jnp.dtype(resolve(policy).storage)
+        emit(f"bench_batch.precision.{policy}", us,
+             f"recall@{top_l}={recall:.4f} qps={qps:.1f}")
+        entries.append(dict(
+            policy=policy, storage_dtype=storage.name,
+            recall_at_l_vs_f32=round(recall, 4),
+            recall_delta_vs_f32=round(1.0 - recall, 4),
+            handoff_bytes_per_row=storage.itemsize * (2 * iters + 1),
+            max_abs_err_vs_f32=maxerr,
+            us_per_call=round(us, 1), queries_per_sec=round(qps, 1)))
+    report["precision_sweep"] = dict(method="act", iters=iters, nq=nq,
+                                     top_l=top_l, entries=entries)
 
 
 def run() -> None:
@@ -104,6 +153,9 @@ def run() -> None:
             method=method, iters=iters, nq=nq_d, engine="distributed",
             us_per_call=round(us, 1), queries_per_sec=round(qps, 1)))
         report["distributed_step"][f"{method}.nq{nq_d}"] = round(qps, 1)
+
+    _precision_sweep(report, corpus, max(nqs), reps,
+                     top_l=4 if smoke else 16)
 
     path = os.environ.get("BENCH_BATCH_JSON", "BENCH_batch.json")
     with open(path, "w") as f:

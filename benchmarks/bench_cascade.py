@@ -54,6 +54,11 @@ from repro.data.synth import make_clustered_text
 #: Rescore budgets as fractions of n (the acceptance grid).
 BUDGETS = (0.01, 0.05, 0.20)
 
+#: The mixed-precision frontier, swept through the cascade at the 5%
+#: budget (see ``bench_batch.PRECISION_POLICIES`` for the batched-engine
+#: sweep of the same policies).
+PRECISION_POLICIES = ("f32", "bf16", "bf16_agg")
+
 #: ACT Phase-2 rounds of both the full-corpus baseline and the rescorer.
 ACT_ITERS = 3
 
@@ -191,6 +196,44 @@ def _sweep(report: dict, smoke: bool, top_l: int) -> None:
         report["sweep"].append(dict(n=n, nq=nq, entries=entries))
 
 
+def _precision_sweep(report: dict, corpus, q_ids, q_w, nq: int,
+                     top_l: int, reps: int) -> None:
+    """The cascade's precision-vs-recall frontier: the acceptance
+    cascade at the 5% budget under each precision policy — recall@top_l
+    of the policy's retrieved set against the f32 cascade's (delta 0 for
+    f32), per-(query, vocab-row) handoff bytes from the storage dtype,
+    and measured queries/sec. The reduced policies ride the SAME pruned
+    stages and rescorer; only the handoff/table dtypes move."""
+    import jax.numpy as jnp
+
+    from repro.core.precision import resolve
+
+    pct = 0.05
+    entries = []
+    ref_idx = None
+    for policy in PRECISION_POLICIES:
+        casc = EmdIndex.build(corpus, EngineConfig(
+            method="act", iters=ACT_ITERS, top_l=top_l, cascade=_spec(pct),
+            precision=policy))
+        _, idx = casc.search(q_ids, q_w)
+        if ref_idx is None:                          # f32 runs first
+            ref_idx = idx
+        recall = cascade.topk_recall(idx, ref_idx)
+        us = timeit(lambda: casc.search(q_ids, q_w), n_iter=reps)
+        qps = nq / (us / 1e6)
+        storage = jnp.dtype(resolve(policy).storage)
+        emit(f"bench_cascade.precision.{policy}", us,
+             f"recall@{top_l}={recall:.4f} qps={qps:.1f}")
+        entries.append(dict(
+            policy=policy, storage_dtype=storage.name, budget_pct=pct,
+            recall_at_l_vs_f32=round(recall, 4),
+            recall_delta_vs_f32=round(1.0 - recall, 4),
+            handoff_bytes_per_row=storage.itemsize * (2 * ACT_ITERS + 1),
+            us_per_call=round(us, 1), queries_per_sec=round(qps, 1)))
+    report["precision_sweep"] = dict(budget_pct=pct, nq=nq, top_l=top_l,
+                                     entries=entries)
+
+
 def run() -> None:
     smoke = os.environ.get("BENCH_SMOKE", "0") not in ("0", "")
     sz = _sizes(smoke)
@@ -266,6 +309,7 @@ def run() -> None:
         recall_at_l=round(recall_d, 4), top_l=top_l,
         queries_per_sec=round(qps_d, 1))
 
+    _precision_sweep(report, corpus, q_ids, q_w, nq, top_l, reps)
     _sweep(report, smoke, top_l)
 
     path = os.environ.get("BENCH_CASCADE_JSON", "BENCH_cascade.json")

@@ -14,6 +14,12 @@ Validated:
   provenance fields (``device_kind`` plus an ``autotune`` record with
   the mode and the tuned tile picks) so a perf number is never divorced
   from the hardware and tile configuration that produced it.
+  Both batch and cascade artifacts must also carry a
+  ``precision_sweep``: every policy in ``PRECISION_POLICIES`` with its
+  recall delta vs f32 and handoff bytes, bf16 bytes exactly half of
+  f32's, and the bf16 recall delta inside the acceptance band
+  (``PRECISION_MAX_RECALL_DELTA``) — the measured frontier behind
+  ``EngineConfig(precision=...)``.
 * ``BENCH_cascade.json`` — non-empty ``entries`` each with
   ``recall_at_l`` / ``queries_per_sec`` / ``use_kernels``; BOTH kernel
   settings present (the kernel path must not silently drop out of the
@@ -78,6 +84,63 @@ def _check_provenance(r: dict, path: str) -> list[Violation]:
     return out
 
 
+#: Policies the precision sweep must cover (mirrors
+#: ``repro.core.precision.POLICIES`` — literal here so this pass stays
+#: stdlib-only).
+PRECISION_POLICIES = ("f32", "bf16", "bf16_agg")
+
+#: Acceptance band for the bf16 policy's recall@l drop vs f32 (the
+#: "within 0.01 of f32" bar of the mixed-precision frontier).
+PRECISION_MAX_RECALL_DELTA = 0.01
+
+
+def _check_precision(r: dict, path: str) -> list[Violation]:
+    """The per-policy precision sweep every scoring artifact carries."""
+    ps = r.get("precision_sweep")
+    if not isinstance(ps, dict) or not ps.get("entries"):
+        return [Violation(
+            "bench", path,
+            "no precision_sweep — the mixed-precision frontier fell "
+            "out of the bench matrix")]
+    out = []
+    entries = {e.get("policy"): e for e in ps["entries"]}
+    missing = [p for p in PRECISION_POLICIES if p not in entries]
+    if missing:
+        out.append(Violation(
+            "bench", path,
+            f"precision_sweep missing policies {missing} — every "
+            f"policy in {list(PRECISION_POLICIES)} must be measured"))
+    for name, e in sorted(entries.items()):
+        for key in ("recall_delta_vs_f32", "handoff_bytes_per_row",
+                    "queries_per_sec"):
+            if key not in e:
+                out.append(Violation(
+                    "bench", path,
+                    f"precision_sweep entry {name!r} missing {key!r}"))
+        delta = e.get("recall_delta_vs_f32")
+        if isinstance(delta, (int, float)) and not 0.0 <= delta <= 1.0:
+            out.append(Violation(
+                "bench", path,
+                f"precision_sweep {name!r} recall_delta_vs_f32={delta} "
+                "outside [0, 1]"))
+    f32b = entries.get("f32", {}).get("handoff_bytes_per_row")
+    bf16b = entries.get("bf16", {}).get("handoff_bytes_per_row")
+    if isinstance(f32b, int) and isinstance(bf16b, int) \
+            and bf16b * 2 != f32b:
+        out.append(Violation(
+            "bench", path,
+            f"bf16 handoff bytes {bf16b} are not half of f32's {f32b} "
+            "— the storage dtype stopped driving the byte model"))
+    delta = entries.get("bf16", {}).get("recall_delta_vs_f32")
+    if isinstance(delta, (int, float)) \
+            and delta > PRECISION_MAX_RECALL_DELTA:
+        out.append(Violation(
+            "bench", path,
+            f"bf16 recall delta {delta} vs f32 exceeds the "
+            f"{PRECISION_MAX_RECALL_DELTA} acceptance band"))
+    return out
+
+
 def check_batch(path: str = BATCH_PATH) -> list[Violation]:
     r, out = _load(path)
     if r is None:
@@ -96,6 +159,7 @@ def check_batch(path: str = BATCH_PATH) -> list[Violation]:
         if "queries_per_sec" not in e and "qps" not in e:
             out.append(Violation(
                 "bench", path, f"entry #{i} has no throughput field"))
+    out += _check_precision(r, path)
     return out
 
 
@@ -134,6 +198,7 @@ def check_cascade(path: str = CASCADE_PATH) -> list[Violation]:
             if key not in dist:
                 out.append(Violation(
                     "bench", path, f"distributed_step missing {key!r}"))
+    out += _check_precision(r, path)
     out += _check_sweep(r, path)
     return out
 

@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python -m repro.analysis.check [--passes ...]
 
-Four default passes (plus the opt-in bench-artifact pass), each a module
+Five default passes (plus the opt-in bench-artifact pass), each a module
 in this package returning :class:`~repro.analysis.violations.Violation`
 records; the CLI renders a per-pass report and exits non-zero if any
 violation survives:
@@ -13,6 +13,10 @@ violation survives:
 * ``hazards``     — host callbacks / f64 promotions / oversized baked
                     constants in every registry step's jaxpr
                     (``hazards``). Tracing only, no devices.
+* ``precision``   — bf16-policy step cases whose Phase-1 handoffs
+                    silently stayed float32, or whose precision kwarg
+                    was dropped entirely (``precision_lint``). Tracing
+                    only, no devices.
 * ``vmem``        — Pallas per-core VMEM footprints from the kernels'
                     static block layouts (``vmem``). Pure arithmetic.
 * ``collectives`` — partitioned-HLO collective bytes of every step on
@@ -39,6 +43,7 @@ import sys
 PASSES = {
     "registry": ("repro.analysis.registry_lint", True),
     "hazards": ("repro.analysis.hazards", True),
+    "precision": ("repro.analysis.precision_lint", True),
     "vmem": ("repro.analysis.vmem", True),
     "collectives": ("repro.analysis.collectives_check", True),
     "bench": ("repro.analysis.bench_check", False),

@@ -14,6 +14,14 @@ replica-group size g:
 Collectives inside a scanned layer stack live in a while-loop body; XLA
 lowers lax.scan to a while whose condition compares the induction variable
 to a constant, which we recover and multiply by.
+
+Reduced-precision emulation: the CPU host-mesh oracle cannot run bf16
+collectives natively, so XLA widens them — ``convert(bf16 -> f32)`` ->
+f32 all-gather -> ``convert`` back — and the textual wire dtype lies
+about the program's semantic traffic (a TPU runs the same collective
+natively at bf16 width). When a collective's operand is produced by a
+convert (or a fusion containing one) from a narrower float into the
+collective dtype, bytes are charged at the NARROW width.
 """
 from __future__ import annotations
 
@@ -37,6 +45,13 @@ _WHILE_RE = re.compile(r"while\(")
 _WHILE_ATTR = re.compile(r"(?:condition|body)=%?([\w\.\-]+)")
 _CONST_RE = re.compile(r"constant\((\d+)\)")
 _CALL_RE = re.compile(r"(?:to_apply|calls)=%?([\w\.\-]+)")
+_OPERAND_RE = re.compile(
+    r"\(\s*(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?\s+)?%([\w\.\-]+)")
+#: ``<wide> convert(<narrow>[...`` — the CPU collective-type widener's
+#: producer-side upcast (narrow float -> the collective's wire dtype).
+_NARROW_CONVERT_RE = re.compile(
+    r"=\s*(?P<wide>f32|f64)\[[0-9,]*\](?:\{[^}]*\})?\s+"
+    r"convert\(\s*(?P<narrow>bf16|f16|f8e4m3fn|f8e5m2)\[")
 
 
 def _shape_bytes(text: str) -> int:
@@ -109,6 +124,36 @@ def _trip_count(cond_lines: list[str]) -> int:
     return best
 
 
+def _semantic_scale(line: str, kind: str, comps, comp_lines) -> float:
+    """1.0, or narrow/wide itemsize ratio when this collective's operand
+    is a widening convert (or a fusion containing one) from a narrower
+    float — the CPU oracle's bf16-collective emulation (module docstring).
+    """
+    rm = _SHAPE_RE.search(line)
+    if rm is None or rm.group(1) not in ("f32", "f64"):
+        return 1.0          # already narrow (or integer-fenced) wire
+    wire = rm.group(1)
+    om = _OPERAND_RE.search(line, line.index(kind))
+    if not om:
+        return 1.0
+    opname = om.group(1)
+    prod = next((ln for ln in comp_lines
+                 if ln.strip().startswith(f"%{opname} ")
+                 or f" %{opname} = " in ln), None)
+    if prod is None:
+        return 1.0
+    cands = [prod]
+    cm = _CALL_RE.search(prod)
+    if cm and "fusion" in prod:
+        cands += comps.get(cm.group(1), [])
+    for ln in cands:
+        nm = _NARROW_CONVERT_RE.search(ln)
+        if nm and nm.group("wide") == wire:
+            return (_DTYPE_BYTES[nm.group("narrow")]
+                    / _DTYPE_BYTES[nm.group("wide")])
+    return 1.0
+
+
 def collective_bytes(hlo: str, n_devices: int) -> dict[str, float]:
     """Per-kind GLOBAL collective wire bytes, trip-count aware."""
     comps = _split_computations(hlo)
@@ -126,7 +171,8 @@ def collective_bytes(hlo: str, n_devices: int) -> dict[str, float]:
                 kind = m.group("kind")
                 rb = _shape_bytes(m.group("result"))
                 g, groups = _group_info(s, n_devices)
-                out[kind] += _wire_bytes(kind, rb, g, groups)
+                scale = _semantic_scale(s, kind, comps, comps[name])
+                out[kind] += _wire_bytes(kind, int(rb * scale), g, groups)
                 continue
             if _WHILE_RE.search(s):
                 cm_cond = re.search(r"condition=%?([\w\.\-]+)", s)

@@ -1,0 +1,122 @@
+"""Precision-policy lint — catch bf16 policies that silently run f32.
+
+A mixed-precision policy (``repro.core.precision``) earns its keep at
+exactly one place: the Phase-1 handoff tensors — the (nq, v, k) cost /
+capacity ladders, the (nq, v) min-handoff row, and the (nq, v, h)
+reverse distance table — which are the arrays the mesh step all-gathers
+over "model" and the serving path keeps resident. If a refactor drops
+the storage-dtype downcast, nothing breaks: the program still traces,
+scores still match (better, even), and the only symptom is that every
+collective and table silently doubles back to f32 width. This pass makes
+that regression loud.
+
+For every registry step case that declares a reduced-precision policy
+(``StepCase.precision != "f32"``), the raw step callable is traced (no
+devices, like ``analysis.hazards``) and its equation outputs walked:
+
+* **policy ignored** — a bf16-policy trace containing no bfloat16 avals
+  at all means the precision kwarg fell off somewhere in the stack.
+* **handoff stayed f32** — a float32 aval with a handoff shape and NO
+  bfloat16 aval of the same shape anywhere in the trace. The healthy
+  trace contains BOTH (the f32 value feeding the downcast and its bf16
+  result); only-f32 means the ``astype(policy.storage)`` was dropped.
+  Keying on the bf16 twin is what keeps the f32 accumulators and the
+  pre-downcast top-k outputs — which are f32 BY DESIGN — out of the
+  report.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.analysis.jaxpr_cost import iter_eqns
+from repro.analysis.violations import Violation
+
+#: Ladder depths probed for the (nq, v, k) handoff shapes. Real ladders
+#: are ``iters + 1`` deep (single digits); the cap keeps the (nq, v, h)
+#: compute intermediates of h-sized last axes out of the ladder set.
+MAX_LADDER_K = 8
+
+
+def handoff_shapes(nq: int, v: int, h: int) -> frozenset[tuple[int, ...]]:
+    """Every Phase-1 handoff shape a policy's storage dtype must cover:
+    the top-k ladders, the min-handoff row, and the reverse distance
+    table (query-major, as ``sharding.annotate`` pins them)."""
+    shapes = {(nq, v), (nq, v, h)}
+    shapes.update((nq, v, kk) for kk in range(1, MAX_LADDER_K + 1))
+    return frozenset(shapes)
+
+
+def _aval_shapes(closed) -> dict[str, set[tuple[int, ...]]]:
+    out: dict[str, set[tuple[int, ...]]] = {}
+    for eqn in iter_eqns(closed.jaxpr):
+        for var in eqn.outvars:
+            aval = getattr(var, "aval", None)
+            dt = getattr(getattr(aval, "dtype", None), "name", None)
+            if dt is not None:
+                out.setdefault(dt, set()).add(tuple(aval.shape))
+    return out
+
+
+def check_jaxpr(name: str, closed, *, nq: int, v: int, h: int,
+                storage: str = "bfloat16") -> list[Violation]:
+    """Lint one already-traced ClosedJaxpr of a reduced-precision step."""
+    shapes = _aval_shapes(closed)
+    stored = shapes.get(storage, set())
+    if not stored:
+        return [Violation(
+            "precision", name,
+            f"policy declares {storage} storage but the trace contains "
+            f"no {storage} avals at all — the precision kwarg was "
+            "dropped somewhere between the step and the lc engines")]
+    out: list[Violation] = []
+    for shape in sorted(handoff_shapes(nq, v, h) & shapes.get("float32",
+                                                              set())):
+        if shape not in stored:
+            out.append(Violation(
+                "precision", name,
+                f"Phase-1 handoff {shape} appears in float32 with no "
+                f"{storage} counterpart — the storage-dtype downcast "
+                "was dropped, doubling its table bytes and mesh "
+                "all-gather width"))
+    return out
+
+
+def check_fn(name: str, fn, specs, *, nq: int, v: int, h: int,
+             storage: str = "bfloat16") -> list[Violation]:
+    """Trace ``fn`` on ``specs`` and lint it."""
+    try:
+        closed = jax.make_jaxpr(fn)(*specs)
+    except Exception as e:  # noqa: BLE001 - surface, don't crash the suite
+        return [Violation("precision", name,
+                          f"step failed to trace: {e}")]
+    return check_jaxpr(name, closed, nq=nq, v=v, h=h, storage=storage)
+
+
+def run(*, workload=None, pad_multiple: int = 8,
+        extra_fns: dict | None = None) -> tuple[list[Violation], int]:
+    """Lint every registry step case with a reduced-precision policy
+    (plus ``extra_fns``, {name: callable} traced as bf16-policy steps —
+    the seeded-violation tests inject through it)."""
+    from repro.analysis.collectives_check import check_workload
+    from repro.core.precision import resolve
+    from repro.launch import search as S
+
+    workload = check_workload() if workload is None else workload
+    nq, v, h = workload.queries, workload.vocab, workload.hmax
+    specs = S.search_input_specs(workload, pad_multiple=pad_multiple)
+    out: list[Violation] = []
+    checked = 0
+    for case in S.step_cases():
+        if case.precision == "f32":
+            continue
+        fn = S.build_step(case, workload)
+        case_specs = S.case_input_specs(case, workload,
+                                        pad_multiple=pad_multiple)
+        storage = resolve(case.precision).storage
+        out += check_fn(case.name, fn, case_specs, nq=nq, v=v, h=h,
+                        storage=storage)
+        checked += 1
+    for name, fn in (extra_fns or {}).items():
+        out += check_fn(name, fn, specs, nq=nq, v=v, h=h)
+        checked += 1
+    return out, checked

@@ -85,6 +85,22 @@ def check_configs() -> list[tuple[str, str, dict]]:
         out.append((f"paper:cand_dist:{mode}", "cand_dist",
                     dict(nq=8, b=512, h=PAPER.hmax, v=PAPER.vocab,
                          qh=PAPER.hmax, mode=mode, block_n=2)))
+    # bf16 storage profile: the same paper-scale launches under the
+    # "bf16" precision policy. The table/handoff slabs halve, which is
+    # exactly what grows the autotuner's admissible tile space — checked
+    # here so a layout change that silently stops honoring ``dtype``
+    # fails CI (the footprints must fit with DOUBLED candidate tiles).
+    out += [
+        ("paper:dist_topk:bf16", "dist_topk",
+         dict(nq=8, v=PAPER.vocab, h=PAPER.hmax, m=PAPER.dim, k=k,
+              dtype="bfloat16")),
+        ("paper:cand_pour:bf16", "cand_pour",
+         dict(nq=8, b=512, h=PAPER.hmax, v=PAPER.vocab, k=k,
+              iters=PAPER.iters, block_n=16, dtype="bfloat16")),
+        ("paper:cand_dist:rev_min:bf16", "cand_dist",
+         dict(nq=8, b=512, h=PAPER.hmax, v=PAPER.vocab, qh=PAPER.hmax,
+              mode="rev_min", block_n=4, dtype="bfloat16")),
+    ]
     return out
 
 

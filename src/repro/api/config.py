@@ -10,6 +10,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.cascade.spec import CascadeSpec, resolve_spec
+from repro.core.precision import POLICIES
 from repro.core.retrieval import METHODS
 
 #: Execution engines EmdIndex can place a method on.
@@ -53,6 +54,15 @@ class EngineConfig:
     block_v/block_h/block_n: Pallas kernel tile sizes (vocabulary rows,
                   histogram slots, database rows). Explicit values always
                   win over autotuned picks.
+    precision:    mixed-precision policy preset (``repro.core.precision``
+                  ``POLICIES``): ``"f32"`` (default — bitwise the
+                  historical pipeline), ``"bf16"`` (bf16 Phase-1 storage
+                  + handoffs, f32 matmul operands and accumulators —
+                  halves table bytes and mesh handoff collectives), or
+                  ``"bf16_agg"`` (additionally bf16 matmul operands; the
+                  MXU still accumulates f32). Applies to every batched
+                  scoring path on every backend; reductions and sentinel
+                  writes always stay in the f32 accumulator.
     autotune:     tile-size policy applied at ``EmdIndex.build``
                   (``repro.kernels.autotune``): ``off`` (default — the
                   knobs above are used verbatim), ``cached`` (apply the
@@ -96,11 +106,15 @@ class EngineConfig:
     cascade: CascadeSpec | str | None = None
     autotune: str = "off"
     tune_cache: str | None = None
+    precision: str = "f32"
 
     def __post_init__(self) -> None:
         if self.method not in METHODS:
             raise ValueError(f"unknown method {self.method!r}; "
                              f"registered: {sorted(METHODS)}")
+        if self.precision not in POLICIES:
+            raise ValueError(f"unknown precision policy {self.precision!r}; "
+                             f"one of {sorted(POLICIES)}")
         if self.backend not in BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r}; "
                              f"one of {BACKENDS}")
@@ -185,7 +199,7 @@ class EngineConfig:
             use_kernels=self._kernel_backend() and self.spec.supports_kernels,
             block_v=self.block_v, block_h=self.block_h,
             block_n=self.block_n, rev_block=self.rev_block,
-            block_q=self.block_q,
+            block_q=self.block_q, precision=self.precision,
         )
 
     def dist_step_kwargs(self) -> dict:

@@ -40,7 +40,7 @@ from repro.sharding import annotate
 Array = jax.Array
 
 _KNOBS = ("use_kernels", "block_v", "block_h", "block_n", "rev_block",
-          "block_q", "mesh")
+          "block_q", "mesh", "precision")
 
 
 class CascadeResult(NamedTuple):
@@ -218,7 +218,7 @@ def cascade_search(corpus: lc.Corpus, Q_ids: Array, Q_w: Array,
                    engine: str = "batched", use_kernels: bool = False,
                    block_v: int = 256, block_h: int = 256,
                    block_n: int = 256, rev_block: int = 256,
-                   block_q: int = 8, mesh=None,
+                   block_q: int = 8, mesh=None, precision: str = "f32",
                    source=None) -> CascadeResult:
     """Cascaded top-l search of a ``(nq, h)`` query batch.
 
@@ -261,7 +261,7 @@ def cascade_search(corpus: lc.Corpus, Q_ids: Array, Q_w: Array,
             "CascadeSpec.source so admissibility accounting sees it)")
     knobs = dict(engine=engine, use_kernels=use_kernels, block_v=block_v,
                  block_h=block_h, block_n=block_n, rev_block=rev_block,
-                 block_q=block_q, mesh=mesh)
+                 block_q=block_q, mesh=mesh, precision=precision)
     if rescore.resolve(spec.rescorer).jittable:
         return _cascade_device(corpus, Q_ids, Q_w, spec, top_l,
                                n_valid=n_valid, topk_blocks=topk_blocks,

@@ -192,6 +192,16 @@ def restore(ckpt_dir: str, step: int, like: Any,
                 f"checkpoint corruption in {name}: "
                 f"{digest} != {meta['sha256']}")
         dtype = _np_dtype(meta["dtype"])
+        want = getattr(names[name], "dtype", None)
+        if want is not None and np.dtype(want) != dtype:
+            # A precision-policy index must come back in its stored
+            # dtypes — reinterpreting (or casting) here would silently
+            # change what the caller serves. Typed so recovery paths
+            # treat it like any other snapshot/target disagreement.
+            raise CheckpointCorrupt(
+                f"checkpoint dtype mismatch in {name}: stored {dtype} "
+                f"but restore target expects {np.dtype(want)}; rebuild "
+                "the target with the snapshot's dtypes (no silent cast)")
         arr = raw.view(dtype).reshape(meta["shape"])
         if name in shard_map_:
             out[name] = jax.device_put(arr, shard_map_[name])

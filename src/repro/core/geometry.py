@@ -31,14 +31,30 @@ def pairwise_sqdist(a: Array, b: Array) -> Array:
     return jnp.maximum(a2 + b2 - 2.0 * cross, 0.0)
 
 
-def pairwise_dist(a: Array, b: Array, snap: float = ZERO_SNAP) -> Array:
+def pairwise_dist(a: Array, b: Array, snap: float = ZERO_SNAP, *,
+                  compute_dtype=None) -> Array:
     """Euclidean distances between rows of ``a`` and ``b``; near-zero values
-    collapse to exact 0 relative to pair magnitude (see ZERO_SNAP)."""
+    collapse to exact 0 relative to pair magnitude (see ZERO_SNAP).
+
+    ``compute_dtype`` (a precision policy's compute role) drops only the
+    MXU matmul OPERANDS to the reduced dtype — the contraction still
+    accumulates into float32 (``preferred_element_type``), and the norm
+    terms, snap, and sqrt stay in the input dtype, so the result dtype
+    is unchanged. ``None`` (or the input dtype itself) leaves the
+    original graph untouched.
+    """
     a = jnp.asarray(a)
     b = jnp.asarray(b)
     a2 = jnp.sum(a * a, axis=-1, keepdims=True)          # (na, 1)
     b2 = jnp.sum(b * b, axis=-1, keepdims=True).T        # (1, nb)
-    d2 = jnp.maximum(a2 + b2 - 2.0 * (a @ b.T), 0.0)
+    if compute_dtype is not None and jnp.dtype(compute_dtype) != a.dtype:
+        cross = jax.lax.dot_general(
+            a.astype(compute_dtype), b.astype(compute_dtype),
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(a.dtype)
+    else:
+        cross = a @ b.T
+    d2 = jnp.maximum(a2 + b2 - 2.0 * cross, 0.0)
     if snap:
         d2 = jnp.where(d2 < snap * snap * (a2 + b2), 0.0, d2)
     return jnp.sqrt(d2)

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.geometry import pairwise_dist
+from repro.core.precision import pad_dist_for, resolve as resolve_precision
 from repro.sharding import annotate
 
 Array = jax.Array
@@ -74,7 +75,25 @@ class Corpus:
 
 #: Finite sentinel for padding query slots. Large enough never to be chosen
 #: over a real bin, finite so 0-mass remainders cost 0.0 (inf would NaN).
+#: This is the float32 value; reduced-precision arrays must use
+#: ``pad_dist_for(dtype)`` instead (1e30 overflows float16 to inf and
+#: rounds in bfloat16 — the sentinel must be exactly representable so a
+#: downcast/upcast round-trip stays a sentinel). ``pad_dist_for(float32)``
+#: is bitwise this constant.
 PAD_DIST = 1e30
+
+
+def _accum(x: Array) -> Array:
+    """Upcast a reduced-precision handoff block to the float32
+    accumulator dtype. All reductions and sentinel writes run on the
+    result, never in bfloat16 storage. A no-op for float32 inputs, so
+    the default policy's graph is unchanged bit for bit."""
+    return x.astype(jnp.promote_types(x.dtype, jnp.float32))
+
+
+def _pad_const(dtype):
+    """The :func:`pad_dist_for` sentinel as a 0-d array of ``dtype``."""
+    return jnp.asarray(pad_dist_for(dtype), dtype)
 
 
 def mask_pad_rows(scores: Array, n_valid: int | None) -> Array:
@@ -87,8 +106,7 @@ def mask_pad_rows(scores: Array, n_valid: int | None) -> Array:
     if n_valid is None or n_valid >= scores.shape[-1]:
         return scores
     col = jax.lax.broadcasted_iota(jnp.int32, scores.shape, scores.ndim - 1)
-    return jnp.where(col < n_valid, scores,
-                     jnp.asarray(PAD_DIST, scores.dtype))
+    return jnp.where(col < n_valid, scores, _pad_const(scores.dtype))
 
 
 _INT_MAX = jnp.int32(2**31 - 1)
@@ -104,8 +122,7 @@ def _extract_smallest_k(work: Array, col_ids: Array, k: int):
         mv = jnp.min(work, axis=-1, keepdims=True)
         cand = jnp.where(work == mv, col_ids, _INT_MAX)
         mi = jnp.min(cand, axis=-1, keepdims=True)
-        work = jnp.where(col_ids == mi, jnp.asarray(PAD_DIST, work.dtype),
-                         work)
+        work = jnp.where(col_ids == mi, _pad_const(work.dtype), work)
         zs.append(mv)
         ss.append(mi)
     return (jnp.concatenate(zs, axis=-1),
@@ -128,7 +145,7 @@ def _merge_smallest_k(zr: Array, sr: Array, zt: Array, st: Array, k: int):
         mi = jnp.min(jnp.where(is_min, sc, _INT_MAX), axis=-1, keepdims=True)
         win = jnp.min(jnp.where(is_min & (sc == mi), pos, _INT_MAX),
                       axis=-1, keepdims=True)
-        work = jnp.where(pos == win, jnp.asarray(PAD_DIST, work.dtype), work)
+        work = jnp.where(pos == win, _pad_const(work.dtype), work)
         out_z.append(mv)
         out_s.append(mi)
     return (jnp.concatenate(out_z, axis=-1),
@@ -168,9 +185,9 @@ def streaming_smallest_k(D: Array, k: int, chunk: int = 512):
     if h <= chunk:
         return smallest_k(D, k)
     nchunks = -(-h // chunk)
-    # Pad with PAD_DIST at column ids >= h: real columns win all ties.
+    # Pad with the sentinel at column ids >= h: real columns win all ties.
     Dp = jnp.pad(D, ((0, 0),) * (D.ndim - 1) + ((0, nchunks * chunk - h),),
-                 constant_values=PAD_DIST)
+                 constant_values=pad_dist_for(D.dtype))
     Dt = jnp.moveaxis(Dp.reshape(D.shape[:-1] + (nchunks, chunk)), -2, 0)
     tile_col = jax.lax.broadcasted_iota(jnp.int32, Dt.shape[1:], D.ndim - 1)
     Z0, S0 = _extract_smallest_k(Dt[0], tile_col, k)
@@ -192,7 +209,7 @@ def phase1(coords: Array, q_ids: Array, q_w: Array, k: int):
     """
     qc = coords[q_ids]                                   # (h, m)
     D = pairwise_dist(coords, qc)                        # (v, h)
-    D = jnp.where(q_w[None, :] > 0.0, D, PAD_DIST)
+    D = jnp.where(q_w[None, :] > 0.0, D, pad_dist_for(D.dtype))
     Z, S = streaming_smallest_k(D, k)                    # (v, k)
     W = q_w[S]
     return Z, W
@@ -230,39 +247,60 @@ def stack_query_bins(coords: Array, Q_ids: Array):
     return coords[uniq], inv.reshape(-1)
 
 
-def phase1_stacked_dist(coords: Array, Q_ids: Array, Q_w: Array) -> Array:
+def phase1_stacked_dist(coords: Array, Q_ids: Array, Q_w: Array,
+                        precision: str = "f32") -> Array:
     """Stacked Phase-1 distance tensor for the WHOLE query batch: one
     (v, nq*h) matmul (one MXU call instead of nq), reshaped query-major to
-    (v, nq, h). Padding query slots (weight 0) are masked to PAD_DIST so
-    they are never selected as a nearest destination (finite, so 0-mass
-    remainders still cost 0). Mesh-aware: the tensor is pinned vocabulary-
-    over-"model" / queries-over-DP (``annotate.emd_stacked_dist``; no-op
-    outside a mesh), so the same code serves the single-host batched
-    engines and the distributed step.
+    (v, nq, h). Padding query slots (weight 0) are masked to the padding
+    sentinel so they are never selected as a nearest destination (finite,
+    so 0-mass remainders still cost 0). Mesh-aware: the tensor is pinned
+    vocabulary-over-"model" / queries-over-DP
+    (``annotate.emd_stacked_dist``; no-op outside a mesh), so the same
+    code serves the single-host batched engines and the distributed step.
+
+    ``precision`` (a ``core.precision`` policy name): the matmul operands
+    run in the policy's compute dtype (f32 accumulation either way), the
+    sentinel mask is applied in float32 with the STORAGE dtype's exactly
+    representable sentinel, and the returned tensor is downcast to the
+    storage dtype — halving the handoff bytes under the bf16 policies.
+    The default leaves the float32 graph bitwise unchanged.
     """
+    policy = resolve_precision(precision)
     nq, h = Q_ids.shape
     v = coords.shape[0]
     qc, inv = stack_query_bins(coords, Q_ids)
-    D = pairwise_dist(coords, qc)                        # one stacked matmul
+    compute = None if policy.compute == "float32" else policy.compute
+    D = pairwise_dist(coords, qc, compute_dtype=compute)  # one stacked matmul
     if inv is not None:
         D = D[:, inv]                                    # re-expand dedup
     D = annotate.emd_stacked_dist(D.reshape(v, nq, h))
-    return jnp.where(Q_w[None] > 0.0, D, PAD_DIST)
+    D = jnp.where(Q_w[None] > 0.0, D, pad_dist_for(policy.storage))
+    return D.astype(policy.storage)
 
 
-def phase1_batched(coords: Array, Q_ids: Array, Q_w: Array, k: int):
+def phase1_batched(coords: Array, Q_ids: Array, Q_w: Array, k: int,
+                   precision: str = "f32"):
     """Batched Phase 1: stacked distance tensor + single-pass top-k.
 
     The per-query top-k runs on the (v, nq, h) view of the one stacked
     matmul. Returns the query-major handoff ladders Z, W of shape
     (nq, v, k), pinned to their Phase-2 layout (queries on their DP
     shards, ladders replicated — the all-gather over "model").
+
+    Selection (and its winner-masking sentinel writes) runs in the
+    policy's float32 accumulator dtype — the bf16 -> f32 upcast is exact,
+    so the selected (value, index) registers are identical to selecting
+    on the storage values — and the handoff ladders are downcast to the
+    storage dtype only after it.
     """
-    D = phase1_stacked_dist(coords, Q_ids, Q_w)
-    Z, S = streaming_smallest_k(D, k)                    # (v, nq, k)
-    Zq = annotate.emd_ladder(jnp.moveaxis(Z, 1, 0))      # (nq, v, k)
+    policy = resolve_precision(precision)
+    D = phase1_stacked_dist(coords, Q_ids, Q_w, precision=precision)
+    Z, S = streaming_smallest_k(_accum(D), k)            # (v, nq, k)
+    Zq = annotate.emd_ladder(
+        jnp.moveaxis(Z, 1, 0).astype(policy.storage))    # (nq, v, k)
     Sq = jnp.moveaxis(S, 1, 0)
-    W = annotate.emd_ladder(jax.vmap(lambda w, s: w[s])(Q_w, Sq))
+    W = annotate.emd_ladder(
+        jax.vmap(lambda w, s: w[s])(Q_w, Sq).astype(policy.storage))
     return Zq, W
 
 
@@ -280,12 +318,16 @@ def _rev_handoff(D: Array) -> Array:
     return annotate.emd_ladder(jnp.moveaxis(D, 1, 0))
 
 
-def phase1_min_batched(coords: Array, Q_ids: Array, Q_w: Array) -> Array:
+def phase1_min_batched(coords: Array, Q_ids: Array, Q_w: Array,
+                       precision: str = "f32") -> Array:
     """Masked-min Phase-1 fast path (LC-RWMD / zero Phase-2 rounds): only
     the nearest distance is ever read, so ranked (value, index) registers
     and the W capacities are skipped entirely — one stacked matmul, one
-    row-min. Returns the (nq, v) handoff on the Phase-2 layout."""
-    return _min_handoff(phase1_stacked_dist(coords, Q_ids, Q_w))
+    row-min. Returns the (nq, v) handoff on the Phase-2 layout (in the
+    policy's storage dtype — a min selects an existing value, so it is
+    safe directly on the reduced-precision tensor)."""
+    return _min_handoff(phase1_stacked_dist(coords, Q_ids, Q_w,
+                                            precision=precision))
 
 
 def pour(x: Array, Zg: Array, Wg: Array, iters: int) -> Array:
@@ -367,10 +409,11 @@ def lc_rwmd_scores_rev(corpus: Corpus, q_ids: Array, q_w: Array,
     qc = corpus.coords[q_ids]                            # (h, m)
     D = pairwise_dist(corpus.coords, qc)                 # (v, h)
     valid = corpus.w > 0.0                               # (n, hmax)
-    # PAD_DIST, not inf, matching the batched rev engines: an all-padding
-    # db row then scores huge-but-finite instead of NaN (inf * a weight-0
-    # query bin), so the scan oracle agrees with them on padded corpora.
-    big = jnp.asarray(PAD_DIST, D.dtype)
+    # The finite sentinel, not inf, matching the batched rev engines: an
+    # all-padding db row then scores huge-but-finite instead of NaN
+    # (inf * a weight-0 query bin), so the scan oracle agrees with them
+    # on padded corpora.
+    big = _pad_const(D.dtype)
 
     def one_block(ids_blk, valid_blk):
         Dg = D[ids_blk]                                  # (b, hmax, h)
@@ -444,32 +487,65 @@ def _map_query_blocks(fn, arrays, nq: int, block_q: int):
     padded = tuple(jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
                    for a in arrays)
     blocked = tuple(a.reshape((-1, block_q) + a.shape[1:]) for a in padded)
-    out = jax.lax.map(lambda args: fn(*args), blocked)
+    # Reduced-precision handoffs (a policy's bf16 storage) enter the
+    # scan BITCAST to a same-width unsigned integer and come back to
+    # their float dtype inside the body: the consumers upcast to their
+    # f32 accumulator first thing, and XLA otherwise hoists that convert
+    # out of the loop — ahead of the scan-axis resharding — so the mesh
+    # gathers full-width f32 again. A float convert cannot commute
+    # across the bitcast. Float32 inputs take the original body
+    # (bitwise-identical graphs).
+    def _fence(a):
+        if jnp.issubdtype(a.dtype, jnp.floating) and a.dtype != jnp.float32:
+            return jax.lax.bitcast_convert_type(
+                a, jnp.dtype(f"uint{a.dtype.itemsize * 8}"))
+        return a
+
+    dtypes = tuple(a.dtype for a in blocked)
+    fenced = tuple(_fence(a) for a in blocked)
+
+    def body(args):
+        return fn(*(jax.lax.bitcast_convert_type(a, dt)
+                    if a.dtype != dt else a
+                    for a, dt in zip(args, dtypes)))
+
+    out = jax.lax.map(body, fenced)
     return out.reshape((-1,) + out.shape[2:])[:nq]
 
 
 def _phase1_batched_dispatch(corpus: Corpus, Q_ids: Array, Q_w: Array,
                              k: int, use_kernels: bool, block_v: int,
-                             block_h: int, mesh=None):
+                             block_h: int, mesh=None,
+                             precision: str = "f32"):
     """Batched Phase 1 via the fused Pallas kernel or the jnp reference.
     Returns query-major Z, W of shape (nq, v, k) on the handoff layout.
     On a ``mesh`` whose axes divide (queries over DP, vocabulary over
-    "model") the kernel runs inside a ``shard_map`` partitioning shim."""
+    "model") the kernel runs inside a ``shard_map`` partitioning shim.
+    ``precision`` threads the policy's compute dtype into the kernel's
+    matmul operands and its storage dtype into the handoff ladders
+    (``out_dtype`` — the kernel's Z block buffers shrink with it)."""
     if use_kernels:
         from repro.kernels import ops as kops
+        policy = resolve_precision(precision)
+        coords, qcs = corpus.coords, corpus.coords[Q_ids]
+        if policy.compute != "float32":
+            coords = coords.astype(policy.compute)
+            qcs = qcs.astype(policy.compute)
         if mesh is not None:
             from repro.kernels import partition
             if partition.phase1_shardable(mesh, Q_ids.shape[0], corpus.v):
                 Z, W = partition.dist_topk_sharded(
-                    mesh, corpus.coords, corpus.coords[Q_ids], Q_w, k,
-                    block_v=block_v, block_h=block_h)
+                    mesh, coords, qcs, Q_w, k,
+                    block_v=block_v, block_h=block_h,
+                    out_dtype=policy.storage)
                 return annotate.emd_ladder(Z), annotate.emd_ladder(W)
-        Z, S = kops.dist_topk_batched(corpus.coords, corpus.coords[Q_ids], k,
+        Z, S = kops.dist_topk_batched(coords, qcs, k,
                                       qmask=(Q_w > 0.0), block_v=block_v,
-                                      block_h=block_h)
-        W = jax.vmap(lambda w, s: w[s])(Q_w, S)
+                                      block_h=block_h,
+                                      out_dtype=policy.storage)
+        W = jax.vmap(lambda w, s: w[s])(Q_w, S).astype(policy.storage)
         return annotate.emd_ladder(Z), annotate.emd_ladder(W)
-    return phase1_batched(corpus.coords, Q_ids, Q_w, k)
+    return phase1_batched(corpus.coords, Q_ids, Q_w, k, precision=precision)
 
 
 def pour_min_blocked(corpus: Corpus, Z0: Array, block_q: int) -> Array:
@@ -515,8 +591,11 @@ def pour_blocked(corpus: Corpus, Z: Array, W: Array, iters: int,
         return _map_query_blocks(blk_k, (Z, W), nq, block_q)
 
     def blk(Zb, Wb):
-        Zg = Zb[:, corpus.ids]                           # (bq, n, hmax, k)
-        Wg = Wb[:, corpus.ids]                           # (bq, n, hmax, iters)
+        # Gather in storage dtype (half the HBM traffic under bf16),
+        # pour in the f32 accumulator dtype (cumsum/clip never run on
+        # bf16). Both upcasts are no-ops for the default f32 policy.
+        Zg = _accum(Zb[:, corpus.ids])                   # (bq, n, hmax, k)
+        Wg = _accum(Wb[:, corpus.ids])                   # (bq, n, hmax, iters)
         return pour(x, Zg, Wg, iters)                    # (bq, n)
     return _map_query_blocks(blk, (Z, W), nq, block_q)
 
@@ -545,9 +624,12 @@ def rev_min_blocked(corpus: Corpus, Dq: Array, Q_w: Array, block: int,
     (row-block, query-block) tiles so the (nq, n, hmax, h) gather never
     materializes. Invalid slots mask to PAD_DIST (finite — all-padding
     rows score huge instead of NaN when a padded query bin's weight-0
-    product would otherwise hit inf * 0)."""
+    product would otherwise hit inf * 0). Sentinel masking and the
+    (min,+) contraction run in the f32 accumulator dtype (the gather
+    itself stays in the handoff's storage dtype)."""
     valid = corpus.w > 0.0                               # (n, hmax)
-    big = jnp.asarray(PAD_DIST, Dq.dtype)
+    acc = jnp.promote_types(Dq.dtype, jnp.float32)
+    big = _pad_const(acc)
     n = corpus.n
     pad = (-n) % block
     ids_b = jnp.pad(corpus.ids, ((0, pad), (0, 0))).reshape(-1, block,
@@ -558,7 +640,7 @@ def rev_min_blocked(corpus: Corpus, Dq: Array, Q_w: Array, block: int,
     def qblock(Db, Wb):                                  # (bq, v, h), (bq, h)
         def rblock(args):
             ids_blk, valid_blk = args
-            Dg = Db[:, ids_blk]                          # (bq, b, hmax, h)
+            Dg = _accum(Db[:, ids_blk])                  # (bq, b, hmax, h)
             Dg = jnp.where(valid_blk[None, ..., None], Dg, big)
             cmin = jnp.min(Dg, axis=2)                   # (bq, b, h)
             return jnp.einsum("qbh,qh->qb", cmin, Wb)
@@ -574,10 +656,12 @@ def rev_min_full(corpus: Corpus, Dq: Array, Q_w: Array,
     without gathering it), so the (bq, n, hmax, h) gather stays on the
     model shards and memory is bounded by the query blocks alone."""
     valid = corpus.w > 0.0
-    big = jnp.asarray(PAD_DIST, Dq.dtype)
+    acc = jnp.promote_types(Dq.dtype, jnp.float32)
+    big = _pad_const(acc)
 
     def qblock(Db, Wb):                                  # (bq, v, h), (bq, h)
-        Dg = jnp.where(valid[None, ..., None], Db[:, corpus.ids], big)
+        Dg = jnp.where(valid[None, ..., None],
+                       _accum(Db[:, corpus.ids]), big)
         cmin = jnp.min(Dg, axis=2)                       # (bq, n, h)
         return jnp.einsum("qnh,qh->qn", cmin, Wb)
     return _map_query_blocks(qblock, (Dq, Q_w), Dq.shape[0], block_q)
@@ -588,36 +672,42 @@ def rev_min_full(corpus: Corpus, Dq: Array, Q_w: Array,
 
 @functools.partial(jax.jit, static_argnames=("iters", "use_kernels",
                                              "block_q", "block_v", "block_h",
-                                             "block_n", "mesh"))
+                                             "block_n", "mesh", "precision"))
 def lc_act_scores_batched(corpus: Corpus, Q_ids: Array, Q_w: Array,
                           iters: int = 1, *, use_kernels: bool = False,
                           block_q: int = 8, block_v: int = 256,
                           block_h: int = 256, block_n: int = 256,
-                          mesh=None) -> Array:
+                          mesh=None, precision: str = "f32") -> Array:
     """Batched LC-ACT: (nq, h) query batch -> (nq, n) lower bounds
     (stage-1 ranked Phase 1 composed with the query-blocked pour).
     ``mesh`` (static, hashable) routes the kernel path through the
-    ``kernels/partition`` shard_map shims when its axes divide."""
+    ``kernels/partition`` shard_map shims when its axes divide;
+    ``precision`` (static policy name) sets the handoff storage / matmul
+    compute dtypes — reductions always accumulate in float32."""
     if iters == 0 and not use_kernels:
-        Z0 = phase1_min_batched(corpus.coords, Q_ids, Q_w)
+        Z0 = phase1_min_batched(corpus.coords, Q_ids, Q_w,
+                                precision=precision)
         return pour_min_blocked(corpus, Z0, block_q)
     Z, W = _phase1_batched_dispatch(corpus, Q_ids, Q_w, iters + 1,
-                                    use_kernels, block_v, block_h, mesh)
+                                    use_kernels, block_v, block_h, mesh,
+                                    precision=precision)
     return pour_blocked(corpus, Z, W, iters, block_q,
                         use_kernels=use_kernels, block_n=block_n,
                         block_h=block_h, mesh=mesh)
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernels", "block_q",
-                                             "block_v", "block_h", "mesh"))
+                                             "block_v", "block_h", "mesh",
+                                             "precision"))
 def lc_rwmd_scores_batched(corpus: Corpus, Q_ids: Array, Q_w: Array, *,
                            use_kernels: bool = False, block_q: int = 8,
                            block_v: int = 256, block_h: int = 256,
-                           mesh=None) -> Array:
+                           mesh=None, precision: str = "f32") -> Array:
     """Batched LC-RWMD db -> query (== batched LC-ACT with zero rounds)."""
     return lc_act_scores_batched(corpus, Q_ids, Q_w, iters=0,
                                  use_kernels=use_kernels, block_q=block_q,
-                                 block_v=block_v, block_h=block_h, mesh=mesh)
+                                 block_v=block_v, block_h=block_h, mesh=mesh,
+                                 precision=precision)
 
 
 def _rows_model_sharded() -> bool:
@@ -630,19 +720,24 @@ def _rows_model_sharded() -> bool:
     return mesh is not None and mesh.shape.get("model", 1) > 1
 
 
-@functools.partial(jax.jit, static_argnames=("block", "block_q"))
+@functools.partial(jax.jit, static_argnames=("block", "block_q",
+                                             "precision"))
 def lc_rwmd_scores_rev_batched(corpus: Corpus, Q_ids: Array, Q_w: Array,
-                               block: int = 256, block_q: int = 8) -> Array:
+                               block: int = 256, block_q: int = 8,
+                               precision: str = "f32") -> Array:
     """Batched LC-RWMD query -> db: one stacked distance tensor for the
     WHOLE batch, streamed through the (row-block, query-block) masked
     (min,+) reduction."""
-    Dq = _rev_handoff(phase1_stacked_dist(corpus.coords, Q_ids, Q_w))
+    Dq = _rev_handoff(phase1_stacked_dist(corpus.coords, Q_ids, Q_w,
+                                          precision=precision))
     return rev_min_blocked(corpus, Dq, Q_w, block, block_q)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "block_q"))
+@functools.partial(jax.jit, static_argnames=("block", "block_q",
+                                             "precision"))
 def lc_rwmd_scores_rev_dist(corpus: Corpus, Q_ids: Array, Q_w: Array, *,
-                            block: int = 256, block_q: int = 8) -> Array:
+                            block: int = 256, block_q: int = 8,
+                            precision: str = "f32") -> Array:
     """Mesh-sharded batched LC-RWMD query -> db: same stacked Phase 1, but
     when database rows are genuinely split over "model" the reduction
     keeps them on their shards (:func:`rev_min_full`) instead of scanning
@@ -650,31 +745,35 @@ def lc_rwmd_scores_rev_dist(corpus: Corpus, Q_ids: Array, Q_w: Array, *,
     onto every device. Without real model sharding (single-device default
     mesh) the full-row gather has nothing bounding it, so the row-blocked
     schedule is kept."""
-    Dq = _rev_handoff(phase1_stacked_dist(corpus.coords, Q_ids, Q_w))
+    Dq = _rev_handoff(phase1_stacked_dist(corpus.coords, Q_ids, Q_w,
+                                          precision=precision))
     if _rows_model_sharded():
         return rev_min_full(corpus, Dq, Q_w, block_q)
     return rev_min_blocked(corpus, Dq, Q_w, block, block_q)
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernels", "block_q",
-                                             "block_v", "block_h", "mesh"))
+                                             "block_v", "block_h", "mesh",
+                                             "precision"))
 def lc_omr_scores_batched(corpus: Corpus, Q_ids: Array, Q_w: Array, *,
                           use_kernels: bool = False, block_q: int = 8,
                           block_v: int = 256, block_h: int = 256,
-                          mesh=None) -> Array:
+                          mesh=None, precision: str = "f32") -> Array:
     """Batched LC-OMR: shared batched Phase 1 (top-2 per vocabulary row),
     query-blocked Algorithm-1 reduction."""
     Z, W = _phase1_batched_dispatch(corpus, Q_ids, Q_w, 2, use_kernels,
-                                    block_v, block_h, mesh)
+                                    block_v, block_h, mesh,
+                                    precision=precision)
     return omr_reduce_blocked(corpus, Z, W[..., 0], block_q)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "block_q",
-                                             "full_rows"))
+                                             "full_rows", "precision"))
 def lc_rwmd_symmetric_scores_batched(corpus: Corpus, Q_ids: Array,
                                      Q_w: Array, *, block: int = 256,
                                      block_q: int = 8,
-                                     full_rows: bool = False) -> Array:
+                                     full_rows: bool = False,
+                                     precision: str = "f32") -> Array:
     """Symmetric batched LC-RWMD: max of the two directional bounds
     sharing ONE stacked Phase-1 distance tensor — the forward masked-min
     row and the reverse (min,+) reduction both read the same (v, nq, h) D
@@ -682,7 +781,7 @@ def lc_rwmd_symmetric_scores_batched(corpus: Corpus, Q_ids: Array,
     ``full_rows`` requests the mesh-friendly reverse reduction (honored
     only when rows are really model-sharded; see
     :func:`_rows_model_sharded`)."""
-    D = phase1_stacked_dist(corpus.coords, Q_ids, Q_w)
+    D = phase1_stacked_dist(corpus.coords, Q_ids, Q_w, precision=precision)
     fwd = pour_min_blocked(corpus, _min_handoff(D), block_q)
     Dq = _rev_handoff(D)                                 # (nq, v, h)
     rev = (rev_min_full(corpus, Dq, Q_w, block_q)
@@ -730,7 +829,9 @@ def ict_pour(x: Array, cap: Array, C: Array) -> Array:
     r = jnp.clip(x[..., None] - prefix, 0.0, cap_sorted)
     poured = jnp.sum(r * cost_sorted, axis=-1)
     remainder = jnp.maximum(x - jnp.sum(r, axis=-1), 0.0)
-    dump = jnp.max(jnp.where(C < PAD_DIST, C, 0.0), axis=-1)
+    # Strict < : sentinel entries (written in any storage dtype, upcast
+    # or not) compare >= their dtype's pad value and are excluded.
+    dump = jnp.max(jnp.where(C < _pad_const(C.dtype), C, 0.0), axis=-1)
     return jnp.sum(poured + remainder * dump, axis=-1)
 
 
@@ -746,7 +847,7 @@ def lc_ict_scores(corpus: Corpus, q_ids: Array, q_w: Array) -> Array:
     EMD(x_u, q) for all n database rows, O(vhm + n hmax h log h)."""
     qc = corpus.coords[q_ids]                            # (h, m)
     D = pairwise_dist(corpus.coords, qc)                 # (v, h)
-    D = jnp.where(q_w[None, :] > 0.0, D, PAD_DIST)
+    D = jnp.where(q_w[None, :] > 0.0, D, pad_dist_for(D.dtype))
     C = D[corpus.ids]                                    # (n, hmax, h)
     return ict_pour(corpus.w, _ict_caps(q_w, C.shape), C)
 
@@ -758,18 +859,22 @@ def ict_reduce_blocked(corpus: Corpus, Dq: Array, Q_w: Array,
     ``block_q`` queries gathers its (bq, n, hmax, h) cost tensor once and
     pours through the full sorted ladder."""
     def blk(Db, Wb):                                     # (bq, v, h), (bq, h)
-        C = Db[:, corpus.ids]                            # (bq, n, hmax, h)
+        # Gather in storage dtype, sort + pour the ladder in the f32
+        # accumulator (the sort itself is exact in any dtype, but the
+        # pour's cumulative caps are not).
+        C = _accum(Db[:, corpus.ids])                    # (bq, n, hmax, h)
         cap = _ict_caps(Wb[:, None, :], C.shape)
         return ict_pour(corpus.w, cap, C)
     return _map_query_blocks(blk, (Dq, Q_w), Dq.shape[0], block_q)
 
 
-@functools.partial(jax.jit, static_argnames=("block_q",))
+@functools.partial(jax.jit, static_argnames=("block_q", "precision"))
 def lc_ict_scores_batched(corpus: Corpus, Q_ids: Array, Q_w: Array, *,
-                          block_q: int = 8) -> Array:
+                          block_q: int = 8, precision="f32") -> Array:
     """Batched LC-ICT: one stacked Phase-1 distance tensor for the whole
     query batch, query-blocked full-ladder pour."""
-    Dq = _rev_handoff(phase1_stacked_dist(corpus.coords, Q_ids, Q_w))
+    Dq = _rev_handoff(phase1_stacked_dist(corpus.coords, Q_ids, Q_w,
+                                          precision=precision))
     return ict_reduce_blocked(corpus, Dq, Q_w, block_q)
 
 
@@ -879,8 +984,10 @@ def pour_cand_blocked(corpus: Corpus, Z: Array, W: Array, cand: Array,
 
     def blk(Zb, Wb, cb):
         ids_g = corpus.ids[cb]                           # (bq, b, hmax)
-        Zg = gather_per_query(Zb, ids_g)                # (bq, b, hmax, k)
-        Wg = gather_per_query(Wb, ids_g)                # (bq, b, hmax, iters)
+        # Gather in storage dtype; pour in the f32 accumulator (its
+        # capacity cumsum must not round in bf16).
+        Zg = _accum(gather_per_query(Zb, ids_g))        # (bq, b, hmax, k)
+        Wg = _accum(gather_per_query(Wb, ids_g))        # (bq, b, hmax, iters)
         return pour(corpus.w[cb], Zg, Wg, iters)         # (bq, b)
     return _map_query_blocks(blk, (Z, W, cand), nq, block_q)
 
@@ -950,12 +1057,16 @@ def rev_min_cand_blocked(corpus: Corpus, Dq: Array, Q_w: Array,
                                      block_n=block_n, block_v=block_v)
         return _map_query_blocks(blk_k, (Dq, Q_w, cand), Dq.shape[0],
                                  block_q)
-    big = jnp.asarray(PAD_DIST, Dq.dtype)
+    # Mask + reduce in the accumulator dtype: the pad-row sentinel is
+    # written in f32 (never a reduced storage dtype) so it cannot round
+    # into the range of real costs.
+    acc = jnp.promote_types(Dq.dtype, jnp.float32)
+    big = _pad_const(acc)
 
     def blk(Db, Wb, cb):                                 # (bq, v, h), (bq, h)
         ids_g = corpus.ids[cb]                           # (bq, b, hmax)
         valid = corpus.w[cb] > 0.0
-        Dg = gather_per_query(Db, ids_g)                # (bq, b, hmax, h)
+        Dg = _accum(gather_per_query(Db, ids_g))        # (bq, b, hmax, h)
         Dg = jnp.where(valid[..., None], Dg, big)
         cmin = jnp.min(Dg, axis=2)                       # (bq, b, h)
         # multiply + last-axis reduce, NOT einsum: the dot op's
@@ -997,7 +1108,8 @@ def ict_reduce_cand_blocked(corpus: Corpus, Dq: Array, Q_w: Array,
 
     def blk(Db, Wb, cb):
         ids_g = corpus.ids[cb]
-        C = gather_per_query(Db, ids_g)                 # (bq, b, hmax, h)
+        # Gather in storage dtype; ladder pour in the f32 accumulator.
+        C = _accum(gather_per_query(Db, ids_g))         # (bq, b, hmax, h)
         cap = _ict_caps(Wb[:, None, :], C.shape)
         return ict_pour(corpus.w[cb], cap, C)
     return _map_query_blocks(blk, (Dq, Q_w, cand), Dq.shape[0], block_q)
@@ -1028,7 +1140,8 @@ def _pin_handoff(*arrays):
     return out[0] if len(arrays) == 1 else out
 
 
-_CAND_STATIC = ("use_kernels", "block_q", "block_n", "block_v", "mesh")
+_CAND_STATIC = ("use_kernels", "block_q", "block_n", "block_v", "mesh",
+                "precision")
 
 
 @functools.partial(jax.jit, static_argnames=("iters",) + _CAND_STATIC)
@@ -1036,16 +1149,17 @@ def lc_act_scores_cand(corpus: Corpus, Q_ids: Array, Q_w: Array,
                        cand: Array, iters: int = 1, *,
                        use_kernels: bool = False, block_q: int = 8,
                        block_n: int = 128, block_v: int = 256,
-                       mesh=None) -> Array:
+                       mesh=None, precision="f32") -> Array:
     """Candidate-compacted batched LC-ACT: (nq, h) queries scored against
     each query's own (b,) candidate rows -> (nq, b)."""
     kw = dict(use_kernels=use_kernels, block_n=block_n, block_v=block_v,
               mesh=mesh)
     if iters == 0:
-        Z0 = _pin_handoff(phase1_min_batched(corpus.coords, Q_ids, Q_w))
+        Z0 = _pin_handoff(phase1_min_batched(corpus.coords, Q_ids, Q_w,
+                                             precision=precision))
         return pour_min_cand_blocked(corpus, Z0, cand, block_q, **kw)
     Z, W = _pin_handoff(*phase1_batched(corpus.coords, Q_ids, Q_w,
-                                        iters + 1))
+                                        iters + 1, precision=precision))
     return pour_cand_blocked(corpus, Z, W, cand, iters, block_q, **kw)
 
 
@@ -1053,21 +1167,24 @@ def lc_act_scores_cand(corpus: Corpus, Q_ids: Array, Q_w: Array,
 def lc_rwmd_scores_cand(corpus: Corpus, Q_ids: Array, Q_w: Array,
                         cand: Array, *, use_kernels: bool = False,
                         block_q: int = 8, block_n: int = 128,
-                        block_v: int = 256, mesh=None) -> Array:
+                        block_v: int = 256, mesh=None,
+                        precision="f32") -> Array:
     """Candidate-compacted batched LC-RWMD db -> query."""
     return lc_act_scores_cand(corpus, Q_ids, Q_w, cand, iters=0,
                               use_kernels=use_kernels, block_q=block_q,
-                              block_n=block_n, block_v=block_v, mesh=mesh)
+                              block_n=block_n, block_v=block_v, mesh=mesh,
+                              precision=precision)
 
 
 @functools.partial(jax.jit, static_argnames=_CAND_STATIC)
 def lc_rwmd_scores_rev_cand(corpus: Corpus, Q_ids: Array, Q_w: Array,
                             cand: Array, *, use_kernels: bool = False,
                             block_q: int = 8, block_n: int = 128,
-                            block_v: int = 256, mesh=None) -> Array:
+                            block_v: int = 256, mesh=None,
+                            precision="f32") -> Array:
     """Candidate-compacted batched LC-RWMD query -> db."""
-    Dq = _pin_handoff(_rev_handoff(phase1_stacked_dist(corpus.coords,
-                                                       Q_ids, Q_w)))
+    Dq = _pin_handoff(_rev_handoff(phase1_stacked_dist(
+        corpus.coords, Q_ids, Q_w, precision=precision)))
     return rev_min_cand_blocked(corpus, Dq, Q_w, cand, block_q,
                                 use_kernels=use_kernels, block_n=block_n,
                                 block_v=block_v, mesh=mesh)
@@ -1077,9 +1194,11 @@ def lc_rwmd_scores_rev_cand(corpus: Corpus, Q_ids: Array, Q_w: Array,
 def lc_omr_scores_cand(corpus: Corpus, Q_ids: Array, Q_w: Array,
                        cand: Array, *, use_kernels: bool = False,
                        block_q: int = 8, block_n: int = 128,
-                       block_v: int = 256, mesh=None) -> Array:
+                       block_v: int = 256, mesh=None,
+                       precision="f32") -> Array:
     """Candidate-compacted batched LC-OMR."""
-    Z, W = _pin_handoff(*phase1_batched(corpus.coords, Q_ids, Q_w, 2))
+    Z, W = _pin_handoff(*phase1_batched(corpus.coords, Q_ids, Q_w, 2,
+                                        precision=precision))
     return omr_reduce_cand_blocked(corpus, Z, W[..., 0], cand, block_q,
                                    use_kernels=use_kernels, block_n=block_n,
                                    block_v=block_v, mesh=mesh)
@@ -1089,10 +1208,11 @@ def lc_omr_scores_cand(corpus: Corpus, Q_ids: Array, Q_w: Array,
 def lc_ict_scores_cand(corpus: Corpus, Q_ids: Array, Q_w: Array,
                        cand: Array, *, use_kernels: bool = False,
                        block_q: int = 8, block_n: int = 128,
-                       block_v: int = 256, mesh=None) -> Array:
+                       block_v: int = 256, mesh=None,
+                       precision="f32") -> Array:
     """Candidate-compacted batched LC-ICT (the cascade's tight rescorer)."""
-    Dq = _pin_handoff(_rev_handoff(phase1_stacked_dist(corpus.coords,
-                                                       Q_ids, Q_w)))
+    Dq = _pin_handoff(_rev_handoff(phase1_stacked_dist(
+        corpus.coords, Q_ids, Q_w, precision=precision)))
     return ict_reduce_cand_blocked(corpus, Dq, Q_w, cand, block_q,
                                    use_kernels=use_kernels, block_n=block_n,
                                    block_v=block_v, mesh=mesh)

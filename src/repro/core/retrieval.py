@@ -171,11 +171,12 @@ def _rwmd(corpus, q_ids, q_w, *, use_kernels=False, block_v=256,
 
 @_register_batch("rwmd")
 def _rwmd_batch(corpus, q_ids, q_w, *, use_kernels=False, block_v=256,
-                block_h=256, block_q=8, mesh=None, **_):
+                block_h=256, block_q=8, mesh=None, precision="f32", **_):
     return lc.lc_rwmd_scores_batched(corpus, q_ids, q_w,
                                      use_kernels=use_kernels,
                                      block_q=block_q, block_v=block_v,
-                                     block_h=block_h, mesh=mesh)
+                                     block_h=block_h, mesh=mesh,
+                                     precision=precision)
 
 
 @_register("rwmd_rev", paper_name="LC-RWMD (query -> db)", reverse="rwmd")
@@ -184,44 +185,50 @@ def _rwmd_rev(corpus, q_ids, q_w, *, rev_block=256, **_):
 
 
 @_register_batch("rwmd_rev")
-def _rwmd_rev_batch(corpus, q_ids, q_w, *, rev_block=256, block_q=8, **_):
+def _rwmd_rev_batch(corpus, q_ids, q_w, *, rev_block=256, block_q=8,
+                    precision="f32", **_):
     return lc.lc_rwmd_scores_rev_batched(corpus, q_ids, q_w, block=rev_block,
-                                         block_q=block_q)
+                                         block_q=block_q,
+                                         precision=precision)
 
 
 @_register_dist("rwmd_rev")
-def _rwmd_rev_dist(corpus, q_ids, q_w, *, rev_block=256, block_q=8, **_):
+def _rwmd_rev_dist(corpus, q_ids, q_w, *, rev_block=256, block_q=8,
+                   precision="f32", **_):
     return lc.lc_rwmd_scores_rev_dist(corpus, q_ids, q_w, block=rev_block,
-                                      block_q=block_q)
+                                      block_q=block_q, precision=precision)
 
 
 @_register_cand("rwmd")
 def _rwmd_cand(corpus, q_ids, q_w, cand, *, block_q=8, use_kernels=False,
-               block_n=256, block_v=256, mesh=None, **_):
+               block_n=256, block_v=256, mesh=None, precision="f32", **_):
     return lc.lc_rwmd_scores_cand(corpus, q_ids, q_w, cand, block_q=block_q,
                                   use_kernels=use_kernels, block_n=block_n,
-                                  block_v=block_v, mesh=mesh)
+                                  block_v=block_v, mesh=mesh,
+                                  precision=precision)
 
 
 @_register_cand("rwmd_rev")
 def _rwmd_rev_cand(corpus, q_ids, q_w, cand, *, block_q=8, use_kernels=False,
-                   block_n=256, block_v=256, mesh=None, **_):
+                   block_n=256, block_v=256, mesh=None, precision="f32",
+                   **_):
     return lc.lc_rwmd_scores_rev_cand(corpus, q_ids, q_w, cand,
                                       block_q=block_q,
                                       use_kernels=use_kernels,
                                       block_n=block_n, block_v=block_v,
-                                      mesh=mesh)
+                                      mesh=mesh, precision=precision)
 
 
 @_register_symmetric_batch("rwmd", "rwmd_rev")
 def _rwmd_symmetric_batch(corpus, q_ids, q_w, *, rev_block=256, block_q=8,
-                          dist=False, **_):
+                          dist=False, precision="f32", **_):
     # ``dist`` is passed by batch_scores(engine="dist") only: it selects
     # the mesh-friendly full-row reverse reduction.
     return lc.lc_rwmd_symmetric_scores_batched(corpus, q_ids, q_w,
                                                block=rev_block,
                                                block_q=block_q,
-                                               full_rows=dist)
+                                               full_rows=dist,
+                                               precision=precision)
 
 
 @_register("omr", paper_name="LC-OMR", supports_kernels=True)
@@ -233,19 +240,20 @@ def _omr(corpus, q_ids, q_w, *, use_kernels=False, block_v=256,
 
 @_register_batch("omr")
 def _omr_batch(corpus, q_ids, q_w, *, use_kernels=False, block_v=256,
-               block_h=256, block_q=8, mesh=None, **_):
+               block_h=256, block_q=8, mesh=None, precision="f32", **_):
     return lc.lc_omr_scores_batched(corpus, q_ids, q_w,
                                     use_kernels=use_kernels, block_q=block_q,
                                     block_v=block_v, block_h=block_h,
-                                    mesh=mesh)
+                                    mesh=mesh, precision=precision)
 
 
 @_register_cand("omr")
 def _omr_cand(corpus, q_ids, q_w, cand, *, block_q=8, use_kernels=False,
-              block_n=256, block_v=256, mesh=None, **_):
+              block_n=256, block_v=256, mesh=None, precision="f32", **_):
     return lc.lc_omr_scores_cand(corpus, q_ids, q_w, cand, block_q=block_q,
                                  use_kernels=use_kernels, block_n=block_n,
-                                 block_v=block_v, mesh=mesh)
+                                 block_v=block_v, mesh=mesh,
+                                 precision=precision)
 
 
 @_register("act", paper_name="LC-ACT-k", uses_iters=True,
@@ -260,19 +268,22 @@ def _act(corpus, q_ids, q_w, *, iters=1, use_kernels=False, block_v=256,
 @_register_batch("act")
 def _act_batch(corpus, q_ids, q_w, *, iters=1, use_kernels=False,
                block_v=256, block_h=256, block_n=256, block_q=8, mesh=None,
-               **_):
+               precision="f32", **_):
     return lc.lc_act_scores_batched(corpus, q_ids, q_w, iters=iters,
                                     use_kernels=use_kernels, block_q=block_q,
                                     block_v=block_v, block_h=block_h,
-                                    block_n=block_n, mesh=mesh)
+                                    block_n=block_n, mesh=mesh,
+                                    precision=precision)
 
 
 @_register_cand("act")
 def _act_cand(corpus, q_ids, q_w, cand, *, iters=1, block_q=8,
-              use_kernels=False, block_n=256, block_v=256, mesh=None, **_):
+              use_kernels=False, block_n=256, block_v=256, mesh=None,
+              precision="f32", **_):
     return lc.lc_act_scores_cand(corpus, q_ids, q_w, cand, iters=iters,
                                  block_q=block_q, use_kernels=use_kernels,
-                                 block_n=block_n, block_v=block_v, mesh=mesh)
+                                 block_n=block_n, block_v=block_v, mesh=mesh,
+                                 precision=precision)
 
 
 @_register("ict", paper_name="LC-ICT (db -> query)")
@@ -285,16 +296,18 @@ def _ict(corpus, q_ids, q_w, **_):
 
 
 @_register_batch("ict")
-def _ict_batch(corpus, q_ids, q_w, *, block_q=8, **_):
-    return lc.lc_ict_scores_batched(corpus, q_ids, q_w, block_q=block_q)
+def _ict_batch(corpus, q_ids, q_w, *, block_q=8, precision="f32", **_):
+    return lc.lc_ict_scores_batched(corpus, q_ids, q_w, block_q=block_q,
+                                    precision=precision)
 
 
 @_register_cand("ict")
 def _ict_cand(corpus, q_ids, q_w, cand, *, block_q=8, use_kernels=False,
-              block_n=256, block_v=256, mesh=None, **_):
+              block_n=256, block_v=256, mesh=None, precision="f32", **_):
     return lc.lc_ict_scores_cand(corpus, q_ids, q_w, cand, block_q=block_q,
                                  use_kernels=use_kernels, block_n=block_n,
-                                 block_v=block_v, mesh=mesh)
+                                 block_v=block_v, mesh=mesh,
+                                 precision=precision)
 
 
 @_register("bow", paper_name="BoW cosine baseline", symmetric=True)
@@ -364,7 +377,7 @@ def _wcd_cand(corpus, q_ids, q_w, cand, **_):
 
 
 _STATIC_KW = ("method", "iters", "use_kernels", "block_v", "block_h",
-              "block_n", "rev_block", "block_q")
+              "block_n", "rev_block", "block_q", "precision")
 
 
 @functools.partial(jax.jit,
@@ -373,12 +386,17 @@ def query_scores(corpus: lc.Corpus, q_ids: Array, q_w: Array, *,
                  method: str = "act", symmetric: bool = False,
                  iters: int = 1, use_kernels: bool = False,
                  block_v: int = 256, block_h: int = 256, block_n: int = 256,
-                 rev_block: int = 256, block_q: int = 8) -> Array:
+                 rev_block: int = 256, block_q: int = 8,
+                 precision: str = "f32") -> Array:
     """One query against the whole database, jitted end-to-end.
 
     ``symmetric=True`` returns the paper's symmetric measure for a single
     query: the max of the two directional bounds (requires a method with a
     registered ``reverse``, i.e. rwmd / rwmd_rev).
+
+    ``precision`` is accepted for kwarg parity with :func:`batch_scores`,
+    but the single-query engines are the full-precision parity oracle —
+    they always run float32, so it has no effect here.
     """
     spec = METHODS[method]
     kw = dict(iters=iters, use_kernels=use_kernels, block_v=block_v,
@@ -401,7 +419,8 @@ def batch_scores(corpus: lc.Corpus, q_ids: Array, q_w: Array, *,
                  engine: str = "batched", iters: int = 1,
                  use_kernels: bool = False, block_v: int = 256,
                  block_h: int = 256, block_n: int = 256,
-                 rev_block: int = 256, block_q: int = 8, mesh=None) -> Array:
+                 rev_block: int = 256, block_q: int = 8, mesh=None,
+                 precision: str = "f32") -> Array:
     """Batch of queries ``(nq, h)`` -> ``(nq, n)`` score matrix.
 
     ``engine="batched"`` (default) dispatches to the method's multi-query
@@ -431,7 +450,7 @@ def batch_scores(corpus: lc.Corpus, q_ids: Array, q_w: Array, *,
                 else s.batch_fn
         kw = dict(iters=iters, use_kernels=use_kernels, block_v=block_v,
                   block_h=block_h, block_n=block_n, rev_block=rev_block,
-                  block_q=block_q, mesh=mesh)
+                  block_q=block_q, mesh=mesh, precision=precision)
         if symmetric and not spec.symmetric:
             if spec.reverse is None:
                 raise ValueError(
@@ -468,7 +487,8 @@ def batch_scores(corpus: lc.Corpus, q_ids: Array, q_w: Array, *,
 def search(corpus: lc.Corpus, q_ids: Array, q_w: Array, top_l: int,
            method: str = "act", iters: int = 1, *, symmetric: bool = False,
            use_kernels: bool = False, block_v: int = 256, block_h: int = 256,
-           block_n: int = 256, rev_block: int = 256, block_q: int = 8):
+           block_n: int = 256, rev_block: int = 256, block_q: int = 8,
+           precision: str = "f32"):
     """Return (scores, indices) of the top-l most similar database rows.
 
     Jitted end-to-end (method dispatch is static), so scoring + top-k
@@ -489,7 +509,7 @@ def all_pairs_scores(corpus: lc.Corpus, method: str = "act",
                      use_kernels: bool = False,
                      block_v: int = 256, block_h: int = 256,
                      block_n: int = 256, rev_block: int = 256,
-                     block_q: int = 8) -> Array:
+                     block_q: int = 8, precision: str = "f32") -> Array:
     """n x n symmetric bound matrix over the corpus (paper's eval mode).
 
     asym[a, b] = directional bound of moving histogram b INTO histogram a
@@ -502,7 +522,8 @@ def all_pairs_scores(corpus: lc.Corpus, method: str = "act",
     asym = batch_scores(corpus, corpus.ids, corpus.w, method=method,
                         engine=engine, iters=iters, use_kernels=use_kernels,
                         block_v=block_v, block_h=block_h, block_n=block_n,
-                        rev_block=rev_block, block_q=block_q)
+                        rev_block=rev_block, block_q=block_q,
+                        precision=precision)
     if spec.symmetric:
         return asym
     return lc.symmetric_scores(asym)
@@ -514,7 +535,8 @@ def cand_scores(corpus: lc.Corpus, q_ids: Array, q_w: Array, cand: Array, *,
                 method: str = "act", iters: int = 1,
                 use_kernels: bool = False, block_v: int = 256,
                 block_h: int = 256, block_n: int = 256,
-                rev_block: int = 256, block_q: int = 8, mesh=None) -> Array:
+                rev_block: int = 256, block_q: int = 8, mesh=None,
+                precision: str = "f32") -> Array:
     """Candidate-compacted scoring: ``(nq, h)`` queries against each
     query's own ``(b,)`` candidate rows -> ``(nq, b)`` scores.
 
@@ -533,14 +555,25 @@ def cand_scores(corpus: lc.Corpus, q_ids: Array, q_w: Array, cand: Array, *,
     return spec.cand_fn(corpus, q_ids, q_w, cand, iters=iters,
                         use_kernels=use_kernels, block_v=block_v,
                         block_h=block_h, block_n=block_n,
-                        rev_block=rev_block, block_q=block_q, mesh=mesh)
+                        rev_block=rev_block, block_q=block_q, mesh=mesh,
+                        precision=precision)
 
 
 def _mask_self(scores: Array) -> Array:
     """Push the diagonal of a square corpus-as-queries score matrix to the
-    dtype max so a row never retrieves itself."""
+    dtype max so a row never retrieves itself.
+
+    The mask is written in the float32 ACCUMULATOR dtype, never a reduced
+    storage dtype: ``finfo(bfloat16).max`` is also what bf16 overflow
+    saturates to, so masking in-dtype would tie the diagonal with any
+    saturated entry and let ``top_k``'s index order pick between self and
+    a real row. Upcasting first (exact for bf16/f16) keeps the sentinel
+    strictly above every finite score; float32 inputs pass through
+    bit-unchanged."""
     n = scores.shape[0]
-    big = jnp.asarray(jnp.finfo(scores.dtype).max, scores.dtype)
+    acc = jnp.promote_types(scores.dtype, jnp.float32)
+    scores = scores.astype(acc)
+    big = jnp.asarray(jnp.finfo(acc).max, acc)
     return jnp.where(jnp.eye(n, dtype=bool), big, scores)
 
 

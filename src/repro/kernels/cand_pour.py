@@ -45,7 +45,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.lc import PAD_DIST, ict_pour, pour
+from repro.core.lc import ict_pour, pour
+from repro.core.precision import pad_dist_for
 
 #: Modes whose ladder table stacks Z|W columns (Phase-1 ranked handoff).
 POUR_MODES = ("pour", "omr")
@@ -69,7 +70,10 @@ def _gather_rows(flat_ids, table, block_v: int):
     def chunk(u, acc):
         blk = jax.lax.dynamic_slice_in_dim(table, u * block_v, block_v, 0)
         col = jax.lax.broadcasted_iota(jnp.int32, (r, block_v), 1)
-        onehot = (flat_ids[:, None] - u * block_v == col).astype(jnp.float32)
+        # One-hot in the TABLE's dtype (0/1 are exact in any float dtype)
+        # so a bf16 storage table contracts without an f32 upcast copy;
+        # the MXU still accumulates into float32.
+        onehot = (flat_ids[:, None] - u * block_v == col).astype(blk.dtype)
         return acc + jax.lax.dot_general(
             onehot, blk, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
@@ -123,8 +127,9 @@ def _cand_dist_kernel(idsg_ref, xg_ref, dq_ref, qw_ref, t_ref, acc_ref, *,
     block_v = blk.shape[0]
     r = bb * hmax
     col = jax.lax.broadcasted_iota(jnp.int32, (r, block_v), 1)
+    # One-hot in the slab's dtype (see _gather_rows); f32 accumulation.
     onehot = (ids.reshape(-1)[:, None] - u * block_v == col
-              ).astype(jnp.float32)
+              ).astype(blk.dtype)
     contrib = jax.lax.dot_general(onehot, blk, (((1,), (0,)), ((), ())),
                                   preferred_element_type=jnp.float32)
 
@@ -142,7 +147,10 @@ def _cand_dist_kernel(idsg_ref, xg_ref, dq_ref, qw_ref, t_ref, acc_ref, *,
         C = acc_ref[...].reshape(bb, hmax, qw.shape[0])
         x = xg_ref[0].astype(jnp.float32)
         if mode == "rev_min":
-            big = jnp.asarray(PAD_DIST, C.dtype)
+            # C is the f32 gather accumulator; reduced-precision dq
+            # sentinels upcast to >= the f32 pad, so masking here in the
+            # accumulator dtype keeps every sentinel comparison strict.
+            big = jnp.asarray(pad_dist_for(C.dtype), C.dtype)
             Dg = jnp.where((x > 0.0)[..., None], C, big)
             cmin = jnp.min(Dg, axis=1)                   # (bb, h)
             # multiply + reduce, matching lc.rev_min_cand_blocked

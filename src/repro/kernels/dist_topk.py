@@ -23,30 +23,38 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.precision import pad_dist_for
+
 BIG = 1e30  # plain float: jnp scalars would be captured consts in the kernel
 
 
-def _rowmin_extract(d, col_ids):
+def _rowmin_extract(d, col_ids, big=BIG):
     """One selection round: per-row (min value, argmin col id), then mask.
 
     d: (bv, bh) working distances; col_ids: (bv, bh) global column ids.
-    Returns (minval (bv,1), minidx (bv,1), d with the winner masked to BIG).
+    Returns (minval (bv,1), minidx (bv,1), d with the winner masked to
+    ``big``).
     """
     minval = jnp.min(d, axis=1, keepdims=True)                    # (bv, 1)
     is_min = d == minval
     # Lowest column id among ties — matches lax.top_k tie-breaking.
     idx_cand = jnp.where(is_min, col_ids, jnp.int32(2**31 - 1))
     minidx = jnp.min(idx_cand, axis=1, keepdims=True)             # (bv, 1)
-    d = jnp.where(col_ids == minidx, BIG, d)
+    d = jnp.where(col_ids == minidx, big, d)
     return minval, minidx, d
 
 
 def _dist_topk_kernel(v_ref, q_ref, qmask_ref, z_ref, s_ref, *, k: int,
-                      block_h: int):
+                      block_h: int, out_dtype):
     """Grid = (nq, v_blocks, h_blocks); the query batch is the outermost
     (parallel) axis, h the innermost sequential merge axis. Each (q, i)
     output block carries its running (Z, S) across the h sweep."""
     j = pl.program_id(2)
+    # Sentinel exactly representable in the OUTPUT dtype: masked entries
+    # survive the f32 -> out_dtype store bit-exactly, so downstream strict
+    # ``< pad`` comparisons still exclude them (pad_dist_for(float32) is
+    # bitwise the historical BIG). All selection work stays float32.
+    big = pad_dist_for(out_dtype)
 
     vt = v_ref[...].astype(jnp.float32)                           # (bv, m)
     qt = q_ref[0].astype(jnp.float32)                             # (bh, m)
@@ -60,7 +68,7 @@ def _dist_topk_kernel(v_ref, q_ref, qmask_ref, z_ref, s_ref, *, k: int,
     d = jnp.where(d < 1e-6 * (v2 + q2), 0.0, d)
     d = jnp.sqrt(d)
     # Invalid columns (padding / zero-weight query bins) never win.
-    d = jnp.where(qmask_ref[0] > 0, d, BIG)                       # (1, bh) bcast
+    d = jnp.where(qmask_ref[0] > 0, d, big)                       # (1, bh) bcast
 
     bv = d.shape[0]
     col0 = j * block_h
@@ -69,7 +77,7 @@ def _dist_topk_kernel(v_ref, q_ref, qmask_ref, z_ref, s_ref, *, k: int,
     # Tile-local top-k via k min-extraction rounds.
     zs, ss = [], []
     for _ in range(k):
-        mv, mi, d = _rowmin_extract(d, col_ids)
+        mv, mi, d = _rowmin_extract(d, col_ids, big)
         zs.append(mv)
         ss.append(mi)
     z_tile = jnp.concatenate(zs, axis=1)                          # (bv, k)
@@ -77,13 +85,16 @@ def _dist_topk_kernel(v_ref, q_ref, qmask_ref, z_ref, s_ref, *, k: int,
 
     @pl.when(j == 0)
     def _init():
-        z_ref[...] = z_tile[None]
+        z_ref[...] = z_tile[None].astype(out_dtype)
         s_ref[...] = s_tile[None]
 
     @pl.when(j > 0)
     def _merge():
-        # Merge running (k) with tile (k): k extraction rounds over 2k cands.
-        zc = jnp.concatenate([z_ref[0], z_tile], axis=1)          # (bv, 2k)
+        # Merge running (k) with tile (k): k extraction rounds over 2k
+        # cands. The running Z re-enters the f32 accumulator first —
+        # winner masking never happens in the storage dtype.
+        zc = jnp.concatenate([z_ref[0].astype(jnp.float32), z_tile],
+                             axis=1)                              # (bv, 2k)
         sc = jnp.concatenate([s_ref[0], s_tile], axis=1)
         out_z, out_s = [], []
         work = zc
@@ -97,18 +108,19 @@ def _dist_topk_kernel(v_ref, q_ref, qmask_ref, z_ref, s_ref, *, k: int,
             win_pos = jnp.min(jnp.where(is_min & (sc == mi), pos,
                                         jnp.int32(2**31 - 1)),
                               axis=1, keepdims=True)
-            work = jnp.where(pos == win_pos, BIG, work)
+            work = jnp.where(pos == win_pos, big, work)
             out_z.append(mv)
             out_s.append(mi)
-        z_ref[...] = jnp.concatenate(out_z, axis=1)[None]
+        z_ref[...] = jnp.concatenate(out_z, axis=1)[None].astype(out_dtype)
         s_ref[...] = jnp.concatenate(out_s, axis=1)[None]
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("k", "block_v", "block_h", "interpret"))
+                   static_argnames=("k", "block_v", "block_h", "interpret",
+                                    "out_dtype"))
 def dist_topk_pallas(coords: jax.Array, qc: jax.Array, qmask: jax.Array,
                      k: int, *, block_v: int = 256, block_h: int = 256,
-                     interpret: bool = False):
+                     interpret: bool = False, out_dtype: str = "float32"):
     """Fused Euclidean distance + row-top-k over a query batch.
 
     Args:
@@ -116,15 +128,20 @@ def dist_topk_pallas(coords: jax.Array, qc: jax.Array, qmask: jax.Array,
       qc:     (nq, h, m) query-bin embedding vectors.
       qmask:  (nq, 1, h) 1.0 for valid query bins, 0.0 for padding.
       k:      number of smallest distances to keep per vocabulary row.
+      out_dtype: storage dtype of Z (a precision policy's storage role);
+        selection always runs in float32 with a sentinel representable in
+        ``out_dtype`` (see ``_dist_topk_kernel``).
     Returns:
-      Z: (nq, v, k) ascending distances; S: (nq, v, k) int32 bin indices.
+      Z: (nq, v, k) ascending distances in ``out_dtype``;
+      S: (nq, v, k) int32 bin indices.
     Caller guarantees v % block_v == 0 and h % block_h == 0 (see ops.py).
     """
     v, m = coords.shape
     nq, h, _ = qc.shape
     assert v % block_v == 0 and h % block_h == 0, (v, h, block_v, block_h)
     grid = (nq, v // block_v, h // block_h)
-    kernel = functools.partial(_dist_topk_kernel, k=k, block_h=block_h)
+    kernel = functools.partial(_dist_topk_kernel, k=k, block_h=block_h,
+                               out_dtype=jnp.dtype(out_dtype))
     z, s = pl.pallas_call(
         kernel,
         grid=grid,
@@ -138,7 +155,7 @@ def dist_topk_pallas(coords: jax.Array, qc: jax.Array, qmask: jax.Array,
             pl.BlockSpec((1, block_v, k), lambda q, i, j: (q, i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((nq, v, k), jnp.float32),
+            jax.ShapeDtypeStruct((nq, v, k), jnp.dtype(out_dtype)),
             jax.ShapeDtypeStruct((nq, v, k), jnp.int32),
         ],
         interpret=interpret,

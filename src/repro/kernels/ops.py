@@ -38,15 +38,19 @@ def _round_up(x: int, b: int) -> int:
     return -(-x // b) * b
 
 
-@functools.partial(jax.jit, static_argnames=("k", "block_v", "block_h"))
+@functools.partial(jax.jit, static_argnames=("k", "block_v", "block_h",
+                                             "out_dtype"))
 def dist_topk_batched(coords: jax.Array, qcs: jax.Array, k: int, *,
                       qmask: jax.Array | None = None,
-                      block_v: int = 256, block_h: int = 256):
+                      block_v: int = 256, block_h: int = 256,
+                      out_dtype: str = "float32"):
     """Fused distance + row-top-k for a query batch in one kernel launch.
 
     coords (v, m), qcs (nq, h, m) -> Z, S (nq, v, k).
     ``qmask``: optional (nq, h) validity mask (1 = real query bin);
     padding columns added here for blocking are always masked out.
+    ``out_dtype``: storage dtype of the Z ladder (a precision policy's
+    storage role); selection always runs in float32 inside the kernel.
     """
     v, m = coords.shape
     nq, h, _ = qcs.shape
@@ -60,14 +64,17 @@ def dist_topk_batched(coords: jax.Array, qcs: jax.Array, k: int, *,
     coords_p = jnp.pad(coords, ((0, vp - v), (0, 0)))
     qcs_p = jnp.pad(qcs, ((0, 0), (0, hp - h), (0, 0)))
     z, s = dist_topk_pallas(coords_p, qcs_p, mask, k, block_v=block_v,
-                            block_h=block_h, interpret=_interpret_default())
+                            block_h=block_h, interpret=_interpret_default(),
+                            out_dtype=out_dtype)
     return z[:, :v], s[:, :v]
 
 
-@functools.partial(jax.jit, static_argnames=("k", "block_v", "block_h"))
+@functools.partial(jax.jit, static_argnames=("k", "block_v", "block_h",
+                                             "out_dtype"))
 def dist_topk(coords: jax.Array, qc: jax.Array, k: int, *,
               qmask: jax.Array | None = None,
-              block_v: int = 256, block_h: int = 256):
+              block_v: int = 256, block_h: int = 256,
+              out_dtype: str = "float32"):
     """Fused distance + row-top-k. coords (v, m), qc (h, m) -> Z, S (v, k).
 
     Single-query view of ``dist_topk_batched`` (query-batch grid of 1).
@@ -75,7 +82,8 @@ def dist_topk(coords: jax.Array, qc: jax.Array, k: int, *,
     """
     z, s = dist_topk_batched(coords, qc[None], k,
                              qmask=None if qmask is None else qmask[None],
-                             block_v=block_v, block_h=block_h)
+                             block_v=block_v, block_h=block_h,
+                             out_dtype=out_dtype)
     return z[0], s[0]
 
 
@@ -304,7 +312,8 @@ def _positive(**dims) -> None:
 
 
 def _dist_topk_layout(*, nq: int, v: int, h: int, m: int, k: int,
-                      block_v: int = 256, block_h: int = 256) -> KernelBlocks:
+                      block_v: int = 256, block_h: int = 256,
+                      dtype: str = "float32") -> KernelBlocks:
     _positive(nq=nq, v=v, h=h, m=m, k=k, block_v=block_v, block_h=block_h)
     block_v = min(block_v, _round_up(v, 8))
     block_h = min(block_h, _round_up(h, 8))
@@ -316,7 +325,9 @@ def _dist_topk_layout(*, nq: int, v: int, h: int, m: int, k: int,
             BlockBuffer("coords", (block_v, m)),
             BlockBuffer("qcs", (1, block_h, m)),
             BlockBuffer("qmask", (1, 1, block_h)),
-            BlockBuffer("z", (1, block_v, k), role="out"),
+            # z is the Z-ladder STORAGE block (``dtype`` = the precision
+            # policy's storage role — the axis that shrinks under bf16)
+            BlockBuffer("z", (1, block_v, k), dtype, "out"),
             BlockBuffer("s", (1, block_v, k), "int32", "out"),
             # the (bv, bh) distance tile + its global column ids — the
             # body's working set that never leaves VMEM
@@ -327,7 +338,8 @@ def _dist_topk_layout(*, nq: int, v: int, h: int, m: int, k: int,
 
 def _act_phase2_layout(*, nq: int, n: int, h: int, iters: int,
                        block_n: int = 256, block_h: int = 256,
-                       per_query_x: bool = False) -> KernelBlocks:
+                       per_query_x: bool = False,
+                       dtype: str = "float32") -> KernelBlocks:
     _positive(nq=nq, n=n, h=h, block_n=block_n, block_h=block_h)
     if iters < 0:
         raise ValueError(f"iters must be >= 0, got {iters}")
@@ -340,8 +352,10 @@ def _act_phase2_layout(*, nq: int, n: int, h: int, iters: int,
         grid=(nq, np_ // block_n, hp // block_h),
         buffers=(
             BlockBuffer("x", x_shape),
-            BlockBuffer("zg", (1, block_n, block_h, iters + 1)),
-            BlockBuffer("wg", (1, block_n, block_h, iters)),
+            # the gathered Phase-1 ladders ride in storage dtype; the
+            # pour itself upcasts slice-by-slice to float32 scratch
+            BlockBuffer("zg", (1, block_n, block_h, iters + 1), dtype),
+            BlockBuffer("wg", (1, block_n, block_h, iters), dtype),
             BlockBuffer("t", (1, block_n, 1), role="out"),
             # pour temporaries: acc / prefix / poured / r, each (bn, bh)
             BlockBuffer("pour_tmp", (4, block_n, block_h), role="scratch"),
@@ -356,7 +370,8 @@ def _cand_table_width(mode: str, k: int, iters: int) -> int:
 
 def _cand_pour_layout(*, nq: int, b: int, h: int, v: int, k: int,
                       iters: int, mode: str = "pour", block_n: int = 128,
-                      block_v: int = 256) -> KernelBlocks:
+                      block_v: int = 256,
+                      dtype: str = "float32") -> KernelBlocks:
     from repro.kernels.cand_pour import POUR_MODES
     assert mode in POUR_MODES, mode
     _positive(nq=nq, b=b, h=h, v=v, k=k, block_n=block_n, block_v=block_v)
@@ -372,17 +387,21 @@ def _cand_pour_layout(*, nq: int, b: int, h: int, v: int, k: int,
             BlockBuffer("idsg", (1, block_n, h), "int32"),
             BlockBuffer("xg", (1, block_n, h)),
             # the query's FULL padded Phase-1 ladder rides in every cell
-            BlockBuffer("table", (1, vp, width)),
+            # in storage dtype — the dominant slab bf16 halves
+            BlockBuffer("table", (1, vp, width), dtype),
             BlockBuffer("t", (1, block_n), role="out"),
-            BlockBuffer("onehot", (r, block_v), role="scratch"),
+            # the one-hot gather matmul runs in the table's dtype (0/1
+            # are exact in any float dtype); accumulation is f32
+            BlockBuffer("onehot", (r, block_v), dtype, "scratch"),
             BlockBuffer("gathered", (r, width), role="scratch"),
-            BlockBuffer("chunk", (block_v, width), role="scratch"),
+            BlockBuffer("chunk", (block_v, width), dtype, "scratch"),
         ))
 
 
 def _cand_dist_layout(*, nq: int, b: int, h: int, v: int, qh: int,
                       mode: str = "rev_min", block_n: int = 128,
-                      block_v: int = 256) -> KernelBlocks:
+                      block_v: int = 256,
+                      dtype: str = "float32") -> KernelBlocks:
     from repro.kernels.cand_pour import DIST_MODES
     assert mode in DIST_MODES, mode
     _positive(nq=nq, b=b, h=h, v=v, qh=qh, block_n=block_n, block_v=block_v)
@@ -391,7 +410,7 @@ def _cand_dist_layout(*, nq: int, b: int, h: int, v: int, qh: int,
     bp, vp = _round_up(b, block_n), _round_up(v, block_v)
     r = block_n * h
     scratch = [
-        BlockBuffer("onehot", (r, block_v), role="scratch"),
+        BlockBuffer("onehot", (r, block_v), dtype, "scratch"),
         # the running gather accumulator: persists across the streamed
         # vocabulary slabs, holds the completed (r, qh) cost tensor on
         # the last one
@@ -409,8 +428,9 @@ def _cand_dist_layout(*, nq: int, b: int, h: int, v: int, qh: int,
             BlockBuffer("idsg", (1, block_n, h), "int32"),
             BlockBuffer("xg", (1, block_n, h)),
             # one streamed slab per grid step — NOT the full (vp, qh)
-            # handoff; this is what fits cand_dist at 20News dims
-            BlockBuffer("dq", (1, block_v, qh)),
+            # handoff; this is what fits cand_dist at 20News dims.
+            # Rides in storage dtype; the gather accumulates into f32.
+            BlockBuffer("dq", (1, block_v, qh), dtype),
             BlockBuffer("qw", (1, qh)),
             BlockBuffer("t", (1, block_n), role="out"),
             *scratch,

@@ -96,15 +96,18 @@ def rows_shardable(mesh, nq: int, n: int) -> bool:
 
 
 def dist_topk_sharded(mesh, coords, qcs, Q_w, k: int, *,
-                      block_v: int = 256, block_h: int = 256):
+                      block_v: int = 256, block_h: int = 256,
+                      out_dtype: str = "float32"):
     """Phase-1 kernel on the mesh: coords (v, m) sharded over "model",
     qcs (nq, h, m) / Q_w (nq, h) over DP -> Z, W each (nq, v, k) on the
-    (DP, "model") grid. Caller re-pins to the emd_ladder layout."""
+    (DP, "model") grid, in ``out_dtype`` (a precision policy's storage
+    role — this is the handoff whose replication all-gather the policy
+    halves). Caller re-pins to the emd_ladder layout."""
     def body(coords_l, qcs_l, qw_l):
         Z, S = kops.dist_topk_batched(coords_l, qcs_l, k,
                                       qmask=(qw_l > 0.0), block_v=block_v,
-                                      block_h=block_h)
-        W = jax.vmap(lambda w, s: w[s])(qw_l, S)
+                                      block_h=block_h, out_dtype=out_dtype)
+        W = jax.vmap(lambda w, s: w[s])(qw_l, S).astype(out_dtype)
         return Z, W
 
     dp = _dp(mesh)
@@ -121,10 +124,29 @@ def act_pour_sharded(mesh, ids, w, Z, W, iters: int, *, block_q: int = 8,
     "model", handoff ladders Z (nq, v, iters+1) / W (nq, v, iters) over
     DP (replicated over "model" — the emd_ladder layout) -> (nq, n)
     scores on the (DP, "model") grid. ``iters >= 1`` (the zero-round dump
-    has no kernel form). Query blocking runs per shard."""
+    has no kernel form). Query blocking runs per shard.
+
+    Reduced-precision ladders (a policy's bf16 storage) cross the
+    shard_map boundary BITCAST to a same-width unsigned integer and come
+    back to their float dtype inside the shard: the in_specs replication
+    all-gather otherwise runs on a float value XLA rewrites to f32 width
+    (see ``annotate.emd_ladder``), doubling the handoff wire bytes the
+    policy exists to halve."""
     assert iters >= 1, iters
+    zdt, wdt = Z.dtype, W.dtype
+
+    def _fence(a):
+        if a.dtype == jax.numpy.float32:
+            return a
+        return jax.lax.bitcast_convert_type(
+            a, jax.numpy.dtype(f"uint{a.dtype.itemsize * 8}"))
 
     def body(ids_l, w_l, Z_l, W_l):
+        Z_l = (Z_l if Z_l.dtype == zdt
+               else jax.lax.bitcast_convert_type(Z_l, zdt))
+        W_l = (W_l if W_l.dtype == wdt
+               else jax.lax.bitcast_convert_type(W_l, wdt))
+
         def blk(Zb, Wb):
             Zg = Zb[:, ids_l]                            # (bq, n/sh, hmax, k)
             Wg = Wb[:, ids_l]
@@ -138,7 +160,7 @@ def act_pour_sharded(mesh, ids, w, Z, W, iters: int, *, block_q: int = 8,
         in_specs=(P("model", None), P("model", None),
                   P(dp, None, None), P(dp, None, None)),
         out_specs=P(dp, "model"),
-    )(ids, w, Z, W)
+    )(ids, w, _fence(Z), _fence(W))
 
 
 def cand_sharded(mesh, fn, arrays, block_q: int = 8):

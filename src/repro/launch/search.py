@@ -70,7 +70,8 @@ def make_scores_step(iters: int = 1, *, method: str = "act",
                      symmetric: bool = False, engine: str = "dist",
                      use_kernels: bool = False, block_q: int = 8,
                      block_v: int = 256, block_h: int = 256,
-                     block_n: int = 256, rev_block: int = 256, mesh=None):
+                     block_n: int = 256, rev_block: int = 256, mesh=None,
+                     precision: str = "f32"):
     """Returns scores_step(corpus_ids, corpus_w, coords, q_ids, q_w)
     -> full (nq, n) score matrix for ``method``.
 
@@ -89,7 +90,8 @@ def make_scores_step(iters: int = 1, *, method: str = "act",
             corpus, q_ids, q_w, method=method, symmetric=symmetric,
             engine=engine, iters=iters, use_kernels=use_kernels,
             block_v=block_v, block_h=block_h, block_n=block_n,
-            rev_block=rev_block, block_q=block_q, mesh=mesh)
+            rev_block=rev_block, block_q=block_q, mesh=mesh,
+            precision=precision)
 
     return scores_step
 
@@ -223,7 +225,7 @@ def make_cascade_search_step(spec, top_l: int = 16,
                              use_kernels: bool = False, block_q: int = 8,
                              block_v: int = 256, block_h: int = 256,
                              block_n: int = 256, rev_block: int = 256,
-                             mesh=None):
+                             mesh=None, precision: str = "f32"):
     """Returns cascade_step(corpus_ids, corpus_w, coords, q_ids, q_w)
     -> (top-l rescorer scores, top-l global row indices), each (nq, top_l).
 
@@ -262,7 +264,7 @@ def make_cascade_search_step(spec, top_l: int = 16,
             topk_blocks=topk_blocks, engine=engine, use_kernels=use_kernels,
             block_v=block_v, block_h=block_h, block_n=block_n,
             rev_block=rev_block, block_q=block_q, mesh=mesh,
-            source=source))
+            precision=precision, source=source))
 
     return cascade_step
 
@@ -331,6 +333,12 @@ class StepCase:
                    kernel cases extend the scaling guard to the shimmed
                    programs, pinning the "candidate gather stays outside
                    the shard_map" contract.
+    precision:     mixed-precision policy preset (``repro.core.precision``)
+                   the case traces under. The bf16 cases put the halved
+                   Phase-1 handoff collectives under the checkers: their
+                   replication all-gathers must move ~2x fewer bytes than
+                   the matching f32 case, and the precision-lint pass
+                   walks them for unintended f32 upcasts.
     """
     name: str
     kind: str
@@ -339,6 +347,7 @@ class StepCase:
     cascade: object = None
     scale_guarded: bool = False
     use_kernels: bool = False
+    precision: str = "f32"
 
 
 def step_cases(*, engines: tuple[str, ...] = ("dist", "scan"),
@@ -408,6 +417,16 @@ def step_cases(*, engines: tuple[str, ...] = ("dist", "scan"),
             for method in sorted(m for m, s in retrieval.METHODS.items()
                                  if s.supports_kernels)
         ]
+        # bf16-policy cases: same guarded programs, half-width Phase-1
+        # handoffs. One jnp-pipeline case and one kernel-shim case keep
+        # both lowering paths' collective bytes and jaxprs under CI.
+        cases += [
+            StepCase("scores:act:dist:bf16", "scores", "act", "dist",
+                     scale_guarded=True, precision="bf16"),
+            StepCase("scores:act:dist:kernels:bf16", "scores", "act",
+                     "dist", scale_guarded=True, use_kernels=True,
+                     precision="bf16"),
+        ]
     return tuple(cases)
 
 
@@ -418,6 +437,7 @@ def build_step(case: StepCase, workload, mesh=None, *, top_l: int = 4,
     callable when it is ``None`` (jaxpr hazard walker — no devices
     needed). ``score_kw`` are the usual batch knobs."""
     score_kw.setdefault("use_kernels", case.use_kernels)
+    score_kw.setdefault("precision", case.precision)
     if case.kind == "scores":
         if mesh is not None:
             return jit_scores_step(workload, mesh, method=case.method,

@@ -137,8 +137,11 @@ def _like_from_manifest(manifest: dict) -> dict[str, Any]:
         except KeyError as e:
             raise CheckpointCorrupt(
                 f"serving snapshot missing leaf {name!r}") from e
+        # store._np_dtype, not np.dtype: extension dtypes ("bfloat16")
+        # raise TypeError under plain np.dtype, and a bf16-policy
+        # snapshot must restore in its stored dtypes.
         like[name] = np.zeros(tuple(meta["shape"]),
-                              dtype=np.dtype(meta["dtype"]))
+                              dtype=store._np_dtype(meta["dtype"]))
     return like
 
 

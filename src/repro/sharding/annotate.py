@@ -161,8 +161,25 @@ def emd_ladder(x):
     pinning the OUTPUT layout here, XLA hoists the resharding above the
     top-k and all-gathers the full (v, nq, h) distance tensor instead —
     36 GB/device at 20News scale (EXPERIMENTS.md section Perf, emd-20news
-    iteration 1)."""
+    iteration 1).
+
+    Reduced-precision handoffs (a precision policy's bf16 storage) cross
+    the resharding boundary BITCAST to a same-width unsigned integer.
+    Two float-convert rewrites otherwise put full-width f32 back on the
+    wire and silently undo the policy's halved collective bytes: XLA
+    commutes the producer's downcast / consumer's accumulator-upcast
+    pair past the all-gather (gathering the pre-downcast f32 value), and
+    the CPU host-mesh oracle widens the bf16 collectives it cannot run
+    natively to f32 around converts. Neither rewrite can cross a
+    ``bitcast_convert_type`` (not a value-preserving float convert), and
+    integer all-gathers run natively 2-byte everywhere. Float32
+    handoffs take the original path (bitwise-identical graphs)."""
     mesh = _mesh()
     if mesh is None:
         return x
-    return constrain(x, _dp_axes(mesh), *([None] * (x.ndim - 1)))
+    if x.dtype == jax.numpy.float32:
+        return constrain(x, _dp_axes(mesh), *([None] * (x.ndim - 1)))
+    u = jax.lax.bitcast_convert_type(
+        x, jax.numpy.dtype(f"uint{x.dtype.itemsize * 8}"))
+    u = constrain(u, _dp_axes(mesh), *([None] * (u.ndim - 1)))
+    return jax.lax.bitcast_convert_type(u, x.dtype)

@@ -298,6 +298,17 @@ def test_build_step_rejects_unknown_kind():
 
 # ------------------------------------------------------------------ bench
 
+def _valid_precision_sweep():
+    return {"entries": [
+        {"policy": "f32", "recall_delta_vs_f32": 0.0,
+         "handoff_bytes_per_row": 28, "queries_per_sec": 10.0},
+        {"policy": "bf16", "recall_delta_vs_f32": 0.002,
+         "handoff_bytes_per_row": 14, "queries_per_sec": 19.0},
+        {"policy": "bf16_agg", "recall_delta_vs_f32": 0.02,
+         "handoff_bytes_per_row": 14, "queries_per_sec": 19.0},
+    ]}
+
+
 def test_bench_check_clean_on_valid_artifacts(tmp_path):
     provenance = {"device_kind": "cpu",
                   "autotune": {"mode": "cached", "tune_cache": None,
@@ -306,9 +317,10 @@ def test_bench_check_clean_on_valid_artifacts(tmp_path):
     batch.write_text(json.dumps({"entries": [
         {"engine": "batched", "queries_per_sec": 10.0},
         {"engine": "distributed", "queries_per_sec": 5.0},
-    ], **provenance}))
+    ], "precision_sweep": _valid_precision_sweep(), **provenance}))
     cascade = tmp_path / "c.json"
     cascade.write_text(json.dumps({
+        "precision_sweep": _valid_precision_sweep(),
         "entries": [
             {"recall_at_l": 1.0, "queries_per_sec": 9.0,
              "use_kernels": False},
@@ -386,6 +398,30 @@ def test_bench_check_rejects_seeded_defects(tmp_path):
     assert "tier_mix totals 4 != served 5" in msgs
     assert "not deterministic" in msgs
     assert "no corpus-size sweep" in msgs       # cascade artifact lacks it
+    assert "no precision_sweep" in msgs         # both artifacts lack it
+
+
+def test_bench_check_precision_sweep_bars(tmp_path):
+    """bf16 handoff bytes must be exactly half of f32's and the bf16
+    recall delta must stay inside the acceptance band."""
+    sweep = _valid_precision_sweep()
+    sweep["entries"][1]["handoff_bytes_per_row"] = 28   # bf16 not halved
+    sweep["entries"][1]["recall_delta_vs_f32"] = 0.05   # over the bar
+    del sweep["entries"][2]["queries_per_sec"]          # missing field
+    batch = tmp_path / "b.json"
+    batch.write_text(json.dumps({"entries": [
+        {"engine": "batched", "queries_per_sec": 10.0},
+        {"engine": "distributed", "queries_per_sec": 5.0},
+    ], "precision_sweep": sweep, "device_kind": "cpu",
+        "autotune": {"mode": "off", "tuned_blocks": {}}}))
+    violations, _ = bench_check.run(batch_path=str(batch),
+                                    cascade_path=str(tmp_path / "nope"),
+                                    serve_path=str(tmp_path / "nope"))
+    msgs = "\n".join(v.message for v in violations
+                     if v.subject == str(batch))
+    assert "are not half of f32's" in msgs
+    assert "bf16 recall delta 0.05" in msgs
+    assert "missing 'queries_per_sec'" in msgs
 
 
 def test_bench_check_sweep_acceptance_bar(tmp_path):
@@ -402,7 +438,8 @@ def test_bench_check_sweep_acceptance_bar(tmp_path):
                                  "queries_per_sec": 4.0},
             "device_kind": "cpu",
             "autotune": {"mode": "off", "tuned_blocks": {}},
-            "smoke": smoke, "sweep": sweep}
+            "smoke": smoke, "sweep": sweep,
+            "precision_sweep": _valid_precision_sweep()}
 
     def check(sweep, smoke=False):
         p = tmp_path / "c.json"

@@ -278,6 +278,47 @@ def test_cand_ict_remainder_dump_stays_max_finite():
                                                                Dq, qw)))
 
 
+# ------------------------------------------ precision-policy conformance
+
+#: Measured max absolute error of each reduced-precision policy against
+#: the float32 engines on the conformance fixture (kernel and reference
+#: paths; 3x headroom over the observed worst case — bf16 storage error
+#: peaked at 2.2e-3 and bf16_agg's bf16 matmul at 1.3e-1, on omr).
+POLICY_ABS_TOL = {"bf16": 8e-3, "bf16_agg": 0.4}
+
+
+@pytest.mark.parametrize("policy", sorted(POLICY_ABS_TOL))
+def test_cand_engines_policy_conformance(corpus, policy):
+    """The ULP conformance contract holds PER POLICY: under a reduced-
+    precision policy the fused kernels still match the reference engine
+    at float32 ulp distance (both paths consume the identical reduced
+    handoffs — the policy moves both, not their difference), while the
+    policy itself drifts from float32 only within its measured band."""
+    nq, b = 4, 12
+    qi, qw = corpus.ids[:nq], corpus.w[:nq]
+    rng = np.random.default_rng(zlib.crc32(policy.encode()))
+    cand = _random_cand(rng, corpus.n, nq, b)
+    tol = POLICY_ABS_TOL[policy]
+    for method in CAND_METHODS:
+        f32_s = retrieval.cand_scores(corpus, qi, qw, cand, method=method,
+                                      iters=2)
+        ref_s = retrieval.cand_scores(corpus, qi, qw, cand, method=method,
+                                      iters=2, precision=policy)
+        ker_s = retrieval.cand_scores(corpus, qi, qw, cand, method=method,
+                                      iters=2, precision=policy,
+                                      use_kernels=True, block_n=8,
+                                      block_v=64)
+        assert_ulp_equal(ker_s, ref_s, err_msg=f"{policy}:{method}")
+        np.testing.assert_allclose(np.asarray(ref_s), np.asarray(f32_s),
+                                   atol=tol, rtol=0,
+                                   err_msg=f"{policy}:{method} vs f32")
+        # the drift must be real: a bitwise-f32 "bf16" run means the
+        # policy kwarg fell off the stack (see analysis.precision_lint)
+        assert float(np.abs(np.asarray(ref_s, np.float64)
+                            - np.asarray(f32_s, np.float64)).max()) > 0.0, \
+            f"{policy}:{method} scored bitwise f32 — policy ignored"
+
+
 def test_ict_engine_all_remainder_query_finite(corpus):
     """Same contract through the full engine: an unnormalized query whose
     capacities absorb only a quarter of each row's mass stays finite and
